@@ -1,0 +1,63 @@
+"""Shared benchmark substrate: synthetic word2vec-like embeddings + queries.
+
+The container is offline (no GoogleNews vectors / PTB), so we synthesize
+class-vector sets with the two statistics that drive the paper's phenomena:
+  * cluster structure (words live near topic centroids),
+  * Zipf-rank-correlated norms (frequent words -> flatter distributions,
+    the Fig. 1 effect).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_embeddings(key, n: int, d: int, n_centers: int = 64,
+                    spread: float = 0.6, score_scale: float = 0.35):
+    k1, k2, k3 = jax.random.split(key, 3)
+    centers = jax.random.normal(k1, (n_centers, d))
+    asg = jax.random.randint(k2, (n,), 0, n_centers)
+    v = centers[asg] + spread * jax.random.normal(k3, (n, d))
+    v = v / jnp.linalg.norm(v, axis=1, keepdims=True)
+    # Frequent (low-rank) words have SMALL norms (they co-occur with
+    # everything, like "The") -> their queries induce flat distributions;
+    # rare words have large, specialized norms -> concentrated distributions.
+    # This is the word2vec norm/distinctiveness correlation behind Fig. 1.
+    rank = jnp.arange(n) / n
+    norm = 0.35 + 1.8 * jnp.sqrt(rank)
+    return v * norm[:, None] * jnp.sqrt(d) * score_scale
+
+
+def make_queries(key, v, n_queries: int, noise_rel: float = 0.0):
+    """Queries = class vectors (+ optional relative-norm gaussian noise),
+    mirroring SS5.1's construction."""
+    kq, kn = jax.random.split(key)
+    idx = jax.random.choice(kq, v.shape[0], (n_queries,), replace=False)
+    q = v[idx]
+    if noise_rel > 0:
+        noise = jax.random.normal(kn, q.shape)
+        noise = noise / jnp.linalg.norm(noise, axis=1, keepdims=True)
+        q = q + noise * noise_rel * jnp.linalg.norm(q, axis=1, keepdims=True)
+    return q, idx
+
+
+def pct_abs_rel_error(log_z_hat, log_z_true):
+    """The paper's mu = 100 |Z_hat - Z| / Z, computed stably in log space."""
+    return 100.0 * np.abs(1.0 - np.exp(np.asarray(log_z_hat, np.float64)
+                                       - np.asarray(log_z_true, np.float64)))
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.perf_counter() - self.t0
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

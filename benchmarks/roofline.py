@@ -1,0 +1,96 @@
+"""SS Roofline: derive the three roofline terms per (arch x shape x mesh)
+from the dry-run artifacts (launch/dryrun.py must have run first).
+
+Hardware model (TPU v5e target):
+  peak    = 197 TFLOP/s bf16 per chip
+  hbm_bw  = 819 GB/s per chip
+  link_bw = 50 GB/s per chip (ICI)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+
+def _model_flops(rec):
+    n = rec["active_param_count"]
+    toks = rec["global_tokens"]
+    kind = rec["step"]
+    if "train" in kind:
+        return 6.0 * n * toks
+    if "prefill" in kind:
+        return 2.0 * n * toks
+    return 2.0 * n * toks          # decode: tokens == batch
+
+
+ADVICE = {
+    "compute": "reduce recompute (remat policy) / push useful-flops ratio up",
+    "memory": "cut KV/activation traffic: smaller dtype, fuse the masked "
+              "cache update, avoid layout copies",
+    "collective": "reshard to remove per-layer activation all-gathers / "
+                  "overlap collectives with compute",
+}
+
+
+def analyze_record(rec):
+    chips = rec["n_chips"]
+    fl = rec["flops_per_device"]
+    by = rec["bytes_per_device"]
+    coll = sum(rec["collective_bytes"].values())
+    t_c = fl / PEAK
+    t_m = by / HBM
+    t_l = coll / LINK
+    terms = {"compute": t_c, "memory": t_m, "collective": t_l}
+    dom = max(terms, key=terms.get)
+    mf = _model_flops(rec)
+    useful = mf / max(fl * chips, 1.0)
+    bound = max(terms.values())
+    # roofline fraction: useful-model-flops time over the bound term
+    ideal_t = mf / chips / PEAK
+    frac = ideal_t / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "mode": rec.get("output_mode", "exact"),
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_l,
+        "dominant": dom, "model_flops": mf,
+        "useful_flops_ratio": useful, "roofline_fraction": frac,
+        "advice": ADVICE[dom],
+    }
+
+
+def run(art_dir="artifacts/dryrun", out_md="artifacts/roofline.md",
+        quick=False):
+    rows = []
+    for path in sorted(glob.glob(f"{art_dir}/*/*.json")):
+        rec = json.load(open(path))
+        if "skipped" in rec:
+            continue
+        rows.append(analyze_record(rec))
+    if not rows:
+        print("no dry-run artifacts found — run launch/dryrun.py first")
+        return [], 0.0
+    hdr = (f"| {'arch':22s} | {'shape':11s} | mesh   | mode  | compute s | "
+           f"memory s | coll s  | dominant   | useful | roofline |")
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']:22s} | {r['shape']:11s} | {r['mesh']:6s} | "
+            f"{r['mode']:5s} | {r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.2e} | {r['dominant']:10s} | "
+            f"{r['useful_flops_ratio']:6.2f} | {r['roofline_fraction']:8.3f} |")
+    os.makedirs(os.path.dirname(out_md), exist_ok=True)
+    with open(out_md, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print("\n== Roofline (per arch x shape x mesh; seconds per step) ==")
+    print("\n".join(lines))
+    return rows, 0.0
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark driver — one section per paper table/figure + kernel benches +
+the roofline reader. Prints ``name,us_per_call,derived`` CSV lines at the end.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slower)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,t1,t2,t3,t4,kernels,roofline")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (fig1_cdf, kernels_bench, roofline, table1_grid,
+                   table2_noise, table3_retrieval, table4_lbl)
+
+    csv = ["name,us_per_call,derived"]
+
+    def sel(key):
+        return only is None or key in only
+
+    if sel("fig1"):
+        _, us = fig1_cdf.run(quick=quick)
+        csv.append(f"fig1_cdf,{us:.1f},concentration-vs-frequency")
+    if sel("t1"):
+        _, us = table1_grid.run(quick=quick)
+        csv.append(f"table1_grid,{us:.1f},mu-vs-k-l")
+    if sel("t2"):
+        _, us = table2_noise.run(quick=quick)
+        csv.append(f"table2_noise,{us:.1f},noise-robustness")
+    if sel("t3"):
+        _, us = table3_retrieval.run(quick=quick)
+        csv.append(f"table3_retrieval,{us:.1f},rank1-criticality")
+    if sel("t4"):
+        _, us = table4_lbl.run(quick=quick)
+        csv.append(f"table4_lbl,{us:.1f},e2e-lbl-nce")
+    if sel("kernels"):
+        rows, _ = kernels_bench.run(quick=quick)
+        for name, us, derived in rows:
+            csv.append(f"{name},{us:.1f},{derived}")
+    if sel("roofline"):
+        rows, _ = roofline.run(quick=quick)
+        csv.append(f"roofline_cells,{len(rows)},see artifacts/roofline.md")
+
+    print("\n== CSV ==")
+    print("\n".join(csv))
+
+
+if __name__ == "__main__":
+    main()

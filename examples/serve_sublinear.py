@@ -1,0 +1,65 @@
+"""End-to-end serving driver (the paper's use case): batched decode where
+per-token probabilities come from the configured partition estimator.
+
+  PYTHONPATH=src python examples/serve_sublinear.py
+
+Trains nothing — initializes a reduced qwen-family model, serves a batch of
+requests with exact Z, then with sublinear MIMPS Z, and compares the
+normalized probabilities and output-layer cost.
+"""
+import sys
+sys.path.insert(0, "src")
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced_config
+from repro.models import Model
+from repro.serve import Engine, generate
+
+BATCH, PROMPT, GEN = 8, 12, 12
+
+base = reduced_config("qwen1.5-4b")
+base = dataclasses.replace(base, vocab=8192)   # big enough for IVF to engage
+model = Model(base)
+key = jax.random.PRNGKey(0)
+params = model.init(key)
+prompt = jax.random.randint(key, (BATCH, PROMPT), 0, base.vocab)
+
+outs = {}
+for method in ("exact", "mimps", "selfnorm"):
+    cfg = dataclasses.replace(
+        base, partition=dataclasses.replace(
+            base.partition, method=method, block_rows=128, n_probe=8, l=512))
+    eng = Engine(Model(cfg), params, max_len=PROMPT + GEN + 1, key=key)
+    h = jax.random.normal(key, (BATCH, cfg.d_model)).astype(cfg.dtype) * 0.3
+    t0 = time.perf_counter()
+    dist = eng.next_token_distribution(h, key)
+    jax.block_until_ready(dist["log_z"])
+    dt = (time.perf_counter() - t0) * 1e3
+    outs[method] = dist
+    n_scored = (cfg.vocab if method != "mimps" else
+                (eng.index.n_blocks + 8 * 128 + 512))
+    print(f"{method:9s} log Z = {[round(float(z),3) for z in dist['log_z'][:4]]} "
+          f"rows scored/query: {n_scored:6d}  ({dt:.0f} ms incl. index)")
+
+err = jnp.abs(1 - jnp.exp(outs["mimps"]["log_z"] - outs["exact"]["log_z"]))
+agree = jnp.mean((outs["mimps"]["token"] == outs["exact"]["token"])
+                 .astype(jnp.float32))
+print(f"\nMIMPS vs exact: mean |dZ|/Z = {float(err.mean())*100:.2f}%  "
+      f"argmax agreement = {float(agree)*100:.0f}%")
+print("(untrained weights -> near-flat logits, so argmax among ties is "
+      "noise; Z accuracy is the estimator property. Trained-model behavior: "
+      "examples/train_selfnorm_vs_mimps.py and tests/test_infra.py)")
+
+# full generation loop under the sublinear estimator
+cfg = dataclasses.replace(
+    base, partition=dataclasses.replace(base.partition, method="mimps",
+                                        block_rows=128, n_probe=8, l=512))
+eng = Engine(Model(cfg), params, max_len=PROMPT + GEN + 1, key=key)
+toks = generate(eng, prompt, GEN, key)
+print(f"\ngenerated {toks.shape} tokens under sublinear Z; stream 0: "
+      f"{[int(t) for t in toks[0][:10]]}")

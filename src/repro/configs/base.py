@@ -1,0 +1,188 @@
+"""Config dataclasses for the framework.
+
+Every assigned architecture is expressed as a ``ModelConfig``; the paper's
+technique is configured via ``PartitionConfig`` and is a first-class field of
+the model config (it parameterizes the output layer / serving path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionConfig:
+    """Configuration of the sublinear partition estimator (the paper's core).
+
+    method:
+      exact    - brute force Z (baseline; also the fused-kernel path)
+      mimps    - Eq.5: head via MIPS + uniform tail correction (paper's winner)
+      nmimps   - Eq.4: head only (shown inadequate in the paper)
+      uniform  - k=0 special case (importance sampling baseline)
+      mince    - Eq.6/7: NCE-for-Z with Halley's method
+      fmbe     - Eq.8/10: Kar-Karnick random feature maps
+      selfnorm - assume Z == 1 (Devlin/NCE-clamped heuristic, paper SS5.2)
+    """
+    method: str = "exact"
+    k: int = 100                  # head size |S_k(q)|
+    l: int = 100                  # tail sample size |U_l|
+    # IVF (TPU-native MIPS) parameters
+    n_clusters: int = 256
+    n_probe: int = 8
+    block_rows: int = 512         # vocab rows per Pallas block (cluster pad)
+    # FMBE parameters
+    fmbe_features: int = 4096     # P
+    fmbe_max_degree: int = 8      # cap on M ~ Geometric(1/p)
+    fmbe_p: float = 2.0
+    # MINCE solver
+    mince_iters: int = 25
+    mince_solver: str = "halley"  # or "newton"
+
+    def validate(self) -> None:
+        assert self.method in (
+            "exact", "mimps", "nmimps", "uniform", "mince", "fmbe", "selfnorm")
+        assert self.k >= 0 and self.l >= 0
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 64
+    n_shared: int = 2
+    top_k: int = 6
+    expert_d_ff: int = 1408
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    aux_loss: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) / RWKV6 parameters."""
+    state_dim: int = 64
+    conv_dim: int = 4
+    n_ssm_heads: int = 0          # 0 -> derived
+    expand: int = 2
+    wkv_head_size: int = 64       # RWKV6
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"         # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int = 12
+    d_model: int = 768
+    n_heads: int = 12
+    n_kv_heads: int = 12
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    d_ff: int = 3072
+    vocab: int = 32000
+    max_seq_len: int = 131072
+    act: str = "silu"             # silu | gelu | sqrelu
+    qkv_bias: bool = False
+    rope_theta: float = 1_000_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # sliding-window / local:global attention (gemma3)
+    sliding_window: int = 0       # 0 -> full attention
+    local_global_ratio: int = 0   # e.g. 5 -> every 6th layer is global
+    # VLM cross attention
+    cross_attn_every: int = 0     # e.g. 5 -> layers 4,9,... are cross-attn
+    n_image_tokens: int = 1601
+    # audio (musicgen)
+    n_codebooks: int = 0          # >0 -> audio token streams w/ delay pattern
+    # hybrid (zamba2): shared attention block every `shared_attn_every` layers
+    shared_attn_every: int = 0
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    partition: PartitionConfig = dataclasses.field(default_factory=PartitionConfig)
+    # remat policy for the scanned blocks: 'none' | 'full' | 'dots'
+    remat: str = "full"
+    dtype: str = "bfloat16"
+    # which attention impl decode uses; long-context capability flag
+    subquadratic: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND roofline checks)."""
+        d, L, v = self.d_model, self.n_layers, self.vocab
+        hd = self.resolved_head_dim
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        if self.act == "sqrelu":
+            mlp = 2 * d * self.d_ff
+        else:
+            mlp = 3 * d * self.d_ff
+        if self.family in ("moe",) and self.moe is not None:
+            m = self.moe
+            e_ff = m.expert_d_ff
+            mlp = (m.n_experts + m.n_shared) * 3 * d * e_ff + d * m.n_experts
+        if self.family == "ssm":   # rwkv6: time-mix + channel-mix
+            s = self.ssm or SSMConfig()
+            attn = 5 * d * d + 2 * d * (32 * 5) + d * d  # r,k,v,g,o + lora decay
+            mlp = 2 * d * self.d_ff + d * d
+        per_layer = attn + mlp + 2 * d
+        total = emb + L * per_layer
+        if self.shared_attn_every:
+            total += attn + mlp  # one shared block
+        if self.cross_attn_every:
+            n_cross = L // self.cross_attn_every
+            total += n_cross * (d * hd * (self.n_heads + 2 * self.n_kv_heads)
+                                + self.n_heads * hd * d)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE-aware) for 6*N_active*D FLOPs."""
+        if self.family != "moe" or self.moe is None:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        m = self.moe
+        dense_like = self.param_count()
+        all_experts = m.n_experts * 3 * d * m.expert_d_ff * L
+        active_experts = m.top_k * 3 * d * m.expert_d_ff * L
+        return int(dense_like - all_experts + active_experts)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """An assigned (input-shape) cell: seq_len x global_batch + step kind."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}; have {[s.name for s in SHAPES]}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    microbatches: int = 1         # gradient accumulation
+    loss: str = "fused_ce"        # fused_ce | ce | nce | selfnorm | sampled
+    nce_noise: int = 64
+    selfnorm_alpha: float = 0.1
+    seed: int = 0
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+    grad_compression: str = "none"  # none | int8  (pod axis)

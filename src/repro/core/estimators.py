@@ -1,0 +1,234 @@
+"""The paper's partition-function estimators (SS4), pure JAX.
+
+All estimators operate on a single query ``q: (d,)`` and are vmap-friendly;
+log-domain throughout for stability (errors are reported as
+``|1 - exp(logZ_hat - logZ)|`` which is exact for relative error).
+
+Oracle variants score all N rows (O(Nd)) — they exist to reproduce the paper's
+SS5.1 controlled-accuracy experiments, where retrieval is assumed perfect and
+errors are injected deterministically. Sublinear variants go through the
+block-IVF index (mips.py / kernels.ivf_score).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import mince as _mince
+from . import mips as _mips
+from .feature_maps import FMBEState, fmbe_estimate_z
+
+NEG_INF = -1e30
+
+
+def _lse(x: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    if mask is not None:
+        x = jnp.where(mask, x, NEG_INF)
+    return jax.nn.logsumexp(x, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Exact (brute force) baseline
+# ---------------------------------------------------------------------------
+
+def exact_log_z(v: jax.Array, q: jax.Array) -> jax.Array:
+    """log Z = logsumexp_i (v_i . q). O(N d)."""
+    return _lse(v @ q)
+
+
+# ---------------------------------------------------------------------------
+# Head/tail core (Eq. 5) in log domain
+# ---------------------------------------------------------------------------
+
+def head_tail_log_z(head_scores: jax.Array,
+                    tail_scores: jax.Array,
+                    n_tail_total: jax.Array,
+                    n_tail_samples: jax.Array,
+                    head_mask: Optional[jax.Array] = None,
+                    tail_mask: Optional[jax.Array] = None) -> jax.Array:
+    """log( sum_head exp + (n_tail_total / n_tail_samples) * sum_tail exp )."""
+    log_head = _lse(head_scores, head_mask) if head_scores.shape[-1] else NEG_INF
+    log_scale = jnp.log(jnp.maximum(n_tail_total, 1e-9)) - \
+        jnp.log(jnp.maximum(n_tail_samples, 1e-9))
+    log_tail = _lse(tail_scores, tail_mask) if tail_scores.shape[-1] else NEG_INF
+    log_tail = jnp.where(n_tail_total > 0, log_scale + log_tail, NEG_INF)
+    return jnp.logaddexp(log_head, log_tail)
+
+
+# ---------------------------------------------------------------------------
+# Oracle retrieval (paper SS5.1): full sort, deterministic error injection
+# ---------------------------------------------------------------------------
+
+class OracleRetrieval(NamedTuple):
+    scores_sorted: jax.Array   # (N,) descending
+    order: jax.Array           # (N,) ids
+
+
+def oracle_retrieve(v: jax.Array, q: jax.Array) -> OracleRetrieval:
+    s = v @ q
+    order = jnp.argsort(-s)
+    return OracleRetrieval(scores_sorted=s[order], order=order)
+
+
+def _complement_sample(key: jax.Array, ret: OracleRetrieval, k: int, l: int):
+    """l uniform samples from ranks [k, N) — exact complement sampling."""
+    n = ret.scores_sorted.shape[0]
+    pos = k + jax.random.randint(key, (l,), 0, n - k)
+    return ret.scores_sorted[pos]
+
+
+@partial(jax.jit, static_argnames=("k", "l"))
+def mimps_log_z(v: jax.Array, q: jax.Array, k: int, l: int,
+                key: jax.Array,
+                drop_ranks: Optional[Tuple[int, ...]] = None) -> jax.Array:
+    """MIMPS (Eq. 5) with oracle retrieval.
+
+    drop_ranks: simulate retrieval errors (Table 3) — the listed head ranks
+    (0-based) are removed from S_k, as if the ANN failed to return them.
+    """
+    ret = oracle_retrieve(v, q)
+    if k > 0:
+        head = ret.scores_sorted[:k]
+        head_mask = jnp.ones((k,), bool)
+        if drop_ranks:
+            for r in drop_ranks:
+                head_mask = head_mask.at[r].set(False)
+    else:
+        head = jnp.zeros((0,))
+        head_mask = None
+    if l > 0:
+        tail = _complement_sample(key, ret, k, l)
+    else:
+        tail = jnp.zeros((0,))
+    n = v.shape[0]
+    return head_tail_log_z(head, tail, jnp.float32(n - k), jnp.float32(l),
+                           head_mask=head_mask)
+
+
+@partial(jax.jit, static_argnames=("l",))
+def uniform_log_z(v: jax.Array, q: jax.Array, l: int, key: jax.Array):
+    """Uniform importance sampling (k=0 special case of MIMPS)."""
+    n = v.shape[0]
+    idx = jax.random.randint(key, (l,), 0, n)
+    tail = v[idx] @ q
+    return head_tail_log_z(jnp.zeros((0,)), tail, jnp.float32(n), jnp.float32(l))
+
+
+@partial(jax.jit, static_argnames=("k",))
+def nmimps_log_z(v: jax.Array, q: jax.Array, k: int) -> jax.Array:
+    """Naive MIMPS (Eq. 4): head only — shown inadequate in the paper."""
+    vals, _ = _mips.exact_top_k(v, q, k)
+    return _lse(vals)
+
+
+@partial(jax.jit, static_argnames=("k", "l", "iters", "solver"))
+def mince_log_z(v: jax.Array, q: jax.Array, k: int, l: int, key: jax.Array,
+                iters: int = 25, solver: str = "halley") -> jax.Array:
+    """MINCE (Eq. 6/7): solve for Z via NCE with S_k as data, uniform noise.
+
+    alpha_i = log a_i = s_i + log(k (N-k) / l); beta_j likewise over noise.
+    """
+    ret = oracle_retrieve(v, q)
+    head = ret.scores_sorted[:k]
+    noise = _complement_sample(key, ret, k, l)
+    n = v.shape[0]
+    log_ratio = jnp.log(jnp.float32(k)) + jnp.log(jnp.float32(n - k)) - \
+        jnp.log(jnp.float32(l))
+    alpha = head + log_ratio
+    beta = noise + log_ratio
+    theta0 = _lse(head)   # head mass is a sane starting point
+    return _mince.solve_log_z(alpha, beta, theta0, iters=iters, solver=solver)
+
+
+def fmbe_log_z(state: FMBEState, q: jax.Array) -> jax.Array:
+    """FMBE returns a *signed* Z estimate; log of clipped value for API parity."""
+    z = fmbe_estimate_z(state, q)
+    return jnp.log(jnp.maximum(z, 1e-30))
+
+
+def fmbe_z(state: FMBEState, q: jax.Array) -> jax.Array:
+    return fmbe_estimate_z(state, q)
+
+
+# ---------------------------------------------------------------------------
+# Sublinear MIMPS via block-IVF (the TPU-native deployment path)
+# ---------------------------------------------------------------------------
+
+class IVFEstimate(NamedTuple):
+    log_z: jax.Array
+    k_eff: jax.Array           # real rows covered by probed blocks
+    top_score: jax.Array       # best inner product found (for p(i_hat))
+    top_id: jax.Array          # original row id of the argmax
+
+
+@partial(jax.jit, static_argnames=("n_probe", "l"))
+def mimps_ivf(index: _mips.IVFIndex, q: jax.Array, n_probe: int, l: int,
+              key: jax.Array) -> IVFEstimate:
+    """Sublinear MIMPS: head = rows of top-n_probe IVF blocks (scored exactly),
+    tail = uniform rejection sample over unprobed rows, scaled by N/l.
+
+    Cost: O(n_blocks d + n_probe block_rows d + l d)  <<  O(N d).
+    """
+    blocks = _mips.probe(index, q, n_probe)
+    head_scores, head_valid = _mips.gather_scores(index, q, blocks)
+    k_eff = head_valid.sum()
+    n = index.n
+    # tail: sample original rows uniformly; reject those in probed blocks.
+    idx = jax.random.randint(key, (l,), 0, n)
+    slots = index.slot_of_row[idx]
+    row_block = slots // index.block_rows
+    in_head = jnp.any(row_block[:, None] == blocks[None, :], axis=1)
+    flat = index.v_blocks.reshape(-1, index.v_blocks.shape[-1])
+    tail_scores = flat[slots] @ q
+    # E[(N/l) sum_{valid} exp] = (N - k_eff) * mean_tail  (rejection estimator)
+    log_head = _lse(head_scores, head_valid)
+    log_tail = _lse(tail_scores, ~in_head)
+    log_z = jnp.logaddexp(
+        log_head,
+        jnp.log(jnp.float32(n)) - jnp.log(jnp.float32(l)) + log_tail)
+    masked = jnp.where(head_valid, head_scores, NEG_INF)
+    best = jnp.argmax(masked)
+    top_id = index.row_id[blocks[best // index.block_rows],
+                          best % index.block_rows]
+    return IVFEstimate(log_z=log_z, k_eff=k_eff,
+                       top_score=masked[best], top_id=top_id)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher used by the serving/output layer
+# ---------------------------------------------------------------------------
+
+def estimate_log_z(method: str, v: jax.Array, q: jax.Array, key: jax.Array,
+                   *, k: int = 100, l: int = 100,
+                   index: Optional[_mips.IVFIndex] = None,
+                   n_probe: int = 8,
+                   fmbe_state: Optional[FMBEState] = None,
+                   mince_iters: int = 25,
+                   mince_solver: str = "halley") -> jax.Array:
+    if method == "exact":
+        return exact_log_z(v, q)
+    if method == "mimps":
+        if index is not None:
+            return mimps_ivf(index, q, n_probe, l, key).log_z
+        return mimps_log_z(v, q, k, l, key)
+    if method == "nmimps":
+        return nmimps_log_z(v, q, k)
+    if method == "uniform":
+        return uniform_log_z(v, q, l, key)
+    if method == "mince":
+        return mince_log_z(v, q, k, l, key, iters=mince_iters,
+                           solver=mince_solver)
+    if method == "fmbe":
+        assert fmbe_state is not None, "fmbe requires a prebuilt FMBEState"
+        return fmbe_log_z(fmbe_state, q)
+    if method == "selfnorm":
+        return jnp.zeros(())   # assume Z == 1
+    raise ValueError(f"unknown partition method {method!r}")
+
+
+def relative_error(log_z_hat: jax.Array, log_z_true: jax.Array) -> jax.Array:
+    """|Z_hat - Z| / Z computed stably in log domain (paper's mu, /100)."""
+    return jnp.abs(1.0 - jnp.exp(log_z_hat - log_z_true))

@@ -1,0 +1,41 @@
+"""Jittable Lloyd's k-means — substrate for the TPU-native IVF MIPS index.
+
+Euclidean k-means over the (unnormalized) class-vector matrix, exactly the
+coarse quantizer geometry ScaNN-style retrieval uses. Empty clusters retain
+their previous centroid.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _assign(x: jax.Array, c: jax.Array) -> jax.Array:
+    """Nearest-centroid assignment by squared Euclidean distance."""
+    # ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2 ; ||x||^2 constant per row.
+    d2 = -2.0 * (x @ c.T) + jnp.sum(c * c, axis=-1)[None, :]
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "iters"))
+def kmeans(key: jax.Array, x: jax.Array, n_clusters: int,
+           iters: int = 15) -> Tuple[jax.Array, jax.Array]:
+    """Returns (centroids (C, d), assignments (N,))."""
+    n = x.shape[0]
+    init_idx = jax.random.choice(key, n, (n_clusters,), replace=False)
+    c0 = x[init_idx].astype(jnp.float32)
+
+    def step(c, _):
+        assign = _assign(x, c)
+        sums = jax.ops.segment_sum(x.astype(jnp.float32), assign,
+                                   num_segments=n_clusters)
+        counts = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), assign,
+                                     num_segments=n_clusters)
+        c_new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], c)
+        return c_new, None
+
+    c, _ = jax.lax.scan(step, c0, None, length=iters)
+    return c, _assign(x, c)

@@ -1,0 +1,97 @@
+"""MINCE: estimating Z as the parameter of an NCE objective (paper SS4.2).
+
+Paper Eq. 7 (negated objective to *minimize*):
+
+    -J(Z) = sum_i log(Z / a_i + 1) + sum_j log(b_j / Z + 1)
+
+with a_i = exp(s_i . q) * k (N - k) / l over head samples s_i in S_k(q) and
+b_j defined analogously over the l uniform noise samples.
+
+We optimize in theta = log Z (the objective is strictly convex in theta):
+
+    f(theta)  = sum_i softplus(theta - alpha_i) + sum_j softplus(beta_j - theta)
+    f'(theta) = sum_i sigma(theta - alpha_i) - sum_j sigma(beta_j - theta)
+
+f', f'', f''' are all elementwise sigmoids/products — the paper's observation
+that "even the third derivatives can be found efficiently", enabling Halley's
+method (cubic convergence) over Newton's (quadratic).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def nce_objective(theta: jax.Array, alpha: jax.Array, beta: jax.Array,
+                  alpha_mask=None, beta_mask=None) -> jax.Array:
+    """-J(logZ = theta); alpha = log a_i, beta = log b_j."""
+    ta = jax.nn.softplus(theta - alpha)
+    tb = jax.nn.softplus(beta - theta)
+    if alpha_mask is not None:
+        ta = ta * alpha_mask
+    if beta_mask is not None:
+        tb = tb * beta_mask
+    return jnp.sum(ta) + jnp.sum(tb)
+
+
+def _derivatives(theta, alpha, beta, alpha_mask, beta_mask):
+    sa = jax.nn.sigmoid(theta - alpha)
+    sb = jax.nn.sigmoid(beta - theta)
+    if alpha_mask is not None:
+        sa = sa * alpha_mask
+    if beta_mask is not None:
+        sb = sb * beta_mask
+    da = sa * (1.0 - sa)
+    db = sb * (1.0 - sb)
+    f1 = jnp.sum(sa) - jnp.sum(sb)
+    f2 = jnp.sum(da) + jnp.sum(db)
+    f3 = jnp.sum(da * (1.0 - 2.0 * sa)) - jnp.sum(db * (1.0 - 2.0 * sb))
+    return f1, f2, f3
+
+
+@partial(jax.jit, static_argnames=("iters", "solver", "max_step"))
+def solve_log_z(alpha: jax.Array, beta: jax.Array, theta0: jax.Array,
+                iters: int = 25, solver: str = "halley",
+                alpha_mask=None, beta_mask=None,
+                max_step: float = 10.0) -> jax.Array:
+    """Minimize -J over theta = log Z. Returns theta*.
+
+    solver: 'halley' (uses f''' — the paper's speedup) or 'newton'.
+    Steps are trust-clamped to +-max_step for robustness far from the root.
+    """
+    eps = 1e-12
+
+    def body(theta, _):
+        f1, f2, f3 = _derivatives(theta, alpha, beta, alpha_mask, beta_mask)
+        newton = f1 / (f2 + eps)
+        if solver == "halley":
+            denom = 2.0 * f2 * f2 - f1 * f3
+            halley = 2.0 * f1 * f2 / jnp.where(jnp.abs(denom) < eps, eps, denom)
+            # fall back to newton when halley denominator degenerates
+            step = jnp.where(jnp.abs(denom) < eps, newton, halley)
+        else:
+            step = newton
+        step = jnp.clip(step, -max_step, max_step)
+        return theta - step, jnp.abs(step)
+
+    theta, steps = jax.lax.scan(body, theta0, None, length=iters)
+    return theta
+
+
+def solver_convergence_trace(alpha, beta, theta0, iters=25, solver="halley"):
+    """Per-iteration |f'(theta)| trace — used to benchmark Halley vs Newton."""
+    def body(theta, _):
+        f1, f2, f3 = _derivatives(theta, alpha, beta, None, None)
+        newton = f1 / (f2 + 1e-12)
+        if solver == "halley":
+            denom = 2.0 * f2 * f2 - f1 * f3
+            step = jnp.where(jnp.abs(denom) < 1e-12, newton,
+                             2.0 * f1 * f2 / denom)
+        else:
+            step = newton
+        step = jnp.clip(step, -10.0, 10.0)
+        return theta - step, jnp.abs(f1)
+    _, trace = jax.lax.scan(body, theta0, None, length=iters)
+    return trace

@@ -1,0 +1,80 @@
+"""Output-layer integration: the paper's technique as a first-class feature.
+
+``PartitionLayer`` owns the estimator choice plus any prebuilt retrieval state
+(IVF index, FMBE feature map) derived from the output embedding matrix. The
+serving engine calls ``log_z`` / ``top_candidates``; the training losses in
+``repro.train.losses`` use the same configs for NCE/self-norm/sampled-softmax.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import PartitionConfig
+from . import estimators as est
+from . import mips
+from .feature_maps import FMBEState, build_fmbe, make_feature_map
+
+
+@dataclasses.dataclass
+class PartitionLayer:
+    cfg: PartitionConfig
+    index: Optional[mips.IVFIndex] = None
+    fmbe_state: Optional[FMBEState] = None
+
+    @staticmethod
+    def build(cfg: PartitionConfig, w_out: jax.Array,
+              key: jax.Array) -> "PartitionLayer":
+        """Build retrieval state from the output embedding (index-build time).
+
+        w_out: (vocab, d_model) — rows are the class vectors v_i.
+        """
+        cfg.validate()
+        index = None
+        fmbe_state = None
+        if cfg.method == "mimps" and w_out.shape[0] >= 4 * cfg.block_rows:
+            index = mips.build_ivf(key, w_out, block_rows=cfg.block_rows,
+                                   n_clusters=cfg.n_clusters)
+        if cfg.method == "fmbe":
+            fm = make_feature_map(key, w_out.shape[-1], cfg.fmbe_features,
+                                  max_degree=cfg.fmbe_max_degree, p=cfg.fmbe_p)
+            fmbe_state = build_fmbe(fm, w_out)
+        return PartitionLayer(cfg=cfg, index=index, fmbe_state=fmbe_state)
+
+    def log_z(self, w_out: jax.Array, h: jax.Array,
+              key: jax.Array) -> jax.Array:
+        """Batched log Z estimate. h: (B, d) -> (B,)."""
+        cfg = self.cfg
+        keys = jax.random.split(key, h.shape[0])
+        fn = lambda q, k: est.estimate_log_z(
+            cfg.method, w_out, q, k, k=cfg.k, l=cfg.l, index=self.index,
+            n_probe=cfg.n_probe, fmbe_state=self.fmbe_state,
+            mince_iters=cfg.mince_iters, mince_solver=cfg.mince_solver)
+        return jax.vmap(fn)(h, keys)
+
+    def top_candidates(self, w_out: jax.Array, h: jax.Array, k: int,
+                       key: jax.Array):
+        """(scores, ids) of the retrieved head, batched."""
+        if self.index is not None:
+            def one(q):
+                blocks = mips.probe(self.index, q, self.cfg.n_probe)
+                s, valid = mips.gather_scores(self.index, q, blocks)
+                s = jnp.where(valid, s, est.NEG_INF)
+                vals, pos = jax.lax.top_k(s, k)
+                rid = self.index.row_id[
+                    blocks[pos // self.index.block_rows],
+                    pos % self.index.block_rows]
+                return vals, rid
+            return jax.vmap(one)(h)
+        scores = h @ w_out.T
+        return jax.lax.top_k(scores, k)
+
+    def normalized_top_prob(self, w_out: jax.Array, h: jax.Array,
+                            key: jax.Array):
+        """The paper's Eq. 2/3: (argmax id, p(i_hat)) with estimated Z."""
+        vals, ids = self.top_candidates(w_out, h, 1, key)
+        log_z = self.log_z(w_out, h, key)
+        return ids[:, 0], jnp.exp(vals[:, 0] - log_z)

@@ -1,0 +1,1 @@
+from .synthetic import SyntheticCorpus, DataIterator, DataState, zipf_probs

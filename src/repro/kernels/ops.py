@@ -1,0 +1,66 @@
+"""Jit'd public wrappers for the Pallas kernels, including the custom-VJP
+fused CE used by the training loop."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fused_ce as _fce
+from . import ivf_score as _ivf
+from . import topk_z as _tkz
+from . import ref as _ref
+
+
+# ---------------------------------------------------------------------------
+# fused cross-entropy with custom VJP
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fused_cross_entropy(h: jax.Array, w: jax.Array,
+                        labels: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(nll (T,), lse (T,)) = streaming softmax CE. Differentiable in h, w
+    (both outputs contribute cotangents — lse is used by the self-norm loss)."""
+    return _fce.fused_ce_fwd(h, w, labels)
+
+
+def _fce_fwd(h, w, labels):
+    nll, lse = _fce.fused_ce_fwd(h, w, labels)
+    return (nll, lse), (h, w, labels, lse)
+
+
+def _fce_bwd(res, cts):
+    h, w, labels, lse = res
+    g_nll, g_lse = cts
+    dh, dw = _fce.fused_ce_bwd(h, w, labels, lse, g_nll, g_lse)
+    dlab = np.zeros(labels.shape, dtype=jax.dtypes.float0)
+    return dh, dw, dlab
+
+
+fused_cross_entropy.defvjp(_fce_fwd, _fce_bwd)
+
+
+# ---------------------------------------------------------------------------
+# decode kernels
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def fused_topk_z(h: jax.Array, w: jax.Array, k: int = 8):
+    """(lse, topv, topi) in one fused pass over the vocab shard."""
+    return _tkz.topk_z(h, w, k)
+
+
+@jax.jit
+def ivf_block_scores(w_blocks: jax.Array, h: jax.Array,
+                     block_ids: jax.Array) -> jax.Array:
+    """(Q, p, block_rows) scores for the probed blocks only."""
+    return _ivf.ivf_score(w_blocks, h, block_ids)
+
+
+# re-export oracles for benches/tests
+fused_ce_ref = _ref.fused_ce_ref
+topk_z_ref = _ref.topk_z_ref
+ivf_score_ref = _ref.ivf_score_ref

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+These materialize the full [tokens, vocab] logits — exactly what the kernels
+exist to avoid — and are used by tests (assert_allclose vs interpret=True)
+and by the roofline benchmarks as the "naive" baseline.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_ce_ref(h: jax.Array, w: jax.Array,
+                 labels: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Full-softmax CE. h (T, d), w (V, d), labels (T,) -> (nll (T,), lse (T,))."""
+    logits = (h @ w.T).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    return lse - picked, lse
+
+
+def topk_z_ref(h: jax.Array, w: jax.Array,
+               k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused decode scoring. Returns (lse (Q,), topv (Q,k), topi (Q,k))."""
+    logits = (h @ w.T).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    topv, topi = jax.lax.top_k(logits, k)
+    return lse, topv, topi.astype(jnp.int32)
+
+
+def ivf_score_ref(w_blocks: jax.Array, h: jax.Array,
+                  block_ids: jax.Array) -> jax.Array:
+    """Gather-score probed blocks.
+
+    w_blocks (nb, br, d), h (Q, d), block_ids (Q, p) -> scores (Q, p, br).
+    """
+    gathered = w_blocks[block_ids]                 # (Q, p, br, d)
+    return jnp.einsum("qpbd,qd->qpb", gathered,
+                      h).astype(jnp.float32)

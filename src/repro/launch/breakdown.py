@@ -1,0 +1,115 @@
+"""Hillclimb profiler: attribute trip-aware bytes/flops/collective bytes to
+JAX-level op names (from HLO metadata) for one dry-run cell.
+
+  PYTHONPATH=src python -m repro.launch.breakdown --arch rwkv6-7b \
+      --shape train_4k [--top 20] [--kind collective|bytes|flops]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import collections   # noqa: E402
+import re            # noqa: E402
+
+import jax           # noqa: E402
+
+from . import mesh as mesh_lib                       # noqa: E402
+from .dryrun import build_lowering                   # noqa: E402
+from .hlo_analysis import (COLLECTIVES, _called, _dot_flops,  # noqa: E402
+                           _fusion_operand_traffic,
+                           _root_dus_update_bytes, parse_module,
+                           ELEMENTWISE, TRANSCENDENTAL)
+
+
+def meta_tag(line: str) -> str:
+    m = re.search(r'op_name="([^"]+)"', line)
+    if not m:
+        return "(no-metadata)"
+    tag = m.group(1)
+    tag = re.sub(r"\[.*?\]", "", tag)
+    parts = tag.split("/")
+    return "/".join(parts[-3:])[:70]
+
+
+def run(arch, shape, mesh_kind="single", output_mode="exact", top=20,
+        kind="collective"):
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    with mesh:
+        lowered, _ = build_lowering(arch, shape, mesh, output_mode)
+        compiled = lowered.compile()
+    comps = parse_module(compiled.as_text())
+
+    def trip(c):
+        if c is None or c not in comps:
+            return 1
+        cs = comps[c].consts
+        return max(cs) if cs else 1
+
+    agg = collections.Counter()
+    skip = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+            "broadcast", "iota", "reshape", "after-all", "convert", "copy",
+            "transpose", "while"}
+
+    def walk(name, mult):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for nm, rtype, op, line in comp.instrs:
+            elems, rb = comp.shapes[nm]
+            args = line.split("(", 1)[1] if "(" in line else ""
+            onames = [o for o in re.findall(r"%([\w.\-]+)", args)
+                      if o in comp.shapes]
+            ob = [comp.shapes[o][1] for o in onames]
+            val = 0
+            base = op[:-6] if op.endswith("-start") else op
+            if kind == "collective":
+                if base in COLLECTIVES and not op.endswith("-done"):
+                    val = rb
+            elif kind == "bytes":
+                if op == "fusion":
+                    fm = re.search(r"calls=%?([\w.\-]+)", line)
+                    fused = comps.get(fm.group(1)) if fm else None
+                    dus = _root_dus_update_bytes(fused)
+                    if dus is not None:
+                        val = 2 * dus + _fusion_operand_traffic(
+                            fused, ob, sliced_only=True)
+                    else:
+                        val = rb + _fusion_operand_traffic(fused, ob)
+                elif op in ("dynamic-slice", "gather"):
+                    val = 2 * rb
+                elif op in ("dynamic-update-slice", "scatter"):
+                    val = 2 * (ob[1] if len(ob) > 1 else rb)
+                elif op not in skip:
+                    val = rb + sum(ob)
+            elif kind == "flops":
+                if op == "dot":
+                    val = _dot_flops(line, elems, comp)
+                elif op in ELEMENTWISE or op in TRANSCENDENTAL:
+                    val = elems
+            if val:
+                agg[(meta_tag(line), op)] += mult * val
+            for kd, cond, callee in _called(line):
+                walk(callee, mult * (trip(cond) if kd == "while" else 1))
+
+    entry = next(n for n, c in comps.items() if c.entry)
+    walk(entry, 1)
+    unit = 1e9
+    print(f"\n== {kind} breakdown: {arch} x {shape} x {mesh_kind} "
+          f"[{output_mode}] (GB or GFLOP per device per step) ==")
+    for (tag, op), v in agg.most_common(top):
+        print(f"{v/unit:12.3f}  {op:22s} {tag}")
+    print(f"{sum(agg.values())/unit:12.3f}  TOTAL")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--output-mode", default="exact")
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--kind", default="collective",
+                    choices=["collective", "bytes", "flops"])
+    a = ap.parse_args()
+    run(a.arch, a.shape, a.mesh, a.output_mode, a.top, a.kind)

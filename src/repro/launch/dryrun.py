@@ -1,0 +1,324 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on a
+512-placeholder-device CPU host and extract the roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # full matrix
+
+Artifacts land in artifacts/dryrun/<mesh>/<arch>__<shape>[__mode].json and
+are consumed by benchmarks/roofline.py (EXPERIMENTS.md SS Dry-run/Roofline).
+"""
+# The FIRST two lines must run before any other import (jax locks the device
+# count on first init):
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse            # noqa: E402
+import dataclasses         # noqa: E402
+import json                # noqa: E402
+import re                  # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+
+import jax                 # noqa: E402
+import jax.numpy as jnp    # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import get_config, ASSIGNED_ARCHS           # noqa: E402
+from ..configs.base import SHAPES, TrainConfig, get_shape  # noqa: E402
+from ..models import Model                                  # noqa: E402
+from ..serve.output_layer import (ivf_specs_for, ivf_partition_specs,
+                                  sharded_ivf_decode,
+                                  streaming_logz_argmax)    # noqa: E402
+from ..train import init_train_state, make_train_step      # noqa: E402
+from . import mesh as mesh_lib                              # noqa: E402
+from .hlo_analysis import analyze as analyze_hlo            # noqa: E402
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# input specs per (arch, shape)
+# ---------------------------------------------------------------------------
+
+def token_struct(cfg, batch, seq):
+    if cfg.n_codebooks:
+        return SDS((batch, seq, cfg.n_codebooks), jnp.int32)
+    return SDS((batch, seq), jnp.int32)
+
+
+def train_batch_struct(cfg, batch, seq):
+    out = {"tokens": token_struct(cfg, batch, seq),
+           "labels": token_struct(cfg, batch, seq)}
+    if cfg.family == "vlm":
+        out["img"] = SDS((batch, cfg.n_image_tokens, cfg.d_model),
+                         jnp.dtype(cfg.dtype))
+    return out
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    sc = get_shape(shape_name)
+    if sc.kind == "train":
+        return {"batch": train_batch_struct(cfg, sc.global_batch, sc.seq_len)}
+    if sc.kind == "prefill":
+        out = {"tokens": token_struct(cfg, sc.global_batch, sc.seq_len)}
+        if cfg.family == "vlm":
+            out["img"] = SDS((sc.global_batch, cfg.n_image_tokens,
+                              cfg.d_model), jnp.dtype(cfg.dtype))
+        return out
+    # decode: one new token against a seq_len KV cache
+    model = Model(cfg)
+    cache = jax.eval_shape(
+        lambda: model.init_decode_state(sc.global_batch, sc.seq_len))
+    tok = SDS((sc.global_batch,), jnp.int32) if not cfg.n_codebooks else \
+        SDS((sc.global_batch, cfg.n_codebooks), jnp.int32)
+    out = {"state": cache, "token": tok, "pos": SDS((), jnp.int32),
+           "key": SDS((2,), jnp.uint32)}
+    if cfg.family == "vlm":
+        out["img"] = SDS((sc.global_batch, cfg.n_image_tokens, cfg.d_model),
+                         jnp.dtype(cfg.dtype))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def build_lowering(arch: str, shape_name: str, mesh, output_mode="exact"):
+    cfg = get_config(arch)
+    sc = get_shape(shape_name)
+    model = Model(cfg)
+    dsize = mesh_lib.data_size(mesh)
+
+    params_struct = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+    p_shard = mesh_lib.params_shardings(mesh, params_struct)
+
+    if sc.kind == "train":
+        mb = max(1, sc.global_batch // dsize)  # 1 seq/device/microbatch
+        tc = TrainConfig(loss="fused_ce", microbatches=mb)
+        state_struct = jax.eval_shape(
+            lambda: init_train_state(model, tc, jax.random.PRNGKey(0)))
+        s_shard = type(state_struct)(
+            params=p_shard,
+            opt=type(state_struct.opt)(
+                step=NamedSharding(mesh, P()),
+                m=p_shard, v=p_shard),
+            rng=NamedSharding(mesh, P()))
+        batch_struct = train_batch_struct(cfg, sc.global_batch, sc.seq_len)
+        b_shard = mesh_lib.batch_shardings(mesh, batch_struct,
+                                           sc.global_batch)
+        step = make_train_step(model, tc, backend="xla", mesh=mesh)
+        jitted = jax.jit(step, in_shardings=(s_shard, b_shard),
+                         out_shardings=(s_shard, None), donate_argnums=(0,))
+        return jitted.lower(state_struct, batch_struct), {
+            "step": "train_step", "microbatches": mb}
+
+    if sc.kind == "prefill":
+        specs = input_specs(arch, shape_name)
+        b_shard = mesh_lib.batch_shardings(mesh, specs, sc.global_batch)
+
+        def prefill_step(params, tokens, img=None):
+            hidden, _ = model.forward(params, tokens, img=img)
+            h_last = hidden[:, -1]
+            w = model.head_matrix(params)
+            if cfg.n_codebooks:
+                logits = jnp.einsum("bd,cvd->bcv", h_last, w)
+                lse = jax.nn.logsumexp(logits, -1)
+                return {"log_z": lse,
+                        "token": jnp.argmax(logits, -1),
+                        "top": jnp.max(logits, -1)}
+            log_z, top_id, top_s = streaming_logz_argmax(h_last, w)
+            return {"log_z": log_z, "token": top_id, "top": top_s}
+
+        args = (specs["tokens"],) + ((specs["img"],)
+                                     if cfg.family == "vlm" else ())
+        shards = (b_shard["tokens"],) + ((b_shard["img"],)
+                                         if cfg.family == "vlm" else ())
+        jitted = jax.jit(prefill_step,
+                         in_shardings=(p_shard,) + shards)
+        return jitted.lower(params_struct, *args), {"step": "prefill_step"}
+
+    # decode
+    specs = input_specs(arch, shape_name)
+    st_shard = mesh_lib.decode_state_shardings(mesh, specs["state"],
+                                               sc.global_batch)
+    tok_shard = mesh_lib.batch_shardings(mesh, specs["token"],
+                                         sc.global_batch)
+    dp = mesh_lib.batch_axis_for(mesh, sc.global_batch)
+    pc = cfg.partition
+    use_ivf = output_mode == "mimps" and pc.method == "mimps"
+    ivf = None
+    if use_ivf:
+        ivf = ivf_specs_for(cfg.vocab, cfg.d_model, pc.block_rows,
+                            jnp.dtype(cfg.dtype))
+
+    def serve_step(params, state, token, pos, key, img=None, ivf_arrays=None):
+        h, new_state = model.decode_step(params, state, token, pos, img=img)
+        w = model.head_matrix(params)
+        if cfg.n_codebooks:
+            logits = jnp.einsum("bd,cvd->bcv", h, w)
+            lse = jax.nn.logsumexp(logits, -1)
+            out = {"log_z": lse, "token": jnp.argmax(logits, -1)}
+        elif ivf_arrays is not None:
+            p_local = max(1, pc.n_probe // mesh.shape["model"])
+            l_local = max(8, pc.l // mesh.shape["model"])
+            log_z, top_id, top_s = sharded_ivf_decode(
+                mesh, ivf_arrays, h, key, n_probe_local=p_local,
+                l_local=l_local,
+                batch_spec=P(dp) if dp else P())
+            out = {"log_z": log_z, "token": top_id,
+                   "log_prob": top_s - log_z}
+        else:
+            log_z, top_id, top_s = streaming_logz_argmax(h, w)
+            out = {"log_z": log_z, "token": top_id,
+                   "log_prob": top_s - log_z}
+        return out, new_state
+
+    args = [params_struct, specs["state"], specs["token"], specs["pos"],
+            specs["key"]]
+    shards = [p_shard, st_shard, tok_shard, NamedSharding(mesh, P()),
+              NamedSharding(mesh, P())]
+    kwargs_struct = {}
+    if cfg.family == "vlm":
+        kwargs_struct["img"] = specs["img"]
+    if use_ivf:
+        kwargs_struct["ivf_arrays"] = ivf
+
+    def wrapped(params, state, token, pos, key, extra):
+        return serve_step(params, state, token, pos, key,
+                          img=extra.get("img"),
+                          ivf_arrays=extra.get("ivf_arrays"))
+
+    extra_shard = {}
+    if "img" in kwargs_struct:
+        extra_shard["img"] = mesh_lib.batch_shardings(
+            mesh, kwargs_struct["img"], sc.global_batch)
+    if "ivf_arrays" in kwargs_struct:
+        extra_shard["ivf_arrays"] = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), ivf_partition_specs())
+
+    jitted = jax.jit(wrapped, in_shardings=tuple(shards) + (extra_shard,),
+                     out_shardings=(None, st_shard), donate_argnums=(1,))
+    return jitted.lower(*args, kwargs_struct), {
+        "step": f"serve_step[{output_mode}]"}
+
+
+# ---------------------------------------------------------------------------
+# per-cell runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             output_mode: str = "exact", out_dir: str = "artifacts/dryrun"):
+    cfg = get_config(arch)
+    sc = get_shape(shape_name)
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "skipped": "pure full-attention arch (DESIGN.md SS5)"}
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    with mesh:
+        lowered, meta = build_lowering(arch, shape_name, mesh, output_mode)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "temp_size_in_bytes"):
+            if hasattr(ma, f):
+                mem[f] = int(getattr(ma, f))
+    except Exception as e:                                   # noqa: BLE001
+        mem["error"] = str(e)
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" not in k)}
+        cost = {k: v for k, v in cost.items()
+                if k in ("flops", "transcendentals", "bytes accessed")
+                or k.startswith("bytes accessed")}
+    except Exception as e:                                   # noqa: BLE001
+        cost["error"] = str(e)
+    t0 = time.time()
+    hlo = analyze_hlo(compiled.as_text())
+    t_analyze = time.time() - t0
+    n_chips = 512 if mesh_kind == "multi" else 256
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "output_mode": output_mode, **meta,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "analyze_s": round(t_analyze, 1),
+        "memory_analysis": mem,
+        "cost_analysis_xla": cost,        # loop-blind (XLA HloCostAnalysis)
+        # trip-count-aware per-device numbers (launch/hlo_analysis.py):
+        "flops_per_device": hlo["flops"],
+        "bytes_per_device": hlo["bytes"],
+        "transcendentals_per_device": hlo["transcendentals"],
+        "collective_bytes": hlo["collectives"],
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "global_tokens": sc.global_batch * (sc.seq_len if sc.kind == "train"
+                                            else 1),
+    }
+    os.makedirs(f"{out_dir}/{mesh_kind}", exist_ok=True)
+    suffix = "" if output_mode == "exact" else f"__{output_mode}"
+    with open(f"{out_dir}/{mesh_kind}/{arch}__{shape_name}{suffix}.json",
+              "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--output-mode", default="exact",
+                    choices=["exact", "mimps"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ASSIGNED_ARCHS:
+            for s in SHAPES:
+                for mk in ("single", "multi"):
+                    cells.append((a, s.name, mk, "exact"))
+    else:
+        cells.append((args.arch, args.shape, args.mesh, args.output_mode))
+
+    failures = 0
+    for a, s, mk, om in cells:
+        try:
+            jax.clear_caches()
+            r = run_cell(a, s, mk, om, args.out)
+            if "skipped" in r:
+                print(f"[SKIP] {a} x {s} x {mk}: {r['skipped']}", flush=True)
+            else:
+                fl = r["flops_per_device"]
+                cb = sum(r["collective_bytes"].values())
+                print(f"[OK]   {a} x {s} x {mk} ({r['step']}): "
+                      f"compile {r['compile_s']}s flops/dev {fl:.3e} "
+                      f"bytes/dev {r['bytes_per_device']:.3e} "
+                      f"coll/dev {cb/1e9:.3f} GB", flush=True)
+        except Exception:                                    # noqa: BLE001
+            failures += 1
+            print(f"[FAIL] {a} x {s} x {mk}", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

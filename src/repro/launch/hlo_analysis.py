@@ -1,0 +1,323 @@
+"""Trip-count-aware analysis of post-partitioning HLO text.
+
+XLA's HloCostAnalysis (compiled.cost_analysis()) visits every computation
+ONCE — lax.scan bodies (layers, microbatches, flash KV blocks) are counted a
+single time, which silently under-reports FLOPs/bytes by the loop trip count.
+This module re-walks the HLO text and multiplies while-body contributions by
+the loop bound (scan loops carry it as a constant in their condition).
+
+Extracted per entry module (per-device numbers, since the module is the SPMD
+per-device program):
+  * flops          : 2*M*N*K for dot ops (descending into fusions) +
+                     1/elem for elementwise arith + transcendentals
+  * bytes          : operand+result bytes at top-level instruction boundaries
+                     (fusion internals excluded — values stay in registers)
+  * collectives    : result bytes by type (all-reduce / all-gather /
+                     reduce-scatter / all-to-all / collective-permute)
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+               "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+               "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
+                    r"([\w\-]+)\(")
+COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+ELEMENTWISE = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+               "compare", "select", "and", "or", "xor", "negate", "abs",
+               "clamp"}
+TRANSCENDENTAL = {"exponential", "log", "rsqrt", "sqrt", "tanh", "logistic",
+                  "power", "sine", "cosine", "erf", "exponential-minus-one"}
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    elems, total = 0, 0
+    for dt, dims in SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for x in dims.split(","):
+            if x:
+                n *= int(x)
+        elems += n
+        total += n * DTYPE_BYTES[dt]
+    return elems, total
+
+
+class Computation:
+    def __init__(self, name, entry=False):
+        self.name = name
+        self.entry = entry
+        self.instrs = []        # (name, result_type, op, rest_of_line)
+        self.consts = []
+        self.shapes: Dict[str, Tuple[int, int]] = {}
+        self.root = None        # name of the ROOT instruction
+
+
+def parse_module(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        line = re.sub(r"/\*.*?\*/", "", line)   # strip /*index=N*/ comments
+        cm = COMP_RE.match(line)
+        if cm and (line.startswith("%") or line.startswith("ENTRY")):
+            cur = Computation(cm.group(2), entry=bool(cm.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        dm = DEF_RE.match(line)
+        if dm:
+            name, rtype, op = dm.group(1), dm.group(2), dm.group(3)
+            cur.instrs.append((name, rtype, op, line))
+            cur.shapes[name] = _shape_elems_bytes(rtype)
+            if re.match(r"^\s*ROOT\b", line):
+                cur.root = name
+        for c in re.findall(r"constant\((\d+)\)", line):
+            cur.consts.append(int(c))
+    return comps
+
+
+def _called(line: str):
+    """(kind, [computations]) referenced by this instruction line."""
+    out = []
+    m = re.search(r"condition=%?([\w.\-]+)", line)
+    b = re.search(r"body=%?([\w.\-]+)", line)
+    if b:
+        out.append(("while", m.group(1) if m else None, b.group(1)))
+    cm = re.search(r"calls=%?([\w.\-]+)", line)
+    if cm:
+        out.append(("fusion", None, cm.group(1)))
+    tm = re.search(r"to_apply=%?([\w.\-]+)", line)
+    if tm:
+        out.append(("call", None, tm.group(1)))
+    for br in re.findall(r"(?:true_computation|false_computation|"
+                         r"branch_computations)=\{?%?([\w.\-]+)", line):
+        out.append(("call", None, br))
+    return out
+
+
+def _dot_flops(line: str, result_elems: int, comp: Computation) -> int:
+    """2 * prod(result) * K. K = product of lhs contracting dims."""
+    ops = re.findall(r"%([\w.\-]+)", line.split("(", 1)[1])
+    lhs_shape = None
+    # first operand with a known shape = lhs
+    for o in ops:
+        if o in comp.shapes:
+            m = re.search(rf"%{re.escape(o)}\b", line)
+            break
+    # contracting dims from the attribute
+    cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    lhs_t = re.search(r"dot\(\s*(\w+\[[0-9,]*\])?", line)
+    k = 1
+    if cd:
+        dims = [int(x) for x in cd.group(1).split(",") if x]
+        # find the lhs operand's dims from its definition
+        if ops:
+            lhs_name = ops[0]
+            for nm, rtype, op, dl in comp.instrs:
+                if nm == lhs_name:
+                    sm = SHAPE_RE.search(rtype)
+                    if sm:
+                        ds = [int(x) for x in sm.group(2).split(",") if x]
+                        for d in dims:
+                            if d < len(ds):
+                                k *= ds[d]
+                    break
+            else:
+                k = 0
+    if k <= 1 and "lhs_contracting_dims" in line:
+        k = max(k, 1)
+    return 2 * result_elems * max(k, 1)
+
+
+def _root_dus_update_bytes(fused: "Computation"):
+    """If the fusion is an in-place stacked write — it contains a
+    dynamic-update-slice covering the whole output (possibly wrapped in
+    dtype converts, a CPU bf16-emulation artifact) — return the update
+    operand's byte size (the only data that actually moves). Else None."""
+    if fused is None or fused.root is None:
+        return None
+    root_elems = fused.shapes.get(fused.root, (0, 0))[0]
+    for nm, rtype, op, line in fused.instrs:
+        if op == "dynamic-update-slice" and \
+                fused.shapes[nm][0] == root_elems:
+            args = line.split("(", 1)[1] if "(" in line else ""
+            ops_in = [o for o in re.findall(r"%([\w.\-]+)", args)
+                      if o in fused.shapes]
+            if len(ops_in) > 1:
+                return fused.shapes[ops_in[1]][1]
+    return None
+
+
+def _fusion_operand_traffic(fused: "Computation", operand_bytes,
+                            sliced_only: bool = False) -> int:
+    """HBM reads of a fusion: parameters consumed only through
+    (dynamic-)slice/gather ops contribute their slice bytes; parameters
+    consumed whole contribute full bytes (or nothing if sliced_only)."""
+    if fused is None:
+        return sum(operand_bytes)
+    param_of = {}
+    for nm, rtype, op, line in fused.instrs:
+        if op == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", line)
+            if pm:
+                param_of[nm] = int(pm.group(1))
+    total = 0
+    for pname, pidx in param_of.items():
+        if pidx >= len(operand_bytes):
+            continue
+        slice_bytes = 0
+        whole = False
+        used = False
+        for nm, rtype, op, line in fused.instrs:
+            if op == "parameter":
+                continue
+            args = line.split("(", 1)[1] if "(" in line else ""
+            ops_in = re.findall(r"%([\w.\-]+)", args)
+            if pname in ops_in:
+                used = True
+                if op in ("dynamic-slice", "slice", "gather") and \
+                        ops_in and ops_in[0] == pname:
+                    slice_bytes += fused.shapes[nm][1]
+                else:
+                    whole = True
+        if not used:
+            continue
+        if whole:
+            total += 0 if sliced_only else operand_bytes[pidx]
+        else:
+            total += slice_bytes
+    return total
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    comps = parse_module(hlo_text)
+    # global shape table for cross-computation operand lookup (dot lhs)
+    for c in comps.values():
+        pass
+
+    def trip(cond_name):
+        if cond_name is None or cond_name not in comps:
+            return 1
+        cs = comps[cond_name].consts
+        return max(cs) if cs else 1
+
+    memo_f, memo_b, memo_c = {}, {}, {}
+
+    def walk(name: str, for_bytes: bool):
+        comp = comps.get(name)
+        if comp is None:
+            return (0, 0.0, {}) if not for_bytes else 0
+        key = name
+        memo = memo_b if for_bytes else memo_f
+        if key in memo:
+            return memo[key]
+        if for_bytes:
+            # CPU-backend artifacts excluded from the TPU-target byte model:
+            #  convert  - CPU has no native bf16 compute; converts fuse on TPU
+            #  copy     - loop double-buffering artifacts; in-place on TPU
+            #  transpose- layout normalization; fused on TPU
+            skip = {"parameter", "constant", "get-tuple-element", "tuple",
+                    "bitcast", "broadcast", "iota", "reshape", "after-all",
+                    "convert", "copy", "transpose", "while"}
+            total = 0
+            for nm, rtype, op, line in comp.instrs:
+                elems, rbytes = comp.shapes[nm]
+                args = line.split("(", 1)[1] if "(" in line else ""
+                opnames = [o for o in re.findall(r"%([\w.\-]+)", args)
+                           if o in comp.shapes]
+                operand_bytes = [comp.shapes[o][1] for o in opnames]
+                if op == "fusion":
+                    fm = re.search(r"calls=%?([\w.\-]+)", line)
+                    fused = comps.get(fm.group(1)) if fm else None
+                    root_dus_upd = _root_dus_update_bytes(fused)
+                    if root_dus_upd is not None:
+                        # in-place stacked write: only the slice moves
+                        total += 2 * root_dus_upd + _fusion_operand_traffic(
+                            fused, operand_bytes, sliced_only=True)
+                    else:
+                        total += rbytes + _fusion_operand_traffic(
+                            fused, operand_bytes)
+                elif op in ("dynamic-slice", "gather"):
+                    total += 2 * rbytes          # slice read + write only
+                elif op in ("dynamic-update-slice", "scatter"):
+                    upd = operand_bytes[1] if len(operand_bytes) > 1 else \
+                        rbytes
+                    total += 2 * upd             # in-place update traffic
+                elif op not in skip:
+                    total += rbytes + sum(operand_bytes)
+                for kind, cond, callee in _called(line):
+                    if kind == "while":
+                        total += trip(cond) * walk(callee, True)
+                    elif kind == "call":
+                        total += walk(callee, True)
+                    # fusion internals handled above
+            memo[key] = total
+            return total
+        flops = 0.0
+        trans = 0.0
+        for nm, rtype, op, line in comp.instrs:
+            elems, rbytes = comp.shapes[nm]
+            if op == "dot":
+                flops += _dot_flops(line, elems, comp)
+            elif op == "convolution":
+                # window size from the kernel operand is hard to recover
+                # from text reliably; count 2*result*K with K from
+                # window={size=...}
+                wm = re.search(r"window=\{size=([0-9x]+)", line)
+                k = 1
+                if wm:
+                    for x in wm.group(1).split("x"):
+                        k *= int(x)
+                flops += 2 * elems * k
+            elif op in ELEMENTWISE:
+                flops += elems
+            elif op in TRANSCENDENTAL:
+                trans += elems
+                flops += elems
+            elif op == "reduce":
+                flops += elems  # approximation: one op per output elem lost
+            for kind, cond, callee in _called(line):
+                mult = trip(cond) if kind == "while" else 1
+                f2, t2 = walk(callee, False)
+                flops += mult * f2
+                trans += mult * t2
+        memo[key] = (flops, trans)
+        return memo[key]
+
+    def walk_coll(name: str):
+        comp = comps.get(name)
+        if comp is None:
+            return {}
+        if name in memo_c:
+            return memo_c[name]
+        memo_c[name] = {}
+        out: Dict[str, int] = {}
+        for nm, rtype, op, line in comp.instrs:
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVES and not op.endswith("-done"):
+                _, b = comp.shapes[nm]
+                out[base] = out.get(base, 0) + b
+            for kind, cond, callee in _called(line):
+                mult = trip(cond) if kind == "while" else 1
+                for k2, v2 in walk_coll(callee).items():
+                    out[k2] = out.get(k2, 0) + mult * v2
+        memo_c[name] = out
+        return out
+
+    entry = next((n for n, c in comps.items() if c.entry), None)
+    if entry is None:
+        return {"flops": 0, "bytes": 0, "collectives": {}}
+    flops, trans = walk(entry, False)
+    nbytes = walk(entry, True)
+    colls = walk_coll(entry)
+    return {"flops": float(flops), "transcendentals": float(trans),
+            "bytes": float(nbytes), "collectives": colls}

@@ -1,0 +1,183 @@
+"""Production mesh + sharding rules (DESIGN.md SS6).
+
+``make_production_mesh`` is a FUNCTION so importing this module never touches
+jax device state (required by the dry-run bootstrap ordering).
+
+Sharding policy (single-pod (data=16, model=16); multi-pod adds leading
+pure-DP 'pod'):
+  batch dims                  -> ('pod','data')  [replicated if indivisible]
+  vocab / embedding rows      -> 'model'
+  attention/projection fan-out (heads*hd, d_ff, d_inner) -> 'model'
+  projection fan-in of the return matmuls (wo/down/out_proj) -> 'model'
+  experts (MoE)               -> 'model'  (expert parallelism)
+  KV-cache sequence dim       -> 'model'  (decode: flash-decoding style)
+  norms, routers, small LoRA  -> replicated
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_size(mesh: Mesh) -> int:
+    return int(jnp.prod(jnp.array([mesh.shape[a] for a in data_axes(mesh)])))
+
+
+def batch_axis_for(mesh: Mesh, batch: int):
+    """'data'(+'pod') if the batch divides the data extent, else replicate."""
+    if batch % data_size(mesh) == 0:
+        ax = data_axes(mesh)
+        return ax if len(ax) > 1 else ax[0]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# parameter specs by tree path
+# ---------------------------------------------------------------------------
+
+_COL = {"wq", "wk", "wv", "gate", "up", "wg", "wz", "wx", "decay_b"}
+_ROW = {"wo", "down", "out_proj"}
+_SHARD_BIAS = {"bq", "bk", "bv", "conv_x_b"}
+_REPL = {"scale", "router", "mu", "bonus_u", "decay_w0", "decay_a", "wbc",
+         "wdt", "conv_bc_w", "conv_bc_b", "a_log", "d_skip", "dt_bias", "b",
+         "c"}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "name"):
+            parts.append(str(e.name))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+    return "/".join(parts)
+
+
+def _pad(nd: int, tail) -> P:
+    return P(*([None] * (nd - len(tail)) + list(tail)))
+
+
+def param_spec(path, leaf, model_axis_size: int = 16) -> P:
+    """PartitionSpec for one parameter leaf (stack dims lead; rules apply to
+    the trailing semantic dims). Falls back to replication whenever the
+    preferred axis doesn't divide."""
+    s = _path_str(path)
+    name = s.split("/")[-1]
+    nd = leaf.ndim
+    shape = leaf.shape
+
+    def ok(dim_from_end: int) -> bool:
+        return shape[nd - dim_from_end] % model_axis_size == 0
+
+    if "experts" in s and "shared" not in s:
+        # (L, E, d, ff)-style: shard the expert dim (-3)
+        if nd >= 3 and ok(3):
+            return _pad(nd, ["model", None, None])
+        return _pad(nd, [None] * min(nd, 3))
+    if "shared" in s:
+        if name in ("gate", "up") and ok(1):
+            return _pad(nd, [None, "model"])
+        if name == "down" and ok(2):
+            return _pad(nd, ["model", None])
+        return _pad(nd, [])
+    if name == "table" or name == "lm_head":
+        # (V, d) or (C, V, d): vocab at -2
+        return _pad(nd, ["model", None]) if ok(2) else _pad(nd, [])
+    # rwkv channel-mix rules must precede the generic _COL/_ROW names:
+    # cmix/wv is the ROW (down) projection even though "wv" is a _COL name
+    # elsewhere (mis-ordering cost a measured 240 GB/step of ff all-gathers).
+    if "cmix" in s:
+        if name in ("wk", "wr"):
+            return _pad(nd, [None, "model"]) if ok(1) else _pad(nd, [])
+        if name == "wv":
+            return _pad(nd, ["model", None]) if ok(2) else _pad(nd, [])
+    if name in _COL or (name == "wr" and nd >= 2):
+        return _pad(nd, [None, "model"]) if ok(1) else _pad(nd, [])
+    if name in _ROW:
+        return _pad(nd, ["model", None]) if ok(2) else _pad(nd, [])
+    if name == "conv_x_w":
+        return _pad(nd, [None, "model"]) if ok(1) else _pad(nd, [])
+    if name in _SHARD_BIAS:
+        return _pad(nd, ["model"]) if ok(1) else _pad(nd, [])
+    return _pad(nd, [])        # norms, routers, mu, ... replicated
+
+
+def params_shardings(mesh: Mesh, params_struct: Any) -> Any:
+    m = mesh.shape["model"]
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, param_spec(p, x, m)), params_struct)
+
+
+# ---------------------------------------------------------------------------
+# decode-state specs by tree path
+# ---------------------------------------------------------------------------
+
+def decode_state_spec(path, leaf, mesh: Mesh, batch: int) -> P:
+    s = _path_str(path)
+    name = s.split("/")[-1]
+    nd = leaf.ndim
+    dp = batch_axis_for(mesh, batch)
+    model = mesh.shape["model"]
+
+    if name in ("k", "v"):
+        # (..., B, S, nkv, hd): seq -> model (flash-decoding style)
+        seq = leaf.shape[nd - 3]
+        sm = "model" if seq % model == 0 else None
+        return _pad(nd, [dp, sm, None, None])
+    if name in ("tm_last", "cm_last"):
+        return _pad(nd, [dp, None])
+    if name == "wkv":
+        heads = leaf.shape[nd - 3]
+        hm = "model" if heads % model == 0 else None
+        return _pad(nd, [dp, hm, None, None])
+    if name == "conv_x":
+        ch = leaf.shape[nd - 1]
+        cm = "model" if ch % model == 0 else None
+        return _pad(nd, [dp, None, cm])
+    if name == "conv_bc":
+        return _pad(nd, [dp, None, None])
+    if name == "ssm":
+        heads = leaf.shape[nd - 3]
+        hm = "model" if heads % model == 0 else None
+        return _pad(nd, [dp, hm, None, None])
+    return _pad(nd, [])
+
+
+def decode_state_shardings(mesh: Mesh, struct: Any, batch: int) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, decode_state_spec(p, x, mesh,
+                                                           batch)), struct)
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh: Mesh, batch_struct: Any, batch: int) -> Any:
+    dp = batch_axis_for(mesh, batch)
+
+    def one(x):
+        return NamedSharding(mesh, _pad(x.ndim, []) if dp is None
+                             else P(dp, *([None] * (x.ndim - 1))))
+    return jax.tree.map(one, batch_struct)
+
+
+def replicated(mesh: Mesh, struct: Any) -> Any:
+    return jax.tree.map(lambda x: NamedSharding(mesh, P()), struct)

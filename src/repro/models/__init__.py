@@ -1,0 +1,5 @@
+"""Model zoo: scan-stacked transformer families + the paper's LBL."""
+from .transformer import Model
+from . import lbl
+
+__all__ = ["Model", "lbl"]

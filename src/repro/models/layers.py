@@ -1,0 +1,95 @@
+"""Shared neural-net layers: norms, MLPs, embeddings, RoPE.
+
+Pure-functional style: ``init_*`` returns a params pytree (nested dicts of
+arrays); ``apply`` functions are free of global state so everything is
+scannable / pjit-friendly and ``jax.eval_shape``-able (the dry run never
+allocates real weights).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs: gated (silu/gelu) and squared-ReLU (nemotron)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, act: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"down": _dense_init(ks[2], (d_ff, d), dtype)}
+    if act == "sqrelu":
+        p["up"] = _dense_init(ks[0], (d, d_ff), dtype)
+    else:
+        p["gate"] = _dense_init(ks[0], (d, d_ff), dtype)
+        p["up"] = _dense_init(ks[1], (d, d_ff), dtype)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, act: str) -> jax.Array:
+    if act == "sqrelu":
+        h = jnp.square(jax.nn.relu(x @ p["up"]))
+    else:
+        a = x @ p["gate"]
+        a = jax.nn.silu(a) if act == "silu" else jax.nn.gelu(a)
+        h = a * (x @ p["up"])
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding + output head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": _dense_init(key, (vocab, d), dtype, scale=1.0)}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                     / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x: (..., S, H, Dh), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,74 @@
+"""Log-bilinear language model (Mnih & Hinton 2008) — the paper's SS5.2 model.
+
+q(context) = sum_i C_i . r_{w_i}  over a fixed context window; the score of
+next word w is q . r_w + b_w. Trained with NCE while clamping Z := 1 (the
+heuristic the paper evaluates MIMPS against in Table 4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+Params = Dict[str, Any]
+
+
+def init_lbl(key, vocab: int, d: int, context: int, dtype=jnp.float32
+             ) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "r": _dense_init(k1, (vocab, d), dtype, scale=0.1),   # word vectors
+        "c": _dense_init(k2, (context, d, d), dtype,
+                         scale=d ** -0.5),                     # position mats
+        "b": jnp.zeros((vocab,), dtype),
+    }
+
+
+def context_vector(p: Params, ctx_tokens: jax.Array) -> jax.Array:
+    """ctx_tokens (B, n_ctx) -> q (B, d)."""
+    r_ctx = jnp.take(p["r"], ctx_tokens, axis=0)     # (B, n, d)
+    return jnp.einsum("bnd,nde->be", r_ctx, p["c"])
+
+
+def scores(p: Params, q: jax.Array, words: jax.Array = None) -> jax.Array:
+    """q (B, d) -> scores over `words` (or the full vocab)."""
+    if words is None:
+        return q @ p["r"].T + p["b"]
+    r = jnp.take(p["r"], words, axis=0)              # (..., d)
+    b = jnp.take(p["b"], words, axis=0)
+    return jnp.einsum("bd,b...d->b...", q, r) + b
+
+
+def class_vectors(p: Params) -> jax.Array:
+    """The v_i of the paper: output side = r (+ bias folded via append).
+
+    Bias is absorbed by appending 1 to q and b to r, so MIPS operates on
+    (d+1)-dim vectors exactly as [3]'s reduction suggests."""
+    return jnp.concatenate([p["r"], p["b"][:, None]], axis=1)
+
+
+def query_vector(p: Params, ctx_tokens: jax.Array) -> jax.Array:
+    q = context_vector(p, ctx_tokens)
+    ones = jnp.ones((*q.shape[:-1], 1), q.dtype)
+    return jnp.concatenate([q, ones], axis=-1)
+
+
+def nce_loss(p: Params, ctx: jax.Array, target: jax.Array,
+             noise: jax.Array, log_noise_prob: jax.Array,
+             n_noise: int) -> jax.Array:
+    """NCE with Z clamped to 1 (paper SS5.2 training setup).
+
+    ctx (B, n); target (B,); noise (B, k); log_noise_prob: log q(w) for
+    target and noise words, shapes (B,) and (B, k).
+    """
+    q = context_vector(p, ctx)
+    s_t = scores(p, q, target)                        # (B,)  log p_model
+    s_n = scores(p, q, noise)                         # (B, k)
+    log_k = jnp.log(jnp.float32(n_noise))
+    # P(data | w) = sigma(s - log k q(w))
+    pos = jax.nn.log_sigmoid(s_t - log_k - log_noise_prob[0])
+    neg = jax.nn.log_sigmoid(-(s_n - log_k - log_noise_prob[1]))
+    return -(pos.mean() + neg.sum(axis=1).mean())

@@ -1,0 +1,124 @@
+"""Mamba2 (SSD) block — the Zamba2 hybrid's backbone.
+
+Structure (arXiv:2405.21060 as used by Zamba2): separate z/x/BC/dt
+projections (separate — not packed — so tensor-parallel sharding of d_inner
+never splits across semantic boundaries), depthwise causal conv over time on
+(x, B, C), scalar-per-head decay a_t = exp(-dt_t * exp(A_log)), state update
+
+    h_t = a_t h_{t-1} + dt_t * (x_t outer B_t)      h: (B, H, P, N)
+    y_t = C_t . h_t + D x_t
+
+Sequential lax.scan over time for train/prefill (the chunked SSD form is a
+perf optimization tracked in EXPERIMENTS.md); O(1)-state decode step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, init_rmsnorm, rmsnorm
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    head_p = 64
+    n_heads = d_inner // head_p
+    return d_inner, n_heads, head_p, ssm.state_dim, ssm.conv_dim
+
+
+def init_mamba_block(key, cfg) -> Params:
+    d = cfg.d_model
+    d_inner, n_h, p_dim, n_state, conv = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": _dense_init(ks[0], (d, d_inner), dt),
+        "wx": _dense_init(ks[1], (d, d_inner), dt),
+        "wbc": _dense_init(ks[2], (d, 2 * n_state), dt),
+        "wdt": _dense_init(ks[3], (d, n_h), dt),
+        "conv_x_w": (jax.random.normal(ks[4], (conv, d_inner))
+                     * 0.1).astype(dt),
+        "conv_x_b": jnp.zeros((d_inner,), dt),
+        "conv_bc_w": (jax.random.normal(ks[5], (conv, 2 * n_state))
+                      * 0.1).astype(dt),
+        "conv_bc_b": jnp.zeros((2 * n_state,), dt),
+        "a_log": jnp.zeros((n_h,), jnp.float32),
+        "d_skip": jnp.ones((n_h,), dt),
+        "dt_bias": jnp.zeros((n_h,), dt),
+        "norm": init_rmsnorm(d_inner, dt),
+        "out_proj": _dense_init(ks[6], (d_inner, d), dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, state=None):
+    """Depthwise causal conv over time. x (B, S, C), w (K, C).
+
+    state (B, K-1, C) carries the last K-1 inputs for decode continuity.
+    Returns (y (B, S, C), new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return jax.nn.silu(out + b), new_state
+
+
+def mamba_block(p: Params, x: jax.Array, cfg, state=None):
+    """x (B, S, d) -> (out, new_state).
+
+    state: {'conv_x', 'conv_bc', 'ssm'} or None (train/prefill from zeros).
+    """
+    b, s, d = x.shape
+    d_inner, n_h, p_dim, n_state, conv = _dims(cfg)
+    z = x @ p["wz"]
+    xin = x @ p["wx"]
+    bc = x @ p["wbc"]
+    dt_raw = x @ p["wdt"]
+    cx = state["conv_x"] if state is not None else None
+    cb = state["conv_bc"] if state is not None else None
+    xconv, new_cx = _causal_conv(xin, p["conv_x_w"], p["conv_x_b"], cx)
+    bcconv, new_cb = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"], cb)
+    xc = xconv.reshape(b, s, n_h, p_dim)
+    b_in = bcconv[..., :n_state]                             # (B,S,N)
+    c_in = bcconv[..., n_state:]                             # (B,S,N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    a = jnp.exp(-dt * jnp.exp(p["a_log"]))                   # (B,S,H)
+
+    ssm0 = (state["ssm"] if state is not None else
+            jnp.zeros((b, n_h, p_dim, n_state), jnp.float32))
+
+    def step(h, xs):
+        xt, bt, ct, at, dtt = xs
+        upd = jnp.einsum("bhp,bn->bhpn", (dtt[..., None] * xt), bt)
+        h_new = h * at[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h_new, ct)
+        return h_new, y
+
+    xs = (jnp.moveaxis(xc.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b_in.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c_in.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(a, 1, 0),
+          jnp.moveaxis(dt, 1, 0))
+    h_final, ys = jax.lax.scan(jax.checkpoint(step), ssm0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                               # (B,S,H,P)
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"conv_x": new_cx, "conv_bc": new_cb, "ssm": h_final}
+
+
+def init_mamba_state(batch: int, cfg, dtype):
+    d_inner, n_h, p_dim, n_state, conv = _dims(cfg)
+    return {
+        "conv_x": jnp.zeros((batch, conv - 1, d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, conv - 1, 2 * n_state), dtype),
+        "ssm": jnp.zeros((batch, n_h, p_dim, n_state), jnp.float32),
+    }

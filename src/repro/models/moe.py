@@ -1,0 +1,95 @@
+"""Fine-grained MoE (DeepSeek-MoE / Moonlight family): shared experts +
+top-k routed experts with capacity-based, jittable dispatch.
+
+Dispatch is scatter-based (no [T, E, C] one-hot combine tensor): tokens are
+placed into a (E, C, d) buffer via cumsum-derived slots, expert matmuls run
+dense per expert, and results are gathered back weighted by router probs.
+Under pjit the buffer is sharded E -> 'model' (expert parallelism); the
+scatter/gather becomes XLA's all-to-all on the EP axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, init_mlp, mlp
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg) -> Params:
+    m = cfg.moe
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    exp_keys = jax.random.split(ks[0], m.n_experts)
+    shared_keys = jax.random.split(ks[1], max(m.n_shared, 1))
+    experts = jax.vmap(
+        lambda k: init_mlp(k, d, m.expert_d_ff, cfg.act, dt))(exp_keys)
+    p: Params = {
+        "router": _dense_init(ks[2], (d, m.n_experts), jnp.float32),
+        "experts": experts,            # leaves stacked (E, ...)
+    }
+    if m.n_shared:
+        p["shared"] = jax.vmap(
+            lambda k: init_mlp(k, d, m.expert_d_ff, cfg.act, dt))(shared_keys)
+    return p
+
+
+def moe_block(p: Params, x: jax.Array, cfg):
+    """x (B, S, d) -> (out (B, S, d), aux_losses dict)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)             # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(m.capacity_factor * t * m.top_k / m.n_experts)
+    capacity = max(capacity, 4)
+
+    # slot assignment: position of each (token, choice) within its expert
+    flat_e = top_e.reshape(-1)                               # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, m.n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) * onehot                # (T*k, E)
+    slot = pos.sum(-1) - 1                                   # (T*k,)
+    keep = slot < capacity
+
+    # scatter tokens into (E, C, d) dispatch buffer
+    buf = jnp.zeros((m.n_experts, capacity, d), x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(t), m.top_k)
+    src = jnp.where(keep[:, None], xf[tok_idx], 0)
+    buf = buf.at[flat_e, jnp.clip(slot, 0, capacity - 1)].add(
+        jnp.where(keep[:, None], src, 0))
+
+    # dense per-expert MLPs: vmap over stacked expert params
+    out_buf = jax.vmap(lambda pe, xe: mlp(pe, xe, cfg.act))(
+        p["experts"], buf)                                   # (E, C, d)
+
+    # gather back, weighted by router prob
+    gathered = out_buf[flat_e, jnp.clip(slot, 0, capacity - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    flat_w = top_p.reshape(-1)[:, None].astype(x.dtype)
+    contrib = gathered * flat_w
+    out = jnp.zeros((t, d), x.dtype).at[tok_idx].add(contrib)
+
+    if m.n_shared:
+        shared = jnp.sum(jax.vmap(lambda ps: mlp(ps, xf, cfg.act))(
+            p["shared"]), axis=0)
+        out = out + shared
+
+    # aux losses: load balance (Switch-style) + router z-loss
+    me = probs.mean(0)                                       # (E,)
+    ce = jax.nn.one_hot(top_e[:, 0], m.n_experts).mean(0)
+    aux = {
+        "moe_balance": m.n_experts * jnp.sum(me * ce) * m.aux_loss,
+        "moe_zloss": jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)
+                     * m.router_z_loss,
+        "moe_drop_frac": 1.0 - keep.mean(),
+    }
+    return out.reshape(b, s, d), aux

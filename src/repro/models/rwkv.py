@@ -1,0 +1,164 @@
+"""RWKV6 "Finch" block: token-shift time mix with data-dependent decay +
+squared-ReLU channel mix. Attention-free; per-head (head_size x head_size)
+state makes decode O(1) in context — this arch runs the long_500k shape.
+
+Faithful structure (arXiv:2404.05892): r/k/v/g/w projections of
+token-shift-interpolated inputs, LoRA-parameterized data-dependent decay
+w_t = exp(-exp(w0 + lora(x_t))), bonus `u` for the current token, recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Train/prefill run the recurrence with lax.scan over time; decode is one step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, rmsnorm, init_rmsnorm
+
+Params = Dict[str, Any]
+
+
+def _heads(cfg):
+    hs = (cfg.ssm.wkv_head_size if cfg.ssm else 64)
+    return cfg.d_model // hs, hs
+
+
+def init_rwkv_block(key, cfg) -> Params:
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    lora = 64
+    ks = jax.random.split(key, 12)
+    n_h, hs = _heads(cfg)
+    return {
+        "mix": {  # token-shift interpolation weights per stream
+            "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(dt),
+            "wr": _dense_init(ks[1], (d, d), dt),
+            "wk": _dense_init(ks[2], (d, d), dt),
+            "wv": _dense_init(ks[3], (d, d), dt),
+            "wg": _dense_init(ks[4], (d, d), dt),
+            "wo": _dense_init(ks[5], (d, d), dt),
+            "decay_w0": jnp.full((d,), -6.0, dt),
+            "decay_a": _dense_init(ks[6], (d, lora), dt),
+            "decay_b": _dense_init(ks[7], (lora, d), dt),
+            "bonus_u": (jax.random.normal(ks[8], (n_h, hs)) * 0.1).astype(dt),
+            "ln_x": init_rmsnorm(d, dt),
+        },
+        "cmix": {  # channel mix
+            "mu": (jax.random.uniform(ks[9], (2, d)) * 0.5 + 0.25).astype(dt),
+            "wk": _dense_init(ks[10], (d, cfg.d_ff), dt),
+            "wv": _dense_init(ks[11], (cfg.d_ff, d), dt),
+            "wr": _dense_init(jax.random.fold_in(key, 99), (d, d), dt),
+        },
+    }
+
+
+def _token_shift(x: jax.Array, x_last: jax.Array) -> jax.Array:
+    """shift right by one along time; x_last fills position 0."""
+    return jnp.concatenate([x_last[:, None], x[:, :-1]], axis=1)
+
+
+def _constrain_heads(x, spec):
+    """Pin the head dim to the 'model' axis if a mesh is ambient — without
+    this the wkv scan's sharding fixpoint resolves replicated and GSPMD
+    all-gathers r/k/v/w before the loop (measured 240 GB/step at (16,16))."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:                                      # no mesh (tests)
+        return x
+
+
+def wkv_scan(r, k, v, w, u, state0):
+    """Recurrence over time. r/k/v (B, S, H, hs), w (B, S, H, hs) decay in
+    (0,1), u (H, hs); state (B, H, hs, hs). Returns (out (B,S,H,hs), state).
+
+    NOTE(perf log): forcing head-sharding on r/k/v/w + state with
+    _constrain_heads was tried and REFUTED — collectives went 912 -> 1325
+    GB/step at (16,16) because the backward then reshards every stream per
+    microbatch. GSPMD's replicated fixpoint for the tiny (B,H,hs,hs) state
+    is the cheaper global solution; see EXPERIMENTS.md SSPerf."""
+    def step(s, xs):
+        rt, kt, vt, wt = xs                       # (B, H, hs)
+        # r/k/v arrive bf16 (transport + their cotangent collectives run at
+        # half width); state math is f32 for stability over long horizons.
+        rt = rt.astype(jnp.float32)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt,
+                        preferred_element_type=jnp.float32)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = s * wt[..., None] + kv
+        return s_new, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, out = jax.lax.scan(jax.checkpoint(step), state0, xs)
+    return jnp.moveaxis(out, 0, 1), state
+
+
+def rwkv_time_mix(p: Params, x: jax.Array, cfg, x_last, state0
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x (B, S, d). Returns (out, new_x_last, new_state)."""
+    n_h, hs = _heads(cfg)
+    b, s, d = x.shape
+    xs = _token_shift(x, x_last)
+    mu = p["mu"]
+    xr, xk, xv, xg, xw = (x + (xs - x) * mu[i] for i in range(5))
+    r = (xr @ p["wr"]).reshape(b, s, n_h, hs)
+    k = (xk @ p["wk"]).reshape(b, s, n_h, hs)
+    v = (xv @ p["wv"]).reshape(b, s, n_h, hs)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay (the Finch hallmark)
+    decay = p["decay_w0"] + (xw @ p["decay_a"]) @ p["decay_b"]
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32))).reshape(b, s, n_h, hs)
+    out, state = wkv_scan(r, k, v, w,               # bf16 transport
+                          p["bonus_u"].astype(jnp.float32),
+                          state0)
+    # per-head group normalization (RWKV6's GroupNorm(n_heads)) — head-local,
+    # so the whole time-mix shards on heads with a single all-reduce at wo
+    # (a full-d rmsnorm here forced cross-head stats + activation gathers).
+    var = jnp.mean(jnp.square(out), axis=-1, keepdims=True)
+    out = out * jax.lax.rsqrt(var + 1e-5)
+    out = out * p["ln_x"]["scale"].astype(jnp.float32).reshape(n_h, hs)
+    out = out.reshape(b, s, d).astype(x.dtype) * g
+    return out @ p["wo"], x[:, -1], state
+
+
+def rwkv_channel_mix(p: Params, x: jax.Array, x_last):
+    xs = _token_shift(x, x_last)
+    mu = p["mu"]
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return (k @ p["wv"]) * jax.nn.sigmoid(xr @ p["wr"]), x[:, -1]
+
+
+class RWKVState:
+    """Decode-time state per layer: (x_last_tm, x_last_cm, wkv_state)."""
+
+    @staticmethod
+    def init(batch: int, cfg, dtype):
+        n_h, hs = _heads(cfg)
+        return {
+            "tm_last": jnp.zeros((batch, cfg.d_model), dtype),
+            "cm_last": jnp.zeros((batch, cfg.d_model), dtype),
+            "wkv": jnp.zeros((batch, n_h, hs, hs), jnp.float32),
+        }
+
+
+def rwkv_block(p: Params, x: jax.Array, cfg, state=None):
+    """Full block (pre-norm residual). x (B, S, d).
+
+    state=None -> zeros (training); else decode-style carry-through.
+    """
+    b = x.shape[0]
+    if state is None:
+        state = RWKVState.init(b, cfg, x.dtype)
+    tm_out, tm_last, wkv = rwkv_time_mix(
+        p["mix"], x, cfg, state["tm_last"], state["wkv"])
+    x = x + tm_out
+    cm_out, cm_last = rwkv_channel_mix(p["cmix"], x, state["cm_last"])
+    x = x + cm_out
+    return x, {"tm_last": tm_last, "cm_last": cm_last, "wkv": wkv}

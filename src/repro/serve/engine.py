@@ -1,0 +1,160 @@
+"""Serving engine: prefill + cached decode with partition-estimated
+probabilities — the paper's inference-time use case (Eq. 2/3).
+
+decode_step cost at the output layer:
+  exact     O(V d)         (fused one-pass: kernels.topk_z)
+  mimps     O(nb d + p*br d + l d)   — sublinear via block-IVF
+  selfnorm  O(k d)         (head only; assumes Z == 1)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core import mips
+from ..core.estimators import NEG_INF
+from ..models import Model
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ServeState:
+    cache: Any
+    pos: jax.Array           # scalar int32: next position to write
+    last_token: jax.Array    # (B,) or (B, C)
+
+
+class Engine:
+    """Batched serving for one model. Retrieval state (IVF) is built once
+    from the output embedding at engine construction ("index build time")."""
+
+    def __init__(self, model: Model, params, max_len: int,
+                 key: Optional[jax.Array] = None, use_pallas: bool = False):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.max_len = max_len
+        self.use_pallas = use_pallas
+        pc = self.cfg.partition
+        self.index = None
+        key = key if key is not None else jax.random.PRNGKey(0)
+        w = model.head_matrix(params)
+        if pc.method == "mimps" and not self.cfg.n_codebooks \
+                and w.shape[0] >= 4 * pc.block_rows:
+            self.index = mips.build_ivf(key, w, block_rows=pc.block_rows,
+                                        n_clusters=pc.n_clusters)
+
+    # -- steps (jit-compiled by callers / launch scripts) ---------------------
+
+    def prefill(self, tokens, img=None) -> Tuple[jax.Array, ServeState]:
+        """Full-sequence prefill; returns hidden of last position + state
+        primed for decode. (KV caches are rebuilt decode-side for simplicity
+        of the scan layout; see launch/dryrun.py for the lowered prefill.)"""
+        hidden, _ = self.model.forward(self.params, tokens, img=img)
+        h_last = hidden[:, -1]
+        batch = tokens.shape[0]
+        state = ServeState(
+            cache=self.model.init_decode_state(batch, self.max_len),
+            pos=jnp.zeros((), jnp.int32),
+            last_token=tokens[:, -1])
+        return h_last, state
+
+    def decode_step(self, state: ServeState, key: jax.Array, img=None,
+                    temperature: float = 0.0
+                    ) -> Tuple[Dict[str, jax.Array], ServeState]:
+        """One token for every stream; returns sampling outputs + new state."""
+        h, new_cache = self.model.decode_step(
+            self.params, state.cache, state.last_token, state.pos, img=img)
+        out = self.next_token_distribution(h, key, temperature)
+        new_state = ServeState(cache=new_cache, pos=state.pos + 1,
+                               last_token=out["token"])
+        return out, new_state
+
+    # -- the paper's Eq. 2/3 at the output layer ------------------------------
+
+    def next_token_distribution(self, h: jax.Array, key: jax.Array,
+                                temperature: float = 0.0
+                                ) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        pc = cfg.partition
+        w = self.model.head_matrix(self.params)
+        if cfg.n_codebooks:
+            # audio: small per-codebook vocab -> exact softmax per codebook
+            logits = jnp.einsum("bd,cvd->bcv", h, w)
+            log_z = jax.nn.logsumexp(logits, -1)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            top = jnp.max(logits, -1)
+            return {"token": tok, "log_prob": top - log_z, "log_z": log_z}
+
+        if pc.method == "mimps" and self.index is not None:
+            def one(q, k):
+                blocks = mips.probe(self.index, q, pc.n_probe)
+                scores, valid = mips.gather_scores(self.index, q, blocks)
+                scores = jnp.where(valid, scores, NEG_INF)
+                n = self.index.n
+                idx = jax.random.randint(k, (pc.l,), 0, n)
+                slots = self.index.slot_of_row[idx]
+                in_head = jnp.any((slots // self.index.block_rows)[:, None]
+                                  == blocks[None, :], axis=1)
+                flat = self.index.v_blocks.reshape(-1, q.shape[-1])
+                tail = flat[slots] @ q
+                log_head = jax.nn.logsumexp(scores)
+                log_tail = jax.nn.logsumexp(
+                    jnp.where(in_head, NEG_INF, tail))
+                log_z = jnp.logaddexp(
+                    log_head, jnp.log(jnp.float32(n))
+                    - jnp.log(jnp.float32(pc.l)) + log_tail)
+                best = jnp.argmax(scores)
+                tok = self.index.row_id[blocks[best // self.index.block_rows],
+                                        best % self.index.block_rows]
+                return tok, scores[best], log_z
+            keys = jax.random.split(key, h.shape[0])
+            tok, top, log_z = jax.vmap(one)(h, keys)
+            return {"token": tok.astype(jnp.int32),
+                    "log_prob": top - log_z, "log_z": log_z}
+
+        if pc.method == "selfnorm":
+            # head-only argmax; Z assumed 1 (trained with selfnorm loss)
+            logits = h @ w.T
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            top = jnp.max(logits, -1)
+            return {"token": tok, "log_prob": top,
+                    "log_z": jnp.zeros_like(top)}
+
+        # exact: fused single pass (Pallas on TPU, streaming XLA elsewhere)
+        if self.use_pallas:
+            from ..kernels.ops import fused_topk_z
+            lse, topv, topi = fused_topk_z(h, w, k=1)
+            return {"token": topi[:, 0], "log_prob": topv[:, 0] - lse,
+                    "log_z": lse}
+        logits = h @ w.T
+        log_z = jax.nn.logsumexp(logits, -1)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return {"token": tok, "log_prob": jnp.max(logits, -1) - log_z,
+                "log_z": log_z}
+
+
+def generate(engine: Engine, prompt, n_tokens: int, key: jax.Array,
+             img=None):
+    """Greedy generation loop (host-driven); returns (B, n_tokens) ids."""
+    h, state = engine.prefill(prompt, img=img)
+    out0 = engine.next_token_distribution(h, key)
+    state = ServeState(cache=state.cache, pos=state.pos,
+                       last_token=prompt[:, -1])
+    toks = []
+    step_fn = jax.jit(lambda s, k: engine.decode_step(s, k, img=img))
+    # replay the prompt through the cache, then free-run
+    for t in range(prompt.shape[1]):
+        tok_t = prompt[:, t] if not engine.cfg.n_codebooks \
+            else prompt[:, t, :]
+        state = dataclasses.replace(state, last_token=tok_t)
+        out, state = step_fn(state, jax.random.fold_in(key, t))
+    toks.append(out["token"])
+    for t in range(n_tokens - 1):
+        out, state = step_fn(state, jax.random.fold_in(key, 10_000 + t))
+        toks.append(out["token"])
+    return jnp.stack(toks, axis=1)

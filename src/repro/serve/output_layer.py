@@ -1,0 +1,161 @@
+"""Serve-time output layer — the paper's Eq. 2/3 under production sharding.
+
+Two lowered paths (both used by launch/dryrun.py):
+
+ * exact   : streaming chunked logits + online LSE + argmax over the
+             vocab-sharded head. O(V d / T) compute per chip, O(B) comms.
+ * mimps   : the paper's estimator, vocab-sharded block-IVF inside
+             shard_map: each model shard probes its local blocks, scores
+             them, tail-samples its local complement; combine = one psum
+             (log Z) + one O(k) all_gather (argmax candidates).
+             O((nb + p.br + l) d / T) compute per chip — sublinear in V.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# exact: streaming LSE + top-1 (XLA analogue of kernels/topk_z.py)
+# ---------------------------------------------------------------------------
+
+def streaming_logz_argmax(h: jax.Array, w: jax.Array, chunk: int = 8192
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """h (B, d), w (V, d) -> (log_z (B,), top_id (B,), top_score (B,)).
+
+    Chunks are shard-INTERLEAVED (row r of chunk (j, b) is b*n_chunks + j):
+    with the vocab contiguously sharded over 'model', every chunk spans all
+    shards so each chunk's logits dot is local — contiguous chunks would be
+    materialized with a full-logits all-reduce per chunk (see losses.py)."""
+    v, d = w.shape
+    pad = (-v) % chunk
+    wp = jnp.pad(w, ((0, pad), (0, 0))) if pad else w
+    n_chunks = wp.shape[0] // chunk
+    wc = wp.reshape(chunk, n_chunks, d).swapaxes(0, 1)
+    b = h.shape[0]
+
+    def body(carry, xs):
+        m, s, bi, bs = carry
+        wi, ci = xs
+        scores = (h @ wi.T).astype(jnp.float32)
+        col = jnp.arange(chunk) * n_chunks + ci
+        scores = jnp.where(col[None, :] < v, scores, NEG)
+        m_new = jnp.maximum(m, jnp.max(scores, -1))
+        s = s * jnp.exp(m - m_new) + jnp.sum(jnp.exp(scores - m_new[:, None]),
+                                             -1)
+        cmax = jnp.max(scores, -1)
+        carg = col[jnp.argmax(scores, -1)]
+        better = cmax > bs
+        return (m_new, s, jnp.where(better, carg, bi),
+                jnp.maximum(bs, cmax)), None
+
+    init = (jnp.full((b,), NEG, jnp.float32), jnp.zeros((b,), jnp.float32),
+            jnp.zeros((b,), jnp.int32), jnp.full((b,), NEG, jnp.float32))
+    (m, s, bi, bs), _ = lax.scan(body, init, (wc, jnp.arange(n_chunks)))
+    return m + jnp.log(s), bi, bs
+
+
+# ---------------------------------------------------------------------------
+# mimps: vocab-sharded block-IVF decode (the paper's technique, distributed)
+# ---------------------------------------------------------------------------
+
+class IVFSpecs(NamedTuple):
+    """Device-resident IVF arrays; leading (block) dim sharded over 'model'."""
+    v_blocks: jax.Array      # (nb, br, d)
+    centroids: jax.Array     # (nb, d)
+    radius: jax.Array        # (nb,)
+    valid: jax.Array         # (nb, br) bool
+
+
+def ivf_specs_for(vocab: int, d: int, block_rows: int, dtype,
+                  shard_multiple: int = 16) -> IVFSpecs:
+    """ShapeDtypeStruct skeleton for the dry run (perfect packing assumed).
+    Block count is rounded up to `shard_multiple` so the leading dim shards
+    over 'model' (the real builder pads clusters the same way)."""
+    nb = -(-vocab // block_rows)
+    nb = -(-nb // shard_multiple) * shard_multiple
+    sds = jax.ShapeDtypeStruct
+    return IVFSpecs(v_blocks=sds((nb, block_rows, d), dtype),
+                    centroids=sds((nb, d), dtype),
+                    radius=sds((nb,), jnp.float32),
+                    valid=sds((nb, block_rows), jnp.bool_))
+
+
+def ivf_partition_specs() -> IVFSpecs:
+    return IVFSpecs(v_blocks=P("model", None, None),
+                    centroids=P("model", None),
+                    radius=P("model"),
+                    valid=P("model", None))
+
+
+def _local_ivf_logz(ivf: IVFSpecs, h: jax.Array, key: jax.Array,
+                    n_probe_local: int, l_local: int,
+                    axis_name: str = "model"):
+    """shard_map body: each shard = its own local IVF over its vocab rows."""
+    nb_l, br, d = ivf.v_blocks.shape
+    shard = lax.axis_index(axis_name)
+    n_slots = nb_l * br
+    flat = ivf.v_blocks.reshape(n_slots, d)
+    flat_valid = ivf.valid.reshape(n_slots)
+
+    def one(q, k):
+        qn = jnp.linalg.norm(q.astype(jnp.float32))
+        cs = ivf.centroids @ q + ivf.radius * qn           # ball upper bound
+        _, bids = lax.top_k(cs, n_probe_local)
+        blocks = ivf.v_blocks[bids]                        # (p, br, d)
+        scores = jnp.einsum("pbd,d->pb", blocks, q).astype(jnp.float32)
+        bvalid = ivf.valid[bids]
+        scores = jnp.where(bvalid, scores, NEG)
+        head_lse = jax.nn.logsumexp(scores)
+        # tail: uniform slots, reject pads + probed blocks; scale S/l
+        slots = jax.random.randint(k, (l_local,), 0, n_slots)
+        sblk = slots // br
+        unprobed = ~jnp.any(sblk[:, None] == bids[None, :], axis=1)
+        ok = unprobed & flat_valid[slots]
+        tail = (flat[slots] @ q).astype(jnp.float32)
+        tail_lse = jax.nn.logsumexp(jnp.where(ok, tail, NEG))
+        log_tail = (jnp.log(jnp.float32(n_slots))
+                    - jnp.log(jnp.float32(l_local)) + tail_lse)
+        local_logz = jnp.logaddexp(head_lse, log_tail)
+        # local argmax candidate
+        fs = scores.reshape(-1)
+        am = jnp.argmax(fs)
+        cand_slot = bids[am // br] * br + am % br
+        return local_logz, fs[am], cand_slot
+
+    keys = jax.random.split(jax.random.fold_in(key, shard), h.shape[0])
+    local_logz, cand_s, cand_i = jax.vmap(one)(h, keys)
+    # combine: distributed LSE (log Z) + O(T) candidate merge (argmax)
+    m = lax.pmax(local_logz, axis_name)
+    z = lax.psum(jnp.exp(local_logz - m), axis_name)
+    log_z = m + jnp.log(z)
+    all_s = lax.all_gather(cand_s, axis_name, axis=0)      # (T, B)
+    all_i = lax.all_gather(cand_i, axis_name, axis=0)
+    all_shard = jnp.arange(all_s.shape[0])
+    best = jnp.argmax(all_s, axis=0)                       # (B,)
+    top_score = jnp.take_along_axis(all_s, best[None], 0)[0]
+    top_slot = jnp.take_along_axis(all_i, best[None], 0)[0]
+    top_global = best.astype(jnp.int32) * nb_l * br + top_slot
+    return log_z, top_global, top_score
+
+
+def sharded_ivf_decode(mesh, ivf: IVFSpecs, h: jax.Array, key: jax.Array,
+                       *, n_probe_local: int, l_local: int,
+                       batch_spec=P("data")):
+    """jit-composable shard_map wrapper. h (B, d) sharded over data."""
+    fn = functools.partial(_local_ivf_logz, n_probe_local=n_probe_local,
+                           l_local=l_local)
+    h_spec = P(*batch_spec, None)
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(ivf_partition_specs(), h_spec, P()),
+        out_specs=(P(*batch_spec), P(*batch_spec), P(*batch_spec)),
+        check_vma=False)(ivf, h, key)

@@ -1,0 +1,151 @@
+"""Fault-tolerant checkpointing.
+
+Design (DESIGN.md SS6):
+ * arrays are saved *logically* (fully-replicated numpy view) so a restart
+   can reshard onto ANY mesh — elastic down/up-scaling reuses the same file;
+ * writes are atomic (tmp dir + os.replace) so a node failure mid-write never
+   corrupts the latest-good checkpoint;
+ * optional async mode runs serialization in a daemon thread (training step
+   N+1 overlaps the write of step N);
+ * keep-last-K garbage collection;
+ * a manifest carries step, config fingerprint, and data-iterator state so
+   resume is exact (no replayed/skipped batches).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):                      # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ----------------------------------------------------------------
+
+    def save(self, step: int, state: Any, extra: Dict[str, Any] = None
+             ) -> None:
+        """Snapshot `state` (pytree) at `step`. Non-blocking if async."""
+        flat = _flatten(jax.device_get(state))
+        arrays = {}
+        for k, v in flat.items():
+            a = np.asarray(v)
+            if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+                a = a.astype(np.float32)   # npz-safe; restore() casts back
+            arrays[k.replace("/", "__")] = a
+        manifest = {"step": int(step), "time": time.time(),
+                    "keys": sorted(arrays), "extra": extra or {}}
+        self.wait()                                    # one writer at a time
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, arrays, manifest),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, arrays, manifest)
+
+    def _write(self, step: int, arrays, manifest) -> None:
+        tmp = os.path.join(self.dir, f".tmp_step_{step}")
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)                         # atomic publish
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                # a dir without manifest.json is a torn write -> ignore
+                if os.path.exists(os.path.join(self.dir, name,
+                                               "manifest.json")):
+                    out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int], like: Any,
+                shardings: Any = None) -> Tuple[Any, Dict]:
+        """Restore into the structure of `like`; optionally device_put with
+        `shardings` (same pytree structure) — this is where elastic restarts
+        reshard onto the current mesh."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat_like = _flatten(like)
+        vals = {}
+        for k, ref in flat_like.items():
+            arr = data[k.replace("/", "__")]
+            vals[k] = arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr
+        restored = _unflatten_like(like, vals)
+        if shardings is not None:
+            restored = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), restored, shardings)
+        return restored, manifest
+
+
+def _unflatten_like(like, vals, prefix=""):
+    if isinstance(like, dict):
+        return {k: _unflatten_like(v, vals, f"{prefix}{k}/")
+                for k, v in like.items()}
+    if hasattr(like, "_fields"):
+        return type(like)(*[
+            _unflatten_like(getattr(like, k), vals, f"{prefix}{k}/")
+            for k in like._fields])
+    if isinstance(like, (list, tuple)):
+        return type(like)(_unflatten_like(v, vals, f"{prefix}{i}/")
+                          for i, v in enumerate(like))
+    return vals[prefix[:-1]]

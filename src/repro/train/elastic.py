@@ -1,0 +1,73 @@
+"""Elastic scaling + straggler mitigation hooks.
+
+On a real cluster the coordinator detects node loss (missed heartbeats),
+rebuilds the mesh from surviving hosts, and everyone restores from the last
+logical checkpoint (checkpoint.py stores unsharded arrays, so resharding is
+device_put with the new mesh's shardings). This module implements the
+device-count-aware mesh rebuild + the step-time watchdog that flags
+stragglers; launch/train.py wires them together.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import jax
+
+
+def best_mesh_shape(n_devices: int, model_parallel: int
+                    ) -> Tuple[int, int]:
+    """(data, model) for the devices we actually have. Shrinks the model
+    axis only when the device count drops below the requested TP degree."""
+    mp = min(model_parallel, n_devices)
+    while n_devices % mp:
+        mp -= 1
+    return n_devices // mp, mp
+
+
+def make_elastic_mesh(model_parallel: int = 16,
+                      devices: Optional[List] = None):
+    devices = devices if devices is not None else jax.devices()
+    dp, mp = best_mesh_shape(len(devices), model_parallel)
+    import numpy as np
+    dev_array = np.asarray(devices[:dp * mp]).reshape(dp, mp)
+    return jax.sharding.Mesh(dev_array, ("data", "model"))
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """EMA step-time monitor: flags steps slower than `threshold` x EMA.
+
+    On TPU pods a flagged straggler triggers the control plane (replace the
+    host / rebalance); here the hook records events and (optionally) raises
+    after `max_consecutive` so the launcher can checkpoint + rebuild."""
+    threshold: float = 3.0
+    decay: float = 0.9
+    max_consecutive: int = 10
+    ema: float = 0.0
+    consecutive: int = 0
+    events: list = dataclasses.field(default_factory=list)
+    _t0: float = 0.0
+
+    def start_step(self):
+        self._t0 = time.perf_counter()
+
+    def end_step(self, step: int) -> bool:
+        dt = time.perf_counter() - self._t0
+        if self.ema == 0.0:
+            self.ema = dt
+            return False
+        is_straggler = dt > self.threshold * self.ema
+        if is_straggler:
+            self.consecutive += 1
+            self.events.append((step, dt, self.ema))
+        else:
+            self.consecutive = 0
+            self.ema = self.decay * self.ema + (1 - self.decay) * dt
+        if self.consecutive >= self.max_consecutive:
+            raise RuntimeError(
+                f"persistent straggler: {self.consecutive} consecutive slow "
+                f"steps (last {dt:.3f}s vs EMA {self.ema:.3f}s) — "
+                "checkpoint and rebuild the mesh")
+        return is_straggler

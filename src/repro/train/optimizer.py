@@ -1,0 +1,72 @@
+"""AdamW + cosine schedule + global-norm clipping — pure JAX (no optax).
+
+Optimizer state is kept in f32 regardless of (bf16) param dtype; update math
+runs in f32 and casts back — the standard mixed-precision recipe.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def lr_schedule(cfg: TrainConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree))
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(cfg: TrainConfig, params, grads, state: OptState
+                 ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = lr_schedule(cfg, state.step)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + 1e-8) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gnorm, "lr": lr}

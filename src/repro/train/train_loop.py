@@ -1,0 +1,95 @@
+"""Train-step factory: grad-accumulation microbatching, loss registry,
+metrics; the function lowered by the dry run and driven by launch/train.py."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, TrainConfig
+from ..models import Model
+from .losses import get_loss
+from .optimizer import OptState, adamw_update, init_opt_state
+from .compression import compress_psum
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    rng: jax.Array
+
+
+def init_train_state(model: Model, train_cfg: TrainConfig,
+                     key: jax.Array) -> TrainState:
+    kp, kr = jax.random.split(key)
+    params = model.init(kp)
+    return TrainState(params=params, opt=init_opt_state(params), rng=kr)
+
+
+def make_train_step(model: Model, train_cfg: TrainConfig, *,
+                    backend: str = "xla", pod_axis: str = None, mesh=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    microbatches > 1 folds the leading batch dim into a lax.scan that
+    accumulates gradients (activation memory / microbatch trade).
+    pod_axis: if set (multi-pod shard_map usage), gradients are additionally
+    psum'd over that axis with optional int8 compression.
+    """
+    loss_name = train_cfg.loss
+    loss_fn = get_loss(loss_name)
+    kwargs = {}
+    if loss_name in ("fused_ce", "selfnorm"):
+        kwargs["backend"] = backend
+        if mesh is not None:
+            from .losses import make_token_constraint
+            kwargs["constrain_fn"] = make_token_constraint(mesh)
+
+    def compute_loss(params, batch, key):
+        return loss_fn(model, params, batch, key, train_cfg, **kwargs)
+
+    grad_fn = jax.value_and_grad(compute_loss, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        key, new_rng = jax.random.split(state.rng)
+        mb = train_cfg.microbatches
+        if mb <= 1:
+            (loss, metrics), grads = grad_fn(state.params, batch, key)
+        else:
+            def split_mb(x):
+                # (B, ...) -> (mb, B/mb, ...) via (B/mb, mb) + swap so the
+                # batch ('data'-sharded) dim STAYS sharded and the scanned
+                # microbatch dim is replicated. A plain reshape(mb, B/mb)
+                # puts the data sharding on the scan dim and GSPMD
+                # all-gathers the full batch inside every microbatch
+                # (measured: 8.5 TB/step of collectives on rwkv6 train_4k).
+                return x.reshape(x.shape[0] // mb, mb,
+                                 *x.shape[1:]).swapaxes(0, 1)
+            batches = jax.tree.map(split_mb, batch)
+            keys = jax.random.split(key, mb)
+
+            def acc(carry, xs):
+                g_acc, l_acc = carry
+                b_i, k_i = xs
+                (l, m), g = grad_fn(state.params, b_i, k_i)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (grads, loss), ms = jax.lax.scan(acc, (g0, 0.0), (batches, keys))
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss / mb
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        if pod_axis is not None:
+            grads = compress_psum(grads, pod_axis,
+                                  mode=train_cfg.grad_compression)
+        params, opt, opt_metrics = adamw_update(
+            train_cfg, state.params, grads, state.opt)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss_total"] = loss
+        return TrainState(params=params, opt=opt, rng=new_rng), metrics
+
+    return train_step
