@@ -14,13 +14,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slower)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,t1,t2,t3,t4,kernels,roofline")
+                    help="comma list: fig1,t1,t2,t3,t4,kernels,roofline,decode")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (fig1_cdf, kernels_bench, roofline, table1_grid,
-                   table2_noise, table3_retrieval, table4_lbl)
+    from . import (decode_bench, fig1_cdf, kernels_bench, roofline,
+                   table1_grid, table2_noise, table3_retrieval, table4_lbl)
 
     csv = ["name,us_per_call,derived"]
 
@@ -49,6 +49,11 @@ def main() -> None:
     if sel("roofline"):
         rows, _ = roofline.run(quick=quick)
         csv.append(f"roofline_cells,{len(rows)},see artifacts/roofline.md")
+    if sel("decode"):
+        rep, us = decode_bench.run(quick=quick)
+        csv.append(f"decode_mimps,{us:.1f},"
+                   f"bytes_reduction={rep['bytes_reduction']:.1f}x;"
+                   f"bound_ok={rep['bound']['ok']}")
 
     print("\n== CSV ==")
     print("\n".join(csv))

@@ -1,21 +1,26 @@
 """Core: the paper's sublinear partition estimators + TPU-native MIPS."""
+from .decode import (DecodeOut, DecodePlan, make_plan, mimps_decode,
+                     plan_heads, plan_tail)
 from .estimators import (exact_log_z, mimps_log_z, uniform_log_z,
                          nmimps_log_z, mince_log_z, fmbe_log_z, fmbe_z,
                          mimps_ivf, estimate_log_z, relative_error,
-                         head_tail_log_z)
+                         head_tail_log_z, combine_head_tail_lse)
 from .feature_maps import (FeatureMap, FMBEState, make_feature_map,
                            apply_feature_map, build_fmbe, fmbe_estimate_z)
 from .kmeans import kmeans
 from .mince import solve_log_z, nce_objective, solver_convergence_trace
-from .mips import IVFIndex, build_ivf, probe, gather_scores, exact_top_k
+from .mips import (IVFIndex, build_ivf, probe, probe_batch, gather_scores,
+                   head_count, exact_top_k)
 from .partition_layer import PartitionLayer
 
 __all__ = [
     "exact_log_z", "mimps_log_z", "uniform_log_z", "nmimps_log_z",
     "mince_log_z", "fmbe_log_z", "fmbe_z", "mimps_ivf", "estimate_log_z",
-    "relative_error", "head_tail_log_z", "FeatureMap", "FMBEState",
+    "relative_error", "head_tail_log_z", "combine_head_tail_lse",
+    "DecodeOut", "DecodePlan", "make_plan", "mimps_decode", "plan_heads",
+    "plan_tail", "FeatureMap", "FMBEState",
     "make_feature_map", "apply_feature_map", "build_fmbe", "fmbe_estimate_z",
     "kmeans", "solve_log_z", "nce_objective", "solver_convergence_trace",
-    "IVFIndex", "build_ivf", "probe", "gather_scores", "exact_top_k",
-    "PartitionLayer",
+    "IVFIndex", "build_ivf", "probe", "probe_batch", "gather_scores",
+    "head_count", "exact_top_k", "PartitionLayer",
 ]

@@ -1,0 +1,180 @@
+"""Fused batched MIMPS decode: one pipeline from coarse probe to log-Ẑ.
+
+This is the serving-side realization of Eq. 5 (DESIGN.md SS4). Per decode
+step for a query batch h (Q, d):
+
+    probe_batch ──► (Q, p) block ids          one (Q,d)x(d,nb) matmul
+         │
+    plan_heads  ──► union table (U,) + membership mask (Q, U)
+    plan_tail   ──► l shared tail samples + rejection mask (Q, l)
+         │
+    ivf_decode  ──► head_lse, tail_lse, top-k     one Pallas kernel:
+         │          (block_q,d) tiles x scalar-prefetched blocks,
+         │          online LSE + running top-k, no (Q,p,br) HBM tensor
+         ▼
+    combine_head_tail_lse ──► log Ẑ          Eq. 5 with n_tail = N - k_eff
+
+Tail samples are drawn **once per step and shared across the batch** (each
+query still gets an unbiased tail: the slots are uniform and independent of
+q), which turns the tail gather into l row fetches + one (Q,d)x(d,l) matmul
+instead of Q*l scattered gathers. Rejection happens per query at block
+granularity; the Eq. 5 scale uses n_tail_total = N - k_eff with the
+*post-rejection* sample count — the Rao–Blackwellized form of the seed
+engine's N/l scale (both are unbiased; conditioning on the survivor count
+removes the rejection-noise component of the variance, at the cost of
+dropping the tail on the measure-zero-ish event that no sample survives).
+
+``mimps_decode(..., use_pallas=False)`` runs the same plan through an XLA
+gather path — the interpret/CPU reference the parity tests pin the kernel to.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ivf_score import ivf_decode
+from . import mips as _mips
+from .estimators import NEG_INF, combine_head_tail_lse
+
+
+class DecodePlan(NamedTuple):
+    block_ids: jax.Array    # (Q, p)  per-query probed blocks
+    head_ids: jax.Array     # (U,)    deduplicated union (pad = repeat last)
+    head_live: jax.Array    # ()      number of real (non-pad) union slots
+    head_member: jax.Array  # (Q, U)  bool membership mask
+    tail_blocks: jax.Array  # (l,)    block of each shared tail sample
+    tail_rows: jax.Array    # (l,)    row-in-block of each shared tail sample
+    tail_accept: jax.Array  # (Q, l)  bool rejection mask
+    k_eff: jax.Array        # (Q,)    real rows covered by probed blocks
+    n_accept: jax.Array     # (Q,)    post-rejection tail sample count
+
+
+class DecodeOut(NamedTuple):
+    log_z: jax.Array        # (Q,)
+    top_score: jax.Array    # (Q, k)
+    top_id: jax.Array       # (Q, k) original row ids
+    head_lse: jax.Array     # (Q,)
+    tail_lse: jax.Array     # (Q,)  -inf where no tail sample survived
+    k_eff: jax.Array        # (Q,)
+
+
+def plan_heads(block_ids: jax.Array, capacity: int):
+    """Deduplicate a (Q, p) probe table into (head_ids (capacity,),
+    member (Q, capacity)).
+
+    The union is sorted and compacted to the front; pad slots repeat the last
+    unique id (consecutive identical BlockSpec indices cost no extra DMA) and
+    are masked out of every query's membership row, so duplicates are never
+    double-counted. ``capacity`` must be >= the unique count; capacity =
+    min(Q*p, n_blocks) always is.
+    """
+    q, p = block_ids.shape
+    flat = jnp.sort(block_ids.reshape(-1))
+    is_new = jnp.concatenate(
+        [jnp.ones((1,), bool), flat[1:] != flat[:-1]])
+    tgt = jnp.cumsum(is_new) - 1                       # slot for each element
+    n_unique = tgt[-1] + 1
+    head_ids = jnp.full((capacity,), flat[-1], jnp.int32)
+    head_ids = head_ids.at[tgt].set(flat.astype(jnp.int32))
+    slot_live = jnp.arange(capacity) < n_unique
+    member = jnp.any(head_ids[None, :, None] == block_ids[:, None, :],
+                     axis=-1) & slot_live[None, :]
+    return head_ids, member, n_unique
+
+
+def plan_tail(index: _mips.IVFIndex, key: jax.Array, l: int,
+              block_ids: jax.Array):
+    """l uniform tail samples over *original* rows, shared across the batch.
+
+    Returns (tail_blocks (l,), tail_rows (l,), accept (Q, l)); sample j is
+    rejected for query q iff its block is in q's probed set (those rows are
+    already counted exactly in the head).
+    """
+    idx = jax.random.randint(key, (l,), 0, index.n)
+    slots = index.slot_of_row[idx]
+    tb = (slots // index.block_rows).astype(jnp.int32)
+    tr = (slots % index.block_rows).astype(jnp.int32)
+    accept = ~jnp.any(tb[None, None, :] == block_ids[:, :, None], axis=1)
+    return tb, tr, accept
+
+
+def make_plan(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
+              n_probe: int, l: int) -> DecodePlan:
+    """Probe + dedup + tail-sample: everything the fused kernel consumes."""
+    block_ids = _mips.probe_batch(index, h, n_probe)
+    capacity = min(h.shape[0] * n_probe, index.n_blocks)
+    head_ids, member, n_unique = plan_heads(block_ids, capacity)
+    tb, tr, accept = plan_tail(index, key, l, block_ids)
+    k_eff = _mips.head_count(index, block_ids)
+    return DecodePlan(block_ids=block_ids, head_ids=head_ids,
+                      head_live=n_unique.astype(jnp.int32),
+                      head_member=member, tail_blocks=tb, tail_rows=tr,
+                      tail_accept=accept, k_eff=k_eff,
+                      n_accept=accept.sum(axis=-1))
+
+
+def _decode_ref(index: _mips.IVFIndex, h: jax.Array, plan: DecodePlan,
+                k: int):
+    """XLA reference for the fused kernel: same plan, gather-based compute.
+
+    Materializes the (Q, U, br) score tensor the Pallas path exists to avoid;
+    numerics must match ivf_decode to float32 round-off.
+    """
+    br = index.block_rows
+    blocks = index.v_blocks[plan.head_ids]               # (U, br, d)
+    scores = jnp.einsum("ubd,qd->qub", blocks, h,
+                        preferred_element_type=jnp.float32)
+    logw = jnp.where(index.valid, 0.0, NEG_INF)[plan.head_ids]   # (U, br)
+    eff = scores + logw[None]
+    eff = jnp.where(plan.head_member[:, :, None], eff, NEG_INF)
+    q = h.shape[0]
+    flat = eff.reshape(q, -1)
+    head_lse = jax.nn.logsumexp(flat, axis=-1)
+    topv, pos = jax.lax.top_k(flat, k)
+    topi = plan.head_ids[pos // br] * br + pos % br       # global slot ids
+    rows = index.v_blocks[plan.tail_blocks, plan.tail_rows]      # (l, d)
+    ts = jnp.einsum("qd,ld->ql", h, rows,
+                    preferred_element_type=jnp.float32)   # (Q, l)
+    tail_lse = jax.nn.logsumexp(
+        jnp.where(plan.tail_accept, ts, NEG_INF), axis=-1)
+    # match the kernel's contract: queries with zero surviving samples get a
+    # genuine -inf, not NEG_INF + log(l)
+    tail_lse = jnp.where(jnp.any(plan.tail_accept, axis=-1), tail_lse,
+                         -jnp.inf)
+    return head_lse, tail_lse, topv, topi.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("n_probe", "l", "k", "use_pallas",
+                                   "block_q", "interpret"))
+def mimps_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
+                 *, n_probe: int, l: int, k: int = 1,
+                 use_pallas: bool = True, block_q: int = 128,
+                 interpret=None) -> DecodeOut:
+    """Batched sublinear decode: h (Q, d) -> log Ẑ, top-k rows, per Eq. 5.
+
+    Embedding bytes touched per step:
+      n_blocks*d (centroids) + U*br*d (deduplicated head) + l*d (tail rows)
+    vs V*d for the exact path. U <= min(Q*n_probe, n_blocks), and decode
+    batches serving overlapping contexts dedup toward U ~ n_probe.
+    """
+    plan = make_plan(index, h, key, n_probe, l)
+    if use_pallas:
+        row_logw = jnp.where(index.valid, 0.0, NEG_INF).astype(jnp.float32)
+        head_lse, tail_lse, topv, topi = ivf_decode(
+            index.v_blocks, h, plan.head_ids, plan.head_live,
+            plan.head_member, row_logw,
+            plan.tail_blocks, plan.tail_rows, plan.tail_accept,
+            k=k, block_q=block_q, interpret=interpret)
+    else:
+        head_lse, tail_lse, topv, topi = _decode_ref(index, h, plan, k)
+    n = index.n
+    log_z = combine_head_tail_lse(
+        head_lse, tail_lse,
+        (n - plan.k_eff).astype(jnp.float32),
+        plan.n_accept.astype(jnp.float32))
+    top_id = index.row_id.reshape(-1)[topi]
+    return DecodeOut(log_z=log_z, top_score=topv, top_id=top_id,
+                     head_lse=head_lse, tail_lse=tail_lse, k_eff=plan.k_eff)

@@ -21,6 +21,21 @@ from jax import lax
 NEG_INF = -1e30
 
 
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-portable ``shard_map``.
+
+    jax >= 0.5 exposes ``jax.shard_map`` (replication checking flag named
+    ``check_vma``); 0.4.x only has ``jax.experimental.shard_map.shard_map``
+    with the flag named ``check_rep``. All in-repo callers go through here.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
 def _dist_lse(local_lse: jax.Array, axis_name: str) -> jax.Array:
     """logsumexp across shards from per-shard logsumexps."""
     m = lax.pmax(local_lse, axis_name)

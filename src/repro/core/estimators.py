@@ -43,6 +43,25 @@ def exact_log_z(v: jax.Array, q: jax.Array) -> jax.Array:
 # Head/tail core (Eq. 5) in log domain
 # ---------------------------------------------------------------------------
 
+def combine_head_tail_lse(log_head: jax.Array, log_tail: jax.Array,
+                          n_tail_total: jax.Array,
+                          n_tail_samples: jax.Array) -> jax.Array:
+    """Eq. 5 combine from precomputed logsumexps (the fused-kernel interface):
+
+        log( exp(log_head) + (n_tail_total / n_tail_samples) * exp(log_tail) )
+
+    Guards the degenerate cases (empty tail population or zero surviving
+    samples) by dropping the tail term. log_tail == -inf (all samples masked)
+    is mapped through the same guard so no NaNs leak out of -inf + finite.
+    """
+    log_scale = jnp.log(jnp.maximum(n_tail_total, 1e-9)) - \
+        jnp.log(jnp.maximum(n_tail_samples, 1e-9))
+    ok = (n_tail_total > 0) & (n_tail_samples > 0)
+    log_tail = jnp.where(ok, jnp.maximum(log_tail, NEG_INF) + log_scale,
+                         NEG_INF)
+    return jnp.logaddexp(log_head, log_tail)
+
+
 def head_tail_log_z(head_scores: jax.Array,
                     tail_scores: jax.Array,
                     n_tail_total: jax.Array,
@@ -51,11 +70,9 @@ def head_tail_log_z(head_scores: jax.Array,
                     tail_mask: Optional[jax.Array] = None) -> jax.Array:
     """log( sum_head exp + (n_tail_total / n_tail_samples) * sum_tail exp )."""
     log_head = _lse(head_scores, head_mask) if head_scores.shape[-1] else NEG_INF
-    log_scale = jnp.log(jnp.maximum(n_tail_total, 1e-9)) - \
-        jnp.log(jnp.maximum(n_tail_samples, 1e-9))
     log_tail = _lse(tail_scores, tail_mask) if tail_scores.shape[-1] else NEG_INF
-    log_tail = jnp.where(n_tail_total > 0, log_scale + log_tail, NEG_INF)
-    return jnp.logaddexp(log_head, log_tail)
+    return combine_head_tail_lse(log_head, log_tail, n_tail_total,
+                                 n_tail_samples)
 
 
 # ---------------------------------------------------------------------------
@@ -168,7 +185,8 @@ class IVFEstimate(NamedTuple):
 def mimps_ivf(index: _mips.IVFIndex, q: jax.Array, n_probe: int, l: int,
               key: jax.Array) -> IVFEstimate:
     """Sublinear MIMPS: head = rows of top-n_probe IVF blocks (scored exactly),
-    tail = uniform rejection sample over unprobed rows, scaled by N/l.
+    tail = uniform rejection sample over unprobed rows, scaled by
+    (N - k_eff) / #survivors (Eq. 5's (N-k)/|U_l| with rejection).
 
     Cost: O(n_blocks d + n_probe block_rows d + l d)  <<  O(N d).
     """
@@ -183,12 +201,14 @@ def mimps_ivf(index: _mips.IVFIndex, q: jax.Array, n_probe: int, l: int,
     in_head = jnp.any(row_block[:, None] == blocks[None, :], axis=1)
     flat = index.v_blocks.reshape(-1, index.v_blocks.shape[-1])
     tail_scores = flat[slots] @ q
-    # E[(N/l) sum_{valid} exp] = (N - k_eff) * mean_tail  (rejection estimator)
-    log_head = _lse(head_scores, head_valid)
-    log_tail = _lse(tail_scores, ~in_head)
-    log_z = jnp.logaddexp(
-        log_head,
-        jnp.log(jnp.float32(n)) - jnp.log(jnp.float32(l)) + log_tail)
+    # Eq. 5 with rejection: the surviving samples are uniform over the
+    # N - k_eff unprobed rows, so scale by (N - k_eff) / #survivors — the
+    # Rao-Blackwellization (over the survivor count) of the equally unbiased
+    # N / l scale; conditioning removes the rejection-noise variance term.
+    log_z = head_tail_log_z(head_scores, tail_scores,
+                            (n - k_eff).astype(jnp.float32),
+                            jnp.sum(~in_head).astype(jnp.float32),
+                            head_mask=head_valid, tail_mask=~in_head)
     masked = jnp.where(head_valid, head_scores, NEG_INF)
     best = jnp.argmax(masked)
     top_id = index.row_id[blocks[best // index.block_rows],

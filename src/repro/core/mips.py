@@ -101,9 +101,27 @@ def probe(index: IVFIndex, q: jax.Array, n_probe: int,
     block whose *bound* is below the argmax's score — much higher rank-1
     recall than mean-centroid ranking on norm-skewed (word2vec-like) data.
     """
-    c_scores = index.block_centroids @ q
+    c_scores = (index.block_centroids @ q).astype(jnp.float32)
     if bound:
-        c_scores = c_scores + index.block_radius * jnp.linalg.norm(q)
+        c_scores = c_scores + index.block_radius * \
+            jnp.linalg.norm(q.astype(jnp.float32))
+    _, ids = jax.lax.top_k(c_scores, n_probe)
+    return ids.astype(jnp.int32)
+
+
+def probe_batch(index: IVFIndex, q: jax.Array, n_probe: int,
+                bound: bool = True) -> jax.Array:
+    """Batched coarse probe: q (Q, d) -> (Q, p) block ids.
+
+    One dense (Q, d) x (d, n_blocks) matmul scores every query against every
+    block centroid — the MXU-saturating replacement for vmap(probe), and the
+    first stage of the fused decode pipeline (DESIGN.md SS4). Same ball-bound
+    ranking as `probe`; `jax.vmap(probe)` and `probe_batch` agree exactly.
+    """
+    c_scores = (q @ index.block_centroids.T).astype(jnp.float32)  # (Q, nb)
+    if bound:
+        qn = jnp.linalg.norm(q.astype(jnp.float32), axis=-1, keepdims=True)
+        c_scores = c_scores + index.block_radius[None, :] * qn
     _, ids = jax.lax.top_k(c_scores, n_probe)
     return ids.astype(jnp.int32)
 
@@ -123,8 +141,12 @@ def gather_scores(index: IVFIndex, q: jax.Array,
 
 
 def head_count(index: IVFIndex, block_ids: jax.Array) -> jax.Array:
-    """Number of real (non-pad) rows covered by the probed blocks (k_eff)."""
-    return index.valid[block_ids].sum()
+    """Number of real (non-pad) rows covered by the probed blocks (k_eff).
+
+    block_ids (p,) -> scalar, or batched (Q, p) -> (Q,). This is the
+    per-query head size Eq. 5 subtracts from N for the tail scale.
+    """
+    return index.valid[block_ids].sum(axis=(-2, -1))
 
 
 @partial(jax.jit, static_argnames=("k",))

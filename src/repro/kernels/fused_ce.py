@@ -63,8 +63,30 @@ def _fwd_kernel(h_ref, w_ref, lab_ref, nll_ref, lse_ref,
         nll_ref[...] = lse - p_scr[...]
 
 
-def _dh_kernel(h_ref, w_ref, lab_ref, lse_ref, gn_ref, go_ref, dh_ref,
-               *, block_v: int, v_total: int):
+def _bwd_kernel(h_ref, w_ref, lab_ref, lse_ref, gn_ref, go_ref, dw_in_ref,
+                dh_ref, dw_ref, *, block_v: int, v_total: int,
+                alias_dw: bool):
+    """One fused backward step: the (Tt, Vt) score tile and its softmax are
+    computed ONCE and feed both dh and dW (the seed ran two kernels, paying
+    the matmul + softmax recompute and the h/w tile traffic twice).
+
+    Grid is (gt, gv) with the vocab axis innermost:
+      * dh block (ti): revisited consecutively across the vi sweep, so it
+        accumulates in VMEM and writes back once per sweep.
+      * dW block (vi): revisited once per sweep (stride gv). Two modes:
+          alias_dw=True (compiled TPU): accumulate through HBM via
+            input_output_aliases — read the running total from the aliased
+            input, add this tile's contribution, write back. The caller pads
+            the vocab grid to gv >= 3, putting >= 2 full grid steps between
+            the write-back of step s and the (lookahead-1) prefetch of step
+            s+gv. NOTE: this path is exercised only on real TPU — interpret
+            mode (CI) takes the alias_dw=False branch below.
+          alias_dw=False (interpret): the interpreter loads/stores out blocks
+            around every step, so plain out-block accumulation is exact
+            (the aliased input is never re-read there, which would drop all
+            but the last t-sweep's contribution).
+    """
+    ti = pl.program_id(0)
     vi = pl.program_id(1)
 
     @pl.when(vi == 0)
@@ -82,28 +104,16 @@ def _dh_kernel(h_ref, w_ref, lab_ref, lse_ref, gn_ref, go_ref, dh_ref,
     dh_ref[...] += jax.lax.dot_general(
         coef.astype(w.dtype), w, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
-
-
-def _dw_kernel(h_ref, w_ref, lab_ref, lse_ref, gn_ref, go_ref, dw_ref,
-               *, block_v: int, v_total: int):
-    vi = pl.program_id(0)
-    ti = pl.program_id(1)
-
-    @pl.when(ti == 0)
-    def _init():
-        dw_ref[...] = jnp.zeros_like(dw_ref)
-
-    h = h_ref[...]
-    w = w_ref[...]
-    scores = jax.lax.dot_general(
-        h, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    col = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-    p = jnp.where(col < v_total, jnp.exp(scores - lse_ref[...]), 0.0)
-    onehot = jnp.where(col == lab_ref[...], 1.0, 0.0)
-    coef = gn_ref[...] * p - go_ref[...] * onehot       # (Tt, Vt)
-    dw_ref[...] += jax.lax.dot_general(
+    dw_delta = jax.lax.dot_general(
         coef.astype(h.dtype), h, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
+    if alias_dw:
+        dw_ref[...] = dw_in_ref[...] + dw_delta
+    else:
+        @pl.when(ti == 0)
+        def _init_dw():
+            dw_ref[...] = jnp.zeros_like(dw_ref)
+        dw_ref[...] += dw_delta
 
 
 def _pad_to(x, m, axis):
@@ -158,7 +168,13 @@ def _scratch(block_t):
 
 def fused_ce_bwd(h, w, labels, lse, g_nll, g_lse, *, block_t=256, block_v=512,
                  interpret=None):
-    """Backward: (dh, dw). gn = g_nll + g_lse (softmax term), go = g_nll."""
+    """Backward: (dh, dw) from ONE fused pallas_call.
+
+    gn = g_nll + g_lse (softmax term), go = g_nll. The vocab grid is padded
+    to at least three blocks (pad columns contribute exactly zero: p is
+    masked by col < v_total and labels never hit pad columns) so the dW
+    accumulate-through-HBM revisit stride is >= 3 — see _bwd_kernel.
+    """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     t, d = h.shape
@@ -167,6 +183,8 @@ def fused_ce_bwd(h, w, labels, lse, g_nll, g_lse, *, block_t=256, block_v=512,
     block_v = min(block_v, max(128, v))
     hp = _pad_to(h, block_t, 0)
     wp = _pad_to(w, block_v, 0)
+    if wp.shape[0] < 3 * block_v:
+        wp = _pad_to(wp, 3 * block_v, 0)
     lab = _pad_to(labels.astype(jnp.int32)[:, None], block_t, 0)
     lsep = _pad_to(lse[:, None], block_t, 0)
     gn = _pad_to((g_nll + g_lse).astype(jnp.float32)[:, None], block_t, 0)
@@ -174,8 +192,10 @@ def fused_ce_bwd(h, w, labels, lse, g_nll, g_lse, *, block_t=256, block_v=512,
     tp, vp = hp.shape[0], wp.shape[0]
     gt, gv = tp // block_t, vp // block_v
 
-    dh = pl.pallas_call(
-        functools.partial(_dh_kernel, block_v=block_v, v_total=v),
+    dw0 = jnp.zeros((vp, d), jnp.float32)
+    dh, dw = pl.pallas_call(
+        functools.partial(_bwd_kernel, block_v=block_v, v_total=v,
+                          alias_dw=not interpret),
         grid=(gt, gv),
         in_specs=[
             pl.BlockSpec((block_t, d), lambda ti, vi: (ti, 0)),
@@ -184,26 +204,18 @@ def fused_ce_bwd(h, w, labels, lse, g_nll, g_lse, *, block_t=256, block_v=512,
             pl.BlockSpec((block_t, 1), lambda ti, vi: (ti, 0)),
             pl.BlockSpec((block_t, 1), lambda ti, vi: (ti, 0)),
             pl.BlockSpec((block_t, 1), lambda ti, vi: (ti, 0)),
+            pl.BlockSpec((block_v, d), lambda ti, vi: (vi, 0)),
         ],
-        out_specs=pl.BlockSpec((block_t, d), lambda ti, vi: (ti, 0)),
-        out_shape=jax.ShapeDtypeStruct((tp, d), jnp.float32),
-        interpret=interpret,
-    )(hp, wp, lab, lsep, gn, go)
-
-    dw = pl.pallas_call(
-        functools.partial(_dw_kernel, block_v=block_v, v_total=v),
-        grid=(gv, gt),
-        in_specs=[
-            pl.BlockSpec((block_t, d), lambda vi, ti: (ti, 0)),
-            pl.BlockSpec((block_v, d), lambda vi, ti: (vi, 0)),
-            pl.BlockSpec((block_t, 1), lambda vi, ti: (ti, 0)),
-            pl.BlockSpec((block_t, 1), lambda vi, ti: (ti, 0)),
-            pl.BlockSpec((block_t, 1), lambda vi, ti: (ti, 0)),
-            pl.BlockSpec((block_t, 1), lambda vi, ti: (ti, 0)),
+        out_specs=[
+            pl.BlockSpec((block_t, d), lambda ti, vi: (ti, 0)),
+            pl.BlockSpec((block_v, d), lambda ti, vi: (vi, 0)),
         ],
-        out_specs=pl.BlockSpec((block_v, d), lambda vi, ti: (vi, 0)),
-        out_shape=jax.ShapeDtypeStruct((vp, d), jnp.float32),
+        out_shape=[
+            jax.ShapeDtypeStruct((tp, d), jnp.float32),
+            jax.ShapeDtypeStruct((vp, d), jnp.float32),
+        ],
+        input_output_aliases={6: 1},
         interpret=interpret,
-    )(hp, wp, lab, lsep, gn, go)
+    )(hp, wp, lab, lsep, gn, go, dw0)
 
     return dh[:t].astype(h.dtype), dw[:v].astype(w.dtype)

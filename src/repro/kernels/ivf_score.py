@@ -1,22 +1,46 @@
-"""Scalar-prefetch block-gather scoring — the TPU-native S_k(q) retrieval.
+"""Scalar-prefetch block-gather scoring + the fused batched MIMPS decode
+kernel — the TPU-native S_k(q) retrieval stage (DESIGN.md SS4).
 
-The sublinear step of MIMPS: per query, only the ``n_probe`` vocab blocks
-selected by the coarse (centroid) stage are pulled HBM->VMEM and scored. The
-probed block ids are scalar-prefetched into SMEM so the BlockSpec index_map
-can address HBM blocks *data-dependently* — the canonical Pallas block-sparse
-pattern (MoE dispatch, block-sparse attention) applied to retrieval.
+The sublinear step of MIMPS: only the vocab blocks selected by the coarse
+(centroid) stage are pulled HBM->VMEM and scored. Probed block ids are
+scalar-prefetched into SMEM so the BlockSpec index_map can address HBM blocks
+*data-dependently* — the canonical Pallas block-sparse pattern (MoE dispatch,
+block-sparse attention) applied to retrieval.
 
-HBM bytes per decode step drop from  V*d  to  n_probe*block_rows*d
-(+ n_blocks*d for centroids) — e.g. gemma3-4b (V=262144, block 512, probes 16):
-32x fewer output-embedding bytes.
+Two kernels:
+
+ * ``ivf_score``  — the original per-query gather-score kernel. Grid (Q, p),
+   query tile (1, d): MXU utilization <= 1/128 and the scores round-trip
+   through a (Q, p, br) HBM tensor. Kept as the simple reference/bench kernel.
+
+ * ``ivf_decode`` — the fused batched decode pipeline. Grid
+   (Q/block_q, U + l): each grid step scores a **(block_q, d) query tile**
+   against one scalar-prefetched vocab block and folds the result directly
+   into per-query online-logsumexp accumulators (head and tail separately)
+   and a running top-k (the ``_select_topk`` sweep shared with
+   ``kernels.topk_z``). Head scores never touch HBM; the only embedding
+   traffic is the U deduplicated head blocks (U*br*d) plus l tail *rows*
+   (l*d) fetched row-granularly through the same scalar-prefetch mechanism.
+
+HBM bytes per decode step drop from  V*d  to  U*br*d + l*d
+(+ n_blocks*d for centroids) — e.g. gemma3-4b (V=262144, block 512,
+16 shared probes, l=256): ~30x fewer output-embedding bytes.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .topk_z import NEG, _select_topk
+
+
+# ---------------------------------------------------------------------------
+# per-query gather-score (reference kernel; (Q, p, br) output)
+# ---------------------------------------------------------------------------
 
 def _ivf_kernel(ids_ref, h_ref, w_ref, out_ref):
     # h_ref: (1, d) query row; w_ref: (1, br, d) gathered block
@@ -31,7 +55,8 @@ def ivf_score(w_blocks, h, block_ids, *, interpret=None):
     """w_blocks (nb, br, d), h (Q, d), block_ids (Q, p) -> scores (Q, p, br).
 
     Only the addressed blocks are read from HBM: the grid is (Q, p) and the
-    w_blocks index_map consults the scalar-prefetched id table.
+    w_blocks index_map consults the scalar-prefetched id table. The serving
+    path uses ``ivf_decode`` instead, which never materializes this tensor.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -52,3 +77,174 @@ def ivf_score(w_blocks, h, block_ids, *, interpret=None):
         out_shape=jax.ShapeDtypeStruct((q, p, br), jnp.float32),
         interpret=interpret,
     )(block_ids.astype(jnp.int32), h, w_blocks)
+
+
+# ---------------------------------------------------------------------------
+# fused batched decode: probe table -> (head lse, tail lse, top-k) per query
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(hid_ref, live_ref, tb_ref, tr_ref,       # scalar prefetch
+                   h_ref, wh_ref, logw_ref, member_ref, wt_ref, acc_ref,
+                   hlse_ref, tlse_ref, topv_ref, topi_ref,
+                   mh_scr, sh_scr, mt_scr, st_scr, tv_scr, ti_scr,
+                   *, k: int, n_head: int, block_rows: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        mh_scr[...] = jnp.full_like(mh_scr, NEG)
+        sh_scr[...] = jnp.zeros_like(sh_scr)
+        mt_scr[...] = jnp.full_like(mt_scr, NEG)
+        st_scr[...] = jnp.zeros_like(st_scr)
+        tv_scr[...] = jnp.full_like(tv_scr, NEG)
+        ti_scr[...] = jnp.zeros_like(ti_scr)
+
+    h = h_ref[...]                                          # (bq, d)
+
+    # only the live_ref[0] <= n_head slots hold real unique blocks; pad slots
+    # repeat the last id (no DMA) and are fully masked, so skip their matmul
+    @pl.when(si < live_ref[0])
+    def _head_step():
+        w = wh_ref[0]                                       # (br, d)
+        scores = jax.lax.dot_general(
+            h, w, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)             # (bq, br)
+        scores = scores + logw_ref[...]                     # pad rows -> NEG
+        member = member_ref[...]                            # (bq, 1) 0/1
+        eff = jnp.where(member > 0, scores, NEG)
+        m_prev = mh_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(eff, axis=1, keepdims=True))
+        contrib = jnp.where(eff > NEG * 0.5,
+                            jnp.exp(eff - m_new), 0.0)      # NEG-safe
+        sh_scr[...] = (sh_scr[...] * jnp.exp(m_prev - m_new) +
+                       jnp.sum(contrib, axis=1, keepdims=True))
+        mh_scr[...] = m_new
+        # running top-k over global slot ids (block*br + row)
+        col = (hid_ref[si] * block_rows +
+               jax.lax.broadcasted_iota(jnp.int32, eff.shape, 1))
+        cand_v = jnp.concatenate([tv_scr[...], eff], axis=1)
+        cand_i = jnp.concatenate([ti_scr[...], col], axis=1)
+        tv, ti = _select_topk(cand_v, cand_i, k)
+        tv_scr[...] = tv
+        ti_scr[...] = ti
+
+    @pl.when(si >= n_head)
+    def _tail_step():
+        row = wt_ref[0]                                     # (1, d)
+        s = jax.lax.dot_general(
+            h, row, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)             # (bq, 1)
+        acc = acc_ref[...]                                  # (bq, 1) 0/1
+        eff = jnp.where(acc > 0, s, NEG)
+        m_prev = mt_scr[...]
+        m_new = jnp.maximum(m_prev, eff)
+        contrib = jnp.where(eff > NEG * 0.5, jnp.exp(eff - m_new), 0.0)
+        st_scr[...] = st_scr[...] * jnp.exp(m_prev - m_new) + contrib
+        mt_scr[...] = m_new
+
+    @pl.when(si == pl.num_programs(1) - 1)
+    def _fin():
+        hlse_ref[...] = mh_scr[...] + jnp.log(sh_scr[...])
+        tlse_ref[...] = mt_scr[...] + jnp.log(st_scr[...])
+        topv_ref[...] = tv_scr[...]
+        topi_ref[...] = ti_scr[...]
+
+
+def ivf_decode(w_blocks, h, head_ids, head_live, head_member, row_logw,
+               tail_blocks, tail_rows, tail_accept,
+               *, k: int = 1, block_q: int = 128, interpret=None):
+    """Fused batched MIMPS decode over a deduplicated probe plan.
+
+    Inputs (see ``core.decode`` for plan construction):
+      w_blocks    (nb, br, d)  block-IVF embedding rows
+      h           (Q, d)       query batch
+      head_ids    (U,) int32   union of probed block ids (pad = repeat last,
+                               masked out via head_member; repeated consecutive
+                               ids cost no extra DMA)
+      head_live   () int32     number of real (non-pad) union slots; head
+                               compute is skipped for slots >= head_live, so
+                               per-step head work is O(unique blocks), not
+                               O(capacity)
+      head_member (Q, U) bool  query q probes union slot u
+      row_logw    (nb, br) f32 0 for real rows, NEG for cluster-pad rows
+      tail_blocks (l,) int32   block of each shared tail sample
+      tail_rows   (l,) int32   row-within-block of each shared tail sample
+      tail_accept (Q, l) bool  sample j survives rejection for query q
+
+    Returns (head_lse (Q,), tail_lse (Q,), topv (Q, k), topi (Q, k)) with
+    topi global *slot* ids (block*br + row); map through row_id outside.
+    Queries with zero accepted tail samples get tail_lse == -inf.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    nb, br, d = w_blocks.shape
+    q = h.shape[0]
+    n_head = head_ids.shape[0]
+    l = tail_blocks.shape[0]
+    assert l >= 1, "fused decode needs at least one tail sample"
+    block_q = min(block_q, max(8, q))
+    pad_q = (-q) % block_q
+    hp = jnp.pad(h, ((0, pad_q), (0, 0)))
+    member_p = jnp.pad(head_member.astype(jnp.float32), ((0, pad_q), (0, 0)))
+    accept_p = jnp.pad(tail_accept.astype(jnp.float32), ((0, pad_q), (0, 0)))
+    qp = hp.shape[0]
+
+    def _hs(si):
+        return jnp.minimum(si, n_head - 1)
+
+    def _ts(si):
+        return jnp.clip(si - n_head, 0, l - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(qp // block_q, n_head + l),
+        in_specs=[
+            pl.BlockSpec((block_q, d),
+                         lambda qi, si, hid, lv, tb, tr: (qi, 0)),
+            # head: whole probed block; clamped (hence DMA-elided) on tail steps
+            pl.BlockSpec((1, br, d),
+                         lambda qi, si, hid, lv, tb, tr: (hid[_hs(si)], 0, 0)),
+            pl.BlockSpec((1, br),
+                         lambda qi, si, hid, lv, tb, tr: (hid[_hs(si)], 0)),
+            pl.BlockSpec((block_q, 1),
+                         lambda qi, si, hid, lv, tb, tr: (qi, _hs(si))),
+            # tail: single (1, 1, d) row of the addressed block — row-granular
+            # gather through the same scalar-prefetch mechanism (l*d floats)
+            pl.BlockSpec((1, 1, d),
+                         lambda qi, si, hid, lv, tb, tr: (tb[_ts(si)],
+                                                          tr[_ts(si)], 0)),
+            pl.BlockSpec((block_q, 1),
+                         lambda qi, si, hid, lv, tb, tr: (qi, _ts(si))),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, 1), lambda qi, si, *_: (qi, 0)),
+            pl.BlockSpec((block_q, 1), lambda qi, si, *_: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, si, *_: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, si, *_: (qi, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+    )
+    kernel = functools.partial(_decode_kernel, k=k, n_head=n_head,
+                               block_rows=br)
+    hlse, tlse, topv, topi = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((qp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((qp, k), jnp.float32),
+            jax.ShapeDtypeStruct((qp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(head_ids.astype(jnp.int32),
+      jnp.asarray(head_live, jnp.int32).reshape(1),
+      tail_blocks.astype(jnp.int32), tail_rows.astype(jnp.int32),
+      hp, w_blocks, row_logw, member_p, w_blocks, accept_p)
+    return hlse[:q, 0], tlse[:q, 0], topv[:q], topi[:q]

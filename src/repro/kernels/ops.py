@@ -60,6 +60,10 @@ def ivf_block_scores(w_blocks: jax.Array, h: jax.Array,
     return _ivf.ivf_score(w_blocks, h, block_ids)
 
 
+# The fused decode kernel (_ivf.ivf_decode) is consumed through its planning
+# layer, core.decode.mimps_decode (itself jitted) — no bare wrapper here.
+
+
 # re-export oracles for benches/tests
 fused_ce_ref = _ref.fused_ce_ref
 topk_z_ref = _ref.topk_z_ref

@@ -3,7 +3,10 @@ probabilities — the paper's inference-time use case (Eq. 2/3).
 
 decode_step cost at the output layer:
   exact     O(V d)         (fused one-pass: kernels.topk_z)
-  mimps     O(nb d + p*br d + l d)   — sublinear via block-IVF
+  mimps     O(nb d + U*br d + l d)  — sublinear fused pipeline (core.decode):
+            batched coarse probe, deduplicated head blocks, shared tail
+            sample; one Pallas kernel from probe table to log-Ẑ under
+            use_pallas, the XLA gather reference otherwise.
   selfnorm  O(k d)         (head only; assumes Z == 1)
 """
 from __future__ import annotations
@@ -16,7 +19,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..core import mips
-from ..core.estimators import NEG_INF
+from ..core.decode import mimps_decode
 from ..models import Model
 
 
@@ -91,31 +94,14 @@ class Engine:
             return {"token": tok, "log_prob": top - log_z, "log_z": log_z}
 
         if pc.method == "mimps" and self.index is not None:
-            def one(q, k):
-                blocks = mips.probe(self.index, q, pc.n_probe)
-                scores, valid = mips.gather_scores(self.index, q, blocks)
-                scores = jnp.where(valid, scores, NEG_INF)
-                n = self.index.n
-                idx = jax.random.randint(k, (pc.l,), 0, n)
-                slots = self.index.slot_of_row[idx]
-                in_head = jnp.any((slots // self.index.block_rows)[:, None]
-                                  == blocks[None, :], axis=1)
-                flat = self.index.v_blocks.reshape(-1, q.shape[-1])
-                tail = flat[slots] @ q
-                log_head = jax.nn.logsumexp(scores)
-                log_tail = jax.nn.logsumexp(
-                    jnp.where(in_head, NEG_INF, tail))
-                log_z = jnp.logaddexp(
-                    log_head, jnp.log(jnp.float32(n))
-                    - jnp.log(jnp.float32(pc.l)) + log_tail)
-                best = jnp.argmax(scores)
-                tok = self.index.row_id[blocks[best // self.index.block_rows],
-                                        best % self.index.block_rows]
-                return tok, scores[best], log_z
-            keys = jax.random.split(key, h.shape[0])
-            tok, top, log_z = jax.vmap(one)(h, keys)
-            return {"token": tok.astype(jnp.int32),
-                    "log_prob": top - log_z, "log_z": log_z}
+            # fused batched pipeline: one coarse-probe matmul, deduplicated
+            # head blocks, shared tail sample, Eq. 5 combine with
+            # n_tail_total = N - k_eff and the post-rejection sample count.
+            out = mimps_decode(self.index, h, key, n_probe=pc.n_probe,
+                               l=pc.l, k=1, use_pallas=self.use_pallas)
+            return {"token": out.top_id[:, 0].astype(jnp.int32),
+                    "log_prob": out.top_score[:, 0] - out.log_z,
+                    "log_z": out.log_z}
 
         if pc.method == "selfnorm":
             # head-only argmax; Z assumed 1 (trained with selfnorm loss)

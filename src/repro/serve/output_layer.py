@@ -20,6 +20,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from ..core.distributed import shard_map
+from ..core.estimators import combine_head_tail_lse
+
 NEG = -1e30
 
 
@@ -99,40 +102,52 @@ def ivf_partition_specs() -> IVFSpecs:
 def _local_ivf_logz(ivf: IVFSpecs, h: jax.Array, key: jax.Array,
                     n_probe_local: int, l_local: int,
                     axis_name: str = "model"):
-    """shard_map body: each shard = its own local IVF over its vocab rows."""
+    """shard_map body: each shard = its own local IVF over its vocab rows.
+
+    Batched like core.decode: one (B, d) x (d, nb_l) centroid matmul probes
+    every query at once, and the l_local tail slots are drawn once and shared
+    across the batch (one (B, d) x (d, l) matmul). Eq. 5 scale uses the
+    per-query unprobed population and post-rejection sample count.
+    """
     nb_l, br, d = ivf.v_blocks.shape
     shard = lax.axis_index(axis_name)
     n_slots = nb_l * br
     flat = ivf.v_blocks.reshape(n_slots, d)
     flat_valid = ivf.valid.reshape(n_slots)
 
-    def one(q, k):
-        qn = jnp.linalg.norm(q.astype(jnp.float32))
-        cs = ivf.centroids @ q + ivf.radius * qn           # ball upper bound
-        _, bids = lax.top_k(cs, n_probe_local)
-        blocks = ivf.v_blocks[bids]                        # (p, br, d)
-        scores = jnp.einsum("pbd,d->pb", blocks, q).astype(jnp.float32)
-        bvalid = ivf.valid[bids]
-        scores = jnp.where(bvalid, scores, NEG)
-        head_lse = jax.nn.logsumexp(scores)
-        # tail: uniform slots, reject pads + probed blocks; scale S/l
-        slots = jax.random.randint(k, (l_local,), 0, n_slots)
-        sblk = slots // br
-        unprobed = ~jnp.any(sblk[:, None] == bids[None, :], axis=1)
-        ok = unprobed & flat_valid[slots]
-        tail = (flat[slots] @ q).astype(jnp.float32)
-        tail_lse = jax.nn.logsumexp(jnp.where(ok, tail, NEG))
-        log_tail = (jnp.log(jnp.float32(n_slots))
-                    - jnp.log(jnp.float32(l_local)) + tail_lse)
-        local_logz = jnp.logaddexp(head_lse, log_tail)
-        # local argmax candidate
-        fs = scores.reshape(-1)
-        am = jnp.argmax(fs)
-        cand_slot = bids[am // br] * br + am % br
-        return local_logz, fs[am], cand_slot
+    # coarse probe, all queries at once (ball upper bound ranking)
+    qn = jnp.linalg.norm(h.astype(jnp.float32), axis=-1, keepdims=True)
+    cs = (h @ ivf.centroids.T).astype(jnp.float32) + ivf.radius[None] * qn
+    _, bids = lax.top_k(cs, n_probe_local)                 # (B, p)
+    blocks = ivf.v_blocks[bids]                            # (B, p, br, d)
+    scores = jnp.einsum("bpRd,bd->bpR", blocks, h,
+                        preferred_element_type=jnp.float32)
+    bvalid = ivf.valid[bids]                               # (B, p, br)
+    scores = jnp.where(bvalid, scores, NEG)
+    k_eff = bvalid.sum(axis=(-2, -1))                      # (B,)
+    head_lse = jax.nn.logsumexp(scores.reshape(h.shape[0], -1), axis=-1)
 
-    keys = jax.random.split(jax.random.fold_in(key, shard), h.shape[0])
-    local_logz, cand_s, cand_i = jax.vmap(one)(h, keys)
+    # shared tail sample: uniform slots, reject pads + per-query probed blocks
+    slots = jax.random.randint(jax.random.fold_in(key, shard),
+                               (l_local,), 0, n_slots)
+    sblk = slots // br
+    unprobed = ~jnp.any(sblk[None, :, None] == bids[:, None, :], axis=-1)
+    ok = unprobed & flat_valid[slots][None, :]             # (B, l)
+    tail = jnp.einsum("bd,ld->bl", h, flat[slots],
+                      preferred_element_type=jnp.float32)
+    tail_lse = jax.nn.logsumexp(jnp.where(ok, tail, NEG), axis=-1)
+    n_valid = flat_valid.sum()
+    n_tail_total = jnp.maximum(n_valid - k_eff, 0).astype(jnp.float32)
+    n_acc = ok.sum(axis=-1).astype(jnp.float32)
+    local_logz = combine_head_tail_lse(head_lse, tail_lse, n_tail_total,
+                                       n_acc)
+
+    # local argmax candidate
+    fs = scores.reshape(h.shape[0], -1)                    # (B, p*br)
+    am = jnp.argmax(fs, axis=-1)
+    cand_s = jnp.take_along_axis(fs, am[:, None], -1)[:, 0]
+    cand_i = (jnp.take_along_axis(bids, (am // br)[:, None], -1)[:, 0] * br
+              + am % br)
     # combine: distributed LSE (log Z) + O(T) candidate merge (argmax)
     m = lax.pmax(local_logz, axis_name)
     z = lax.psum(jnp.exp(local_logz - m), axis_name)
@@ -154,7 +169,7 @@ def sharded_ivf_decode(mesh, ivf: IVFSpecs, h: jax.Array, key: jax.Array,
     fn = functools.partial(_local_ivf_logz, n_probe_local=n_probe_local,
                            l_local=l_local)
     h_spec = P(*batch_spec, None)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(ivf_partition_specs(), h_spec, P()),
         out_specs=(P(*batch_spec), P(*batch_spec), P(*batch_spec)),

@@ -1,0 +1,58 @@
+"""Deterministic stand-in for `hypothesis` on containers that lack it.
+
+Provides just the surface the test-suite uses — ``given``, ``settings`` and
+``strategies.integers`` / ``strategies.floats`` — drawing a fixed number of
+pseudo-random examples from a seeded ``random.Random`` so runs are
+reproducible. When the real hypothesis is installed the test modules import
+it instead (see the try/except at their top).
+"""
+from __future__ import annotations
+
+import random
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        n = getattr(fn, "_max_examples", _DEFAULT_EXAMPLES)
+
+        def wrapper(self):
+            rnd = random.Random(0xC0FFEE)
+            for _ in range(n):
+                fn(self, *(s.example(rnd) for s in strats))
+
+        # NOT functools.wraps: pytest must see the zero-arg signature, or it
+        # would try to resolve the hypothesis parameters as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

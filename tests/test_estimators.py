@@ -3,13 +3,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # offline container: deterministic shim
+    from _hyp_fallback import given, settings, st
 
 from repro.core import (exact_log_z, mimps_log_z, uniform_log_z, nmimps_log_z,
-                        mince_log_z, head_tail_log_z, relative_error,
-                        build_ivf, mimps_ivf, probe, gather_scores,
-                        exact_top_k, kmeans, make_feature_map, build_fmbe,
-                        fmbe_z, apply_feature_map, solve_log_z,
+                        mince_log_z, head_tail_log_z, combine_head_tail_lse,
+                        relative_error, build_ivf, mimps_ivf, probe,
+                        gather_scores, exact_top_k, kmeans, make_feature_map,
+                        build_fmbe, fmbe_z, apply_feature_map, solve_log_z,
                         solver_convergence_trace)
 from repro.core.estimators import oracle_retrieve
 
@@ -57,7 +60,7 @@ class TestMIMPS:
         """E[Z_hat] == Z over tail sampling (property of Eq. 5)."""
         q = _q(vectors)
         lzt = float(exact_log_z(vectors, q))
-        keys = jax.random.split(rng, 64)
+        keys = jax.random.split(rng, 1024)
         zs = jax.vmap(lambda k: jnp.exp(
             mimps_log_z(vectors, q, 100, 50, k)))(keys)
         rel = abs(float(jnp.mean(zs)) / np.exp(lzt) - 1.0)
@@ -99,6 +102,28 @@ class TestHeadTail:
                      + np.exp(np.asarray(tail, np.float64)).sum())
         np.testing.assert_allclose(float(lz), ref, rtol=1e-4)
 
+    @given(st.integers(1, 64), st.integers(1, 64), st.floats(-3, 3),
+           st.integers(1, 100000))
+    @settings(max_examples=25, deadline=None)
+    def test_fused_combine_matches_unfused(self, nh, nt, shift, n_total):
+        """The fused-kernel interface (combine precomputed LSEs) must equal
+        the unfused score-level head_tail_log_z within 1e-4 for any head/tail
+        sizes, score shifts and tail populations (Eq. 5 equivalence)."""
+        rng = np.random.RandomState(nh * 1000 + nt * 7 + n_total % 97)
+        head = jnp.array(rng.randn(nh) + shift, jnp.float32)
+        tail = jnp.array(rng.randn(nt) - 1.0 + shift, jnp.float32)
+        fused = combine_head_tail_lse(
+            jax.nn.logsumexp(head), jax.nn.logsumexp(tail),
+            jnp.float32(n_total), jnp.float32(nt))
+        unfused = head_tail_log_z(head, tail, jnp.float32(n_total),
+                                  jnp.float32(nt))
+        np.testing.assert_allclose(float(fused), float(unfused), atol=1e-4,
+                                   rtol=1e-5)
+        ref = np.log(np.exp(np.asarray(head, np.float64)).sum() +
+                     (n_total / nt) *
+                     np.exp(np.asarray(tail, np.float64)).sum())
+        np.testing.assert_allclose(float(fused), ref, rtol=1e-4)
+
 
 class TestMINCE:
     def test_solver_finds_root_on_synthetic(self):
@@ -123,12 +148,21 @@ class TestMINCE:
         assert float(h[-1]) < 1e-2
 
     def test_mince_runs_and_is_worse_than_mimps(self, vectors, rng):
-        """Paper's empirical finding (Table 1): MINCE >> MIMPS error."""
+        """Paper's empirical finding (Table 1): MINCE >> MIMPS error.
+
+        Averaged over several sampling draws — a single draw of either
+        estimator is noisy enough to flip the comparison.
+        """
         q = _q(vectors)
         lzt = exact_log_z(vectors, q)
-        e_mince = relative_error(mince_log_z(vectors, q, 100, 100, rng), lzt)
-        e_mimps = relative_error(mimps_log_z(vectors, q, 100, 100, rng), lzt)
-        assert float(e_mimps) < float(e_mince)
+        e_mince, e_mimps = [], []
+        for s in range(8):
+            k = jax.random.fold_in(rng, s)
+            e_mince.append(float(relative_error(
+                mince_log_z(vectors, q, 100, 100, k), lzt)))
+            e_mimps.append(float(relative_error(
+                mimps_log_z(vectors, q, 100, 100, k), lzt)))
+        assert np.mean(e_mimps) < np.mean(e_mince)
 
 
 class TestFMBE:
