@@ -50,6 +50,38 @@ def pct_abs_rel_error(log_z_hat, log_z_true):
                                        - np.asarray(log_z_true, np.float64)))
 
 
+def time_fn(fn, *args, reps=10):
+    """Mean wall-clock of a jitted call (one warm-up, block on the last)."""
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def shared_context_batch(key, v, q: int, noise_rel: float = 0.01):
+    """Decode batch modeling production serving: parallel sampling /
+    best-of-N of ONE prompt — per-stream hidden states are small
+    perturbations of a shared context vector, so probe sets overlap and
+    union dedup drives U -> n_probe."""
+    base = v[1234]
+    d = v.shape[1]
+    noise = jax.random.normal(jax.random.fold_in(key, 1), (q, d))
+    return base[None, :] + noise_rel * noise * jnp.linalg.norm(base) \
+        / jnp.sqrt(d)
+
+
+def unique_probed_blocks(index, h, n_probe: int) -> int:
+    """Measured deduplicated probe count U for a batch (plan_heads union)."""
+    from repro.core import probe_batch
+    from repro.core.decode import plan_heads
+    bids = probe_batch(index, h, n_probe)
+    _, _, n_unique = plan_heads(bids, min(h.shape[0] * n_probe,
+                                          index.n_blocks))
+    return int(n_unique)
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.perf_counter()

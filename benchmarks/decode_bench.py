@@ -23,31 +23,13 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import build_ivf, mimps_decode, probe_batch
-from repro.core.decode import plan_heads
-from .common import make_embeddings
-
-
-def _time(fn, *args, reps=10):
-    jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
-
-
-def _unique_blocks(index, h, n_probe):
-    bids = probe_batch(index, h, n_probe)
-    _, _, n_unique = plan_heads(bids, min(h.shape[0] * n_probe,
-                                          index.n_blocks))
-    return int(n_unique)
+from repro.core import build_ivf, mimps_decode
+from .common import (make_embeddings, shared_context_batch, time_fn,
+                     unique_probed_blocks)
 
 
 def run(quick=True, out_path="BENCH_decode.json"):
@@ -58,20 +40,15 @@ def run(quick=True, out_path="BENCH_decode.json"):
     index = build_ivf(key, v, block_rows=br)
     nb = index.n_blocks
 
-    # decode batch serving one context: shared hidden state + per-stream noise
-    # parallel sampling / best-of-N from one prompt: per-stream hidden states
-    # are small perturbations of a shared context, so probe sets overlap
-    base = v[1234]
-    noise = jax.random.normal(jax.random.fold_in(key, 1), (q, d))
-    h = base[None, :] + 0.01 * noise * jnp.linalg.norm(base) / jnp.sqrt(d)
+    h = shared_context_batch(key, v, q)
     kd = jax.random.fold_in(key, 2)
 
     exact_fn = jax.jit(lambda h: (jax.nn.logsumexp(h @ v.T, -1),
                                   jnp.argmax(h @ v.T, -1)))
     mimps_ref = jax.jit(lambda h, k: mimps_decode(
         index, h, k, n_probe=p, l=l, k=1, use_pallas=False))
-    t_exact = _time(exact_fn, h)
-    t_mimps = _time(mimps_ref, h, kd)
+    t_exact = time_fn(exact_fn, h)
+    t_mimps = time_fn(mimps_ref, h, kd)
 
     # fused Pallas pipeline (interpret on CPU): verify against the ref path
     out_pal = mimps_decode(index, h, kd, n_probe=p, l=l, k=1, use_pallas=True)
@@ -81,10 +58,10 @@ def run(quick=True, out_path="BENCH_decode.json"):
     rel_err = float(jnp.mean(jnp.abs(1 - jnp.exp(out_pal.log_z - exact_lz))))
 
     # embedding-float accounting (per decode step of Q tokens)
-    u_shared = _unique_blocks(index, h, p)
+    u_shared = unique_probed_blocks(index, h, p)
     h_uncorr = v[jax.random.choice(jax.random.fold_in(key, 3), n, (q,),
                                    replace=False)]
-    u_uncorr = _unique_blocks(index, h_uncorr, p)
+    u_uncorr = unique_probed_blocks(index, h_uncorr, p)
     exact_floats = n * d + q * d
     mimps_floats = nb * d + u_shared * br * d + l * d + q * d
     bound_floats = (nb + p * br + l) * d + q * d

@@ -1,0 +1,126 @@
+"""Per-estimator serving benchmark: exact vs mimps vs mince vs fmbe through
+the backend registry, tracked in ``BENCH_estimators.json`` from this PR on.
+
+For a decode batch of Q queries against a V-row output embedding, each
+registered method reports:
+
+  * wall-clock of its jitted XLA decode (the honest number on this CPU
+    container — BENCH_decode.json showed speedup_xla 0.38 for mimps at quick
+    scale, i.e. *slower* than exact despite a 6x byte reduction, because CPU
+    XLA pays gather overheads the byte model doesn't; recorded per backend so
+    the trajectory is visible, not hidden),
+  * Pallas-vs-reference log-Ẑ parity (the kernel runs interpreted on CPU, so
+    it is verified, not timed),
+  * embedding floats per step from the backend's own SS5/SS8 accounting,
+    asserted against the backend's ``floats_bound`` ceiling, and
+  * mean relative error |1 - Ẑ/Z| vs the exact pass.
+
+The decode batch models production serving (parallel sampling of one shared
+context: probe sets overlap, dedup drives U -> n_probe); an uncorrelated
+batch's U is reported alongside for honesty.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PartitionConfig
+from repro.core.backends import get_backend
+from .common import (make_embeddings, shared_context_batch, time_fn,
+                     unique_probed_blocks)
+
+METHODS = ("exact", "mimps", "mince", "fmbe")
+
+
+def run(quick=True, out_path="BENCH_estimators.json"):
+    n, d, br, p, l, q = ((8192, 128, 128, 8, 256, 32) if quick else
+                         (65536, 256, 512, 16, 512, 64))
+    p_feat, max_deg = (1024, 4) if quick else (4096, 8)
+    key = jax.random.PRNGKey(0)
+    v = make_embeddings(key, n, d)
+    h = shared_context_batch(key, v, q)
+    kd = jax.random.fold_in(key, 2)
+    exact_lz = jax.nn.logsumexp((h @ v.T).astype(jnp.float32), -1)
+
+    rows = {}
+    u_shared = u_uncorr = None
+    exact_floats = None
+    for method in METHODS:
+        # n_clusters=0 -> build_ivf auto-sizing, matching decode_bench so
+        # the two artifacts report the same mimps traffic for one config
+        cfg = PartitionConfig(method=method, block_rows=br, n_probe=p, l=l,
+                              n_clusters=0, fmbe_features=p_feat,
+                              fmbe_max_degree=max_deg)
+        bk = get_backend(method)
+        state = bk.build(cfg, v, key)
+        if u_shared is None and state.index is not None:
+            u_shared = unique_probed_blocks(state.index, h, p)
+            h_u = v[jax.random.choice(jax.random.fold_in(key, 3), n, (q,),
+                                      replace=False)]
+            u_uncorr = unique_probed_blocks(state.index, h_u, p)
+
+        def ref_fn(hh, kk, bk=bk, state=state, cfg=cfg):
+            return bk.decode(state, hh, kk, cfg, k=1, use_pallas=False)
+
+        jit_ref = jax.jit(ref_fn)
+        t_ref = time_fn(jit_ref, h, kd)
+        out_ref = jit_ref(h, kd)
+        out_pal = bk.decode(state, h, kd, cfg, k=1, use_pallas=True)
+        parity = float(jnp.max(jnp.abs(out_pal.log_z - out_ref.log_z)))
+        rel_err = float(jnp.mean(jnp.abs(1 - jnp.exp(out_ref.log_z
+                                                     - exact_lz))))
+        u = u_shared if bk.sublinear else None
+        floats = bk.embedding_floats(state, cfg, q, u=u)
+        bound = bk.floats_bound(state, cfg, q)
+        if method == "exact":
+            exact_floats = floats
+        rows[method] = {
+            "us_per_step": t_ref * 1e6,
+            "tokens_per_s": q / t_ref,
+            "embedding_floats_per_step": floats,
+            "embedding_floats_per_token": floats / q,
+            "floats_bound": bound,
+            "fused_vs_ref_max_logz_diff": parity,
+            "rel_err_vs_exact": rel_err,
+            "sublinear": bk.sublinear,
+            "bound_ok": bool(floats <= bound and parity <= 1e-4),
+            "bytes_vs_exact": None if exact_floats is None
+            else floats / exact_floats,
+        }
+
+    ok_all = all(r["bound_ok"] for r in rows.values())
+    byte_sublinear = all(r["embedding_floats_per_step"] < exact_floats
+                         for m, r in rows.items() if r["sublinear"])
+    report = {
+        "config": {"V": n, "d": d, "block_rows": br, "n_probe": p, "l": l,
+                   "Q": q, "fmbe_features": p_feat,
+                   "fmbe_max_degree": max_deg,
+                   "unique_blocks_shared_ctx": u_shared,
+                   "unique_blocks_uncorrelated": u_uncorr,
+                   "backend": jax.default_backend()},
+        "methods": rows,
+        "bound": {"ok_all": bool(ok_all),
+                  "byte_sublinear_all": bool(byte_sublinear),
+                  "note": "per-method ceiling from backend.floats_bound; "
+                          "sublinear methods must also touch fewer "
+                          "embedding floats than exact on the shared-"
+                          "context batch"},
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"\n== Estimator bench (-> {os.path.abspath(out_path)}) ==")
+    for m, r in rows.items():
+        print(f"{m:6s}: {r['tokens_per_s']:10.0f} tok/s  "
+              f"{r['embedding_floats_per_token']:12.0f} floats/tok  "
+              f"rel_err {r['rel_err_vs_exact']:.3f}  "
+              f"parity {r['fused_vs_ref_max_logz_diff']:.2e}  "
+              f"bound_ok={r['bound_ok']}")
+    us = rows["mimps"]["us_per_step"]
+    return report, us
+
+
+if __name__ == "__main__":
+    run()

@@ -14,13 +14,15 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slower)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,t1,t2,t3,t4,kernels,roofline,decode")
+                    help="comma list: fig1,t1,t2,t3,t4,kernels,roofline,"
+                         "decode,estimators")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (decode_bench, fig1_cdf, kernels_bench, roofline,
-                   table1_grid, table2_noise, table3_retrieval, table4_lbl)
+    from . import (decode_bench, estimator_bench, fig1_cdf, kernels_bench,
+                   roofline, table1_grid, table2_noise, table3_retrieval,
+                   table4_lbl)
 
     csv = ["name,us_per_call,derived"]
 
@@ -54,6 +56,11 @@ def main() -> None:
         csv.append(f"decode_mimps,{us:.1f},"
                    f"bytes_reduction={rep['bytes_reduction']:.1f}x;"
                    f"bound_ok={rep['bound']['ok']}")
+    if sel("estimators"):
+        rep, us = estimator_bench.run(quick=quick)
+        csv.append(f"estimators,{us:.1f},"
+                   f"bound_ok_all={rep['bound']['ok_all']};"
+                   f"byte_sublinear_all={rep['bound']['byte_sublinear_all']}")
 
     print("\n== CSV ==")
     print("\n".join(csv))

@@ -30,10 +30,11 @@ params = model.init(key)
 prompt = jax.random.randint(key, (BATCH, PROMPT), 0, base.vocab)
 
 outs = {}
-for method in ("exact", "mimps", "selfnorm"):
+for method in ("exact", "mimps", "mince", "fmbe", "selfnorm"):
     cfg = dataclasses.replace(
         base, partition=dataclasses.replace(
             base.partition, method=method, block_rows=128, n_probe=8, l=512))
+    # every method dispatches through the same estimator-backend registry
     eng = Engine(Model(cfg), params, max_len=PROMPT + GEN + 1, key=key)
     h = jax.random.normal(key, (BATCH, cfg.d_model)).astype(cfg.dtype) * 0.3
     t0 = time.perf_counter()
@@ -41,8 +42,14 @@ for method in ("exact", "mimps", "selfnorm"):
     jax.block_until_ready(dist["log_z"])
     dt = (time.perf_counter() - t0) * 1e3
     outs[method] = dist
-    n_scored = (cfg.vocab if method != "mimps" else
-                (eng.index.n_blocks + 8 * 128 + 512))
+    if eng.index is None:
+        n_scored = cfg.vocab
+    elif method == "fmbe":
+        # head candidates only; the Ẑ itself is the V-independent P·M·d
+        # feature sketch, not row scoring
+        n_scored = eng.index.n_blocks + 8 * 128
+    else:
+        n_scored = eng.index.n_blocks + 8 * 128 + 512
     print(f"{method:9s} log Z = {[round(float(z),3) for z in dist['log_z'][:4]]} "
           f"rows scored/query: {n_scored:6d}  ({dt:.0f} ms incl. index)")
 
@@ -55,7 +62,9 @@ print("(untrained weights -> near-flat logits, so argmax among ties is "
       "noise; Z accuracy is the estimator property. Trained-model behavior: "
       "examples/train_selfnorm_vs_mimps.py and tests/test_infra.py)")
 
-# full generation loop under the sublinear estimator
+# full generation loop under the sublinear estimator — greedy, then
+# temperature sampling (Gumbel-max over the retrieved head candidates,
+# normalized with the estimated log-Ẑ)
 cfg = dataclasses.replace(
     base, partition=dataclasses.replace(base.partition, method="mimps",
                                         block_rows=128, n_probe=8, l=512))
@@ -63,3 +72,6 @@ eng = Engine(Model(cfg), params, max_len=PROMPT + GEN + 1, key=key)
 toks = generate(eng, prompt, GEN, key)
 print(f"\ngenerated {toks.shape} tokens under sublinear Z; stream 0: "
       f"{[int(t) for t in toks[0][:10]]}")
+toks_t = generate(eng, prompt, GEN, key, temperature=0.8)
+print(f"same prompt at temperature 0.8; stream 0: "
+      f"{[int(t) for t in toks_t[0][:10]]}")

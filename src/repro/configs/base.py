@@ -26,6 +26,9 @@ class PartitionConfig:
     method: str = "exact"
     k: int = 100                  # head size |S_k(q)|
     l: int = 100                  # tail sample size |U_l|
+    sample_k: int = 8             # head candidates kept for temperature
+                                  # sampling (Gumbel-max over the retrieved
+                                  # top-sample_k; greedy decode retrieves 1)
     # IVF (TPU-native MIPS) parameters
     n_clusters: int = 256
     n_probe: int = 8
@@ -42,6 +45,7 @@ class PartitionConfig:
         assert self.method in (
             "exact", "mimps", "nmimps", "uniform", "mince", "fmbe", "selfnorm")
         assert self.k >= 0 and self.l >= 0
+        assert self.sample_k >= 1
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,14 +1,19 @@
 """Core: the paper's sublinear partition estimators + TPU-native MIPS."""
-from .decode import (DecodeOut, DecodePlan, make_plan, mimps_decode,
-                     plan_heads, plan_tail)
+from .backends import (BACKENDS, BackendState, EstimatorBackend, get_backend,
+                       register_backend)
+from .decode import (DecodeOut, DecodePlan, exact_topk_decode, fmbe_decode,
+                     make_plan, mimps_decode, mince_decode, plan_heads,
+                     plan_tail, selfnorm_decode, union_head_scores)
 from .estimators import (exact_log_z, mimps_log_z, uniform_log_z,
                          nmimps_log_z, mince_log_z, fmbe_log_z, fmbe_z,
                          mimps_ivf, estimate_log_z, relative_error,
                          head_tail_log_z, combine_head_tail_lse)
 from .feature_maps import (FeatureMap, FMBEState, make_feature_map,
-                           apply_feature_map, build_fmbe, fmbe_estimate_z)
+                           apply_feature_map, build_fmbe, fmbe_estimate_z,
+                           fmbe_z_batch)
 from .kmeans import kmeans
-from .mince import solve_log_z, nce_objective, solver_convergence_trace
+from .mince import (derivative_sums, halley_step, nce_objective, solve_log_z,
+                    solver_convergence_trace)
 from .mips import (IVFIndex, build_ivf, probe, probe_batch, gather_scores,
                    head_count, exact_top_k)
 from .partition_layer import PartitionLayer
@@ -17,10 +22,14 @@ __all__ = [
     "exact_log_z", "mimps_log_z", "uniform_log_z", "nmimps_log_z",
     "mince_log_z", "fmbe_log_z", "fmbe_z", "mimps_ivf", "estimate_log_z",
     "relative_error", "head_tail_log_z", "combine_head_tail_lse",
-    "DecodeOut", "DecodePlan", "make_plan", "mimps_decode", "plan_heads",
-    "plan_tail", "FeatureMap", "FMBEState",
+    "DecodeOut", "DecodePlan", "make_plan", "mimps_decode", "mince_decode",
+    "fmbe_decode", "exact_topk_decode", "selfnorm_decode",
+    "union_head_scores", "plan_heads", "plan_tail",
+    "BACKENDS", "BackendState", "EstimatorBackend", "get_backend",
+    "register_backend", "FeatureMap", "FMBEState",
     "make_feature_map", "apply_feature_map", "build_fmbe", "fmbe_estimate_z",
-    "kmeans", "solve_log_z", "nce_objective", "solver_convergence_trace",
+    "fmbe_z_batch", "kmeans", "solve_log_z", "derivative_sums", "halley_step",
+    "nce_objective", "solver_convergence_trace",
     "IVFIndex", "build_ivf", "probe", "probe_batch", "gather_scores",
     "head_count", "exact_top_k", "PartitionLayer",
 ]

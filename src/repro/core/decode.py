@@ -1,7 +1,10 @@
-"""Fused batched MIMPS decode: one pipeline from coarse probe to log-Ẑ.
+"""Fused batched decode paths: one pipeline from coarse probe to log-Ẑ.
 
-This is the serving-side realization of Eq. 5 (DESIGN.md SS4). Per decode
-step for a query batch h (Q, d):
+This is the serving-side realization of Eq. 5 (DESIGN.md SS4), plus the
+batched MINCE (Eq. 6/7) and FMBE (Eq. 9/10) decodes that share its probe
+plan — every sublinear estimator consumes the same ``DecodePlan``; none of
+them touches ``oracle_retrieve`` (the O(N log N) sort is an accuracy-study
+tool, not a serving path). Per decode step for a query batch h (Q, d):
 
     probe_batch ──► (Q, p) block ids          one (Q,d)x(d,nb) matmul
          │
@@ -35,9 +38,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels.ivf_score import ivf_decode
+from ..kernels.ivf_score import ivf_decode, union_scores
+from . import mince as _mince
 from . import mips as _mips
 from .estimators import NEG_INF, combine_head_tail_lse
+from .feature_maps import FMBEState, fmbe_z_batch
 
 
 class DecodePlan(NamedTuple):
@@ -91,7 +96,8 @@ def plan_tail(index: _mips.IVFIndex, key: jax.Array, l: int,
 
     Returns (tail_blocks (l,), tail_rows (l,), accept (Q, l)); sample j is
     rejected for query q iff its block is in q's probed set (those rows are
-    already counted exactly in the head).
+    already counted exactly in the head). l == 0 yields empty (but
+    well-shaped) tail arrays — the head-only plan FMBE consumes.
     """
     idx = jax.random.randint(key, (l,), 0, index.n)
     slots = index.slot_of_row[idx]
@@ -178,3 +184,159 @@ def mimps_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
     top_id = index.row_id.reshape(-1)[topi]
     return DecodeOut(log_z=log_z, top_score=topv, top_id=top_id,
                      head_lse=head_lse, tail_lse=tail_lse, k_eff=plan.k_eff)
+
+
+# ---------------------------------------------------------------------------
+# Shared head machinery for the MINCE / FMBE batched backends
+# ---------------------------------------------------------------------------
+
+def union_head_scores(index: _mips.IVFIndex, h: jax.Array, plan: DecodePlan,
+                      use_pallas: bool, interpret=None):
+    """Score the deduplicated probe union for every query.
+
+    Returns (scores (Q, U_cap, br) f32, mask (Q, U_cap, br) bool). Unlike
+    the fused MIMPS kernel this *does* materialize per-row scores — MINCE's
+    Halley iteration revisits every sample 'iters' times, so the alpha set
+    is inherent, not an implementation artifact.
+
+    Traffic: the Pallas path (``kernels.ivf_score.union_scores``) fetches
+    each of the U *unique* blocks once per query tile (pad slots elide both
+    DMA and compute), i.e. U·br·d embedding floats — the figure the SS5/SS8
+    accounting reports. The XLA reference gathers all U_cap =
+    min(Q·n_probe, nb) static slots (capacity·br·d, the ``floats_bound``
+    ceiling); it is the parity oracle, not the deployment path.
+    """
+    if use_pallas:
+        scores = union_scores(index.v_blocks, h, plan.head_ids,
+                              plan.head_live, interpret=interpret)
+    else:
+        blocks = index.v_blocks[plan.head_ids]              # (U_cap, br, d)
+        scores = jnp.einsum("ubd,qd->qub", blocks, h,
+                            preferred_element_type=jnp.float32)
+    mask = plan.head_member[:, :, None] & index.valid[plan.head_ids][None]
+    return scores, mask
+
+
+def _union_topk(index: _mips.IVFIndex, plan: DecodePlan, scores, mask,
+                k: int):
+    """Top-k (score, vocab id) over the masked union scores."""
+    q = scores.shape[0]
+    br = index.block_rows
+    flat = jnp.where(mask, scores, NEG_INF).reshape(q, -1)
+    topv, pos = jax.lax.top_k(flat, k)
+    topi = plan.head_ids[pos // br] * br + pos % br          # global slot ids
+    return topv, index.row_id.reshape(-1)[topi]
+
+
+@partial(jax.jit, static_argnames=("n_probe", "l", "k", "iters", "solver",
+                                   "use_pallas", "interpret"))
+def mince_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
+                 *, n_probe: int, l: int, k: int = 1, iters: int = 25,
+                 solver: str = "halley", use_pallas: bool = True,
+                 interpret=None) -> DecodeOut:
+    """Batched sublinear MINCE (Eq. 6/7): S_k(q) is the IVF probe head, the
+    noise set is the plan's shared uniform tail — no oracle sort anywhere.
+
+    alpha_i = s_i + log(k_eff (N - k_eff) / n_accept) over probed head rows,
+    beta_j likewise over surviving tail samples; one batched trust-clamped
+    Halley sweep solves every query's theta = log Ẑ simultaneously.
+
+    Degenerate heads are guarded per query: k_eff == 0 falls back to the
+    uniform-noise-only objective (importance sampling over the tail), and an
+    empty complement (k_eff == N or zero surviving samples) falls back to
+    the exactly-scored head.
+    """
+    assert l >= 1, "MINCE needs at least one noise sample"
+    plan = make_plan(index, h, key, n_probe, l)
+    scores, mask = union_head_scores(index, h, plan, use_pallas, interpret)
+    q = h.shape[0]
+    head = scores.reshape(q, -1)
+    head_mask = mask.reshape(q, -1)
+    flat = index.v_blocks.reshape(-1, index.v_blocks.shape[-1])
+    slots = plan.tail_blocks * index.block_rows + plan.tail_rows
+    tail = jnp.einsum("qd,ld->ql", h, flat[slots],
+                      preferred_element_type=jnp.float32)    # (Q, l)
+    tail_mask = plan.tail_accept
+
+    n = index.n
+    k_eff = plan.k_eff.astype(jnp.float32)
+    n_acc = plan.n_accept.astype(jnp.float32)
+    n_tail = jnp.maximum(n - k_eff, 0.0)
+    log_ratio = (jnp.log(jnp.maximum(k_eff, 1.0)) +
+                 jnp.log(jnp.maximum(n_tail, 1.0)) -
+                 jnp.log(jnp.maximum(n_acc, 1.0)))           # (Q,)
+    head_lse = jax.nn.logsumexp(
+        jnp.where(head_mask, head, NEG_INF), axis=-1)
+    tail_lse = jax.nn.logsumexp(
+        jnp.where(tail_mask, tail, NEG_INF), axis=-1)
+    tail_lse = jnp.where(jnp.any(tail_mask, axis=-1), tail_lse, -jnp.inf)
+
+    theta = _mince.solve_log_z(
+        head + log_ratio[:, None], tail + log_ratio[:, None], head_lse,
+        iters=iters, solver=solver,
+        alpha_mask=head_mask.astype(jnp.float32),
+        beta_mask=tail_mask.astype(jnp.float32))
+    # per-query degenerate guards (cannot happen at sane configs, must not NaN)
+    uniform = combine_head_tail_lse(
+        jnp.full_like(head_lse, NEG_INF), tail_lse,
+        jnp.zeros_like(n_acc) + jnp.asarray(n, jnp.float32), n_acc)
+    log_z = jnp.where(k_eff == 0, uniform, theta)
+    log_z = jnp.where((n_acc == 0) | (n_tail == 0), head_lse, log_z)
+
+    topv, top_id = _union_topk(index, plan, scores, mask, k)
+    return DecodeOut(log_z=log_z, top_score=topv, top_id=top_id,
+                     head_lse=head_lse, tail_lse=tail_lse, k_eff=plan.k_eff)
+
+
+@partial(jax.jit, static_argnames=("n_probe", "k", "use_pallas", "interpret"))
+def fmbe_decode(state: FMBEState, index: _mips.IVFIndex, h: jax.Array,
+                key: jax.Array, *, n_probe: int, k: int = 1,
+                use_pallas: bool = True, interpret=None) -> DecodeOut:
+    """Batched FMBE decode: log Ẑ from the random-feature sketch (O(P M d)
+    per query, independent of V), argmax/sampling candidates from the IVF
+    probe head via an l=0 head-only plan. The estimate is deterministic
+    given the feature map; ``key`` only feeds the empty tail plan.
+    """
+    plan = make_plan(index, h, key, n_probe, l=0)   # head-only plan
+    scores, mask = union_head_scores(index, h, plan, use_pallas, interpret)
+    head_lse = jax.nn.logsumexp(
+        jnp.where(mask, scores, NEG_INF).reshape(h.shape[0], -1), axis=-1)
+    z = fmbe_z_batch(state, h, use_pallas=use_pallas, interpret=interpret)
+    log_z = jnp.log(jnp.maximum(z, 1e-30))
+    topv, top_id = _union_topk(index, plan, scores, mask, k)
+    return DecodeOut(log_z=log_z, top_score=topv, top_id=top_id,
+                     head_lse=head_lse,
+                     tail_lse=jnp.full_like(log_z, -jnp.inf),
+                     k_eff=plan.k_eff)
+
+
+# ---------------------------------------------------------------------------
+# Dense-output decodes (exact / selfnorm) behind the same DecodeOut contract
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
+def exact_topk_decode(w: jax.Array, h: jax.Array, *, k: int = 1,
+                      use_pallas: bool = False, interpret=None) -> DecodeOut:
+    """Exact log Z + top-k in one pass (Pallas ``topk_z`` or streaming XLA)."""
+    if use_pallas:
+        from ..kernels.topk_z import topk_z
+        lse, topv, topi = topk_z(h, w, k, interpret=interpret)
+    else:
+        logits = (h @ w.T).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, -1)
+        topv, topi = jax.lax.top_k(logits, k)
+    q, v = h.shape[0], w.shape[0]
+    return DecodeOut(log_z=lse, top_score=topv,
+                     top_id=topi.astype(jnp.int32), head_lse=lse,
+                     tail_lse=jnp.full((q,), -jnp.inf),
+                     k_eff=jnp.full((q,), v, jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
+def selfnorm_decode(w: jax.Array, h: jax.Array, *, k: int = 1,
+                    use_pallas: bool = False, interpret=None) -> DecodeOut:
+    """Self-normalized head: candidates as exact, but Z assumed == 1
+    (log Ẑ == 0; the model was trained with the selfnorm penalty)."""
+    out = exact_topk_decode(w, h, k=k, use_pallas=use_pallas,
+                            interpret=interpret)
+    return out._replace(log_z=jnp.zeros_like(out.log_z))

@@ -91,10 +91,15 @@ def oracle_retrieve(v: jax.Array, q: jax.Array) -> OracleRetrieval:
 
 
 def _complement_sample(key: jax.Array, ret: OracleRetrieval, k: int, l: int):
-    """l uniform samples from ranks [k, N) — exact complement sampling."""
+    """l uniform samples from ranks [k, N) — exact complement sampling.
+
+    k == N is guarded (randint over an empty range is undefined): positions
+    clamp to the last rank and callers must drop the tail term — which Eq. 5
+    does automatically via n_tail_total == 0 in ``combine_head_tail_lse``.
+    """
     n = ret.scores_sorted.shape[0]
-    pos = k + jax.random.randint(key, (l,), 0, n - k)
-    return ret.scores_sorted[pos]
+    pos = k + jax.random.randint(key, (l,), 0, max(n - k, 1))
+    return ret.scores_sorted[jnp.minimum(pos, n - 1)]
 
 
 @partial(jax.jit, static_argnames=("k", "l"))
@@ -147,11 +152,21 @@ def mince_log_z(v: jax.Array, q: jax.Array, k: int, l: int, key: jax.Array,
     """MINCE (Eq. 6/7): solve for Z via NCE with S_k as data, uniform noise.
 
     alpha_i = log a_i = s_i + log(k (N-k) / l); beta_j likewise over noise.
+
+    Degenerate heads are guarded: k == 0 has no data samples, so the NCE
+    objective cannot identify Z (log k would poison alpha with -inf and the
+    Halley solver with NaNs) — fall back to the uniform-noise-only objective,
+    which *is* identifiable and equals uniform importance sampling. k >= N
+    means the head is the whole vocabulary: return the exact logsumexp.
     """
+    n = v.shape[0]
+    if k <= 0:
+        return uniform_log_z(v, q, l, key)
+    if k >= n:
+        return exact_log_z(v, q)
     ret = oracle_retrieve(v, q)
     head = ret.scores_sorted[:k]
     noise = _complement_sample(key, ret, k, l)
-    n = v.shape[0]
     log_ratio = jnp.log(jnp.float32(k)) + jnp.log(jnp.float32(n - k)) - \
         jnp.log(jnp.float32(l))
     alpha = head + log_ratio
@@ -218,8 +233,29 @@ def mimps_ivf(index: _mips.IVFIndex, q: jax.Array, n_probe: int, l: int,
 
 
 # ---------------------------------------------------------------------------
-# Dispatcher used by the serving/output layer
+# Per-query dispatcher (oracle/study path)
 # ---------------------------------------------------------------------------
+# The registry below is the single-query analogue of the batched serving
+# registry in ``core.backends`` — same method names, same semantics. Serving
+# code (engine / sharded output layer / benches) must go through
+# ``backends.get_backend``; this table exists for the paper's per-query
+# accuracy studies (Tables 1-3) and the training losses.
+
+_PER_QUERY = {
+    "exact": lambda v, q, key, opt: exact_log_z(v, q),
+    "mimps": lambda v, q, key, opt: (
+        mimps_ivf(opt["index"], q, opt["n_probe"], opt["l"], key).log_z
+        if opt["index"] is not None
+        else mimps_log_z(v, q, opt["k"], opt["l"], key)),
+    "nmimps": lambda v, q, key, opt: nmimps_log_z(v, q, opt["k"]),
+    "uniform": lambda v, q, key, opt: uniform_log_z(v, q, opt["l"], key),
+    "mince": lambda v, q, key, opt: mince_log_z(
+        v, q, opt["k"], opt["l"], key, iters=opt["mince_iters"],
+        solver=opt["mince_solver"]),
+    "fmbe": lambda v, q, key, opt: fmbe_log_z(opt["fmbe_state"], q),
+    "selfnorm": lambda v, q, key, opt: jnp.zeros(()),   # assume Z == 1
+}
+
 
 def estimate_log_z(method: str, v: jax.Array, q: jax.Array, key: jax.Array,
                    *, k: int = 100, l: int = 100,
@@ -228,25 +264,16 @@ def estimate_log_z(method: str, v: jax.Array, q: jax.Array, key: jax.Array,
                    fmbe_state: Optional[FMBEState] = None,
                    mince_iters: int = 25,
                    mince_solver: str = "halley") -> jax.Array:
-    if method == "exact":
-        return exact_log_z(v, q)
-    if method == "mimps":
-        if index is not None:
-            return mimps_ivf(index, q, n_probe, l, key).log_z
-        return mimps_log_z(v, q, k, l, key)
-    if method == "nmimps":
-        return nmimps_log_z(v, q, k)
-    if method == "uniform":
-        return uniform_log_z(v, q, l, key)
-    if method == "mince":
-        return mince_log_z(v, q, k, l, key, iters=mince_iters,
-                           solver=mince_solver)
+    try:
+        fn = _PER_QUERY[method]
+    except KeyError:
+        raise ValueError(f"unknown partition method {method!r}; "
+                         f"have {sorted(_PER_QUERY)}") from None
     if method == "fmbe":
         assert fmbe_state is not None, "fmbe requires a prebuilt FMBEState"
-        return fmbe_log_z(fmbe_state, q)
-    if method == "selfnorm":
-        return jnp.zeros(())   # assume Z == 1
-    raise ValueError(f"unknown partition method {method!r}")
+    return fn(v, q, key, dict(k=k, l=l, index=index, n_probe=n_probe,
+                              fmbe_state=fmbe_state, mince_iters=mince_iters,
+                              mince_solver=mince_solver))
 
 
 def relative_error(log_z_hat: jax.Array, log_z_true: jax.Array) -> jax.Array:

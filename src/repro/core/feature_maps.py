@@ -86,3 +86,20 @@ def fmbe_estimate_z(state: FMBEState, q: jax.Array) -> jax.Array:
     """
     phi_q = apply_feature_map(state.fm, q)
     return jnp.einsum("...p,p->...", phi_q, state.lambda_tilde)
+
+
+def fmbe_z_batch(state: FMBEState, x: jax.Array,
+                 use_pallas: bool = False, interpret=None) -> jax.Array:
+    """Batched signed Ẑ for a decode batch: x (Q, d) -> (Q,).
+
+    ``use_pallas`` routes through ``kernels.fmbe.fmbe_z``, which computes the
+    degree products tile-by-tile in VMEM — neither the ``(Q, P, max_degree)``
+    projection intermediate of ``apply_feature_map`` nor the ``(Q, P)``
+    feature matrix ever reaches HBM. The XLA path is the parity reference.
+    """
+    if use_pallas:
+        from ..kernels.fmbe import fmbe_z as _fmbe_z
+        return _fmbe_z(state.fm.omega, state.fm.degree, state.fm.coef,
+                       state.lambda_tilde, x, interpret=interpret)
+    phi = apply_feature_map(state.fm, x)                # (Q, P)
+    return phi @ state.lambda_tilde.astype(phi.dtype)

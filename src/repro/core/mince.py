@@ -15,6 +15,16 @@ We optimize in theta = log Z (the objective is strictly convex in theta):
 f', f'', f''' are all elementwise sigmoids/products — the paper's observation
 that "even the third derivatives can be found efficiently", enabling Halley's
 method (cubic convergence) over Newton's (quadratic).
+
+All entry points are **rank-polymorphic over leading batch axes** (the
+serving path solves a whole decode batch of independent NCE problems in one
+trust-clamped Halley iteration): ``alpha (..., A)``, ``beta (..., B)``,
+``theta (...,)`` — sample sums are always over the trailing axis. The
+scalar per-query form used by ``estimators.mince_log_z`` is the ``... = ()``
+special case; ``jax.vmap(solve_log_z)`` and the batched call agree exactly.
+``derivative_sums`` / ``halley_step`` are split out so the vocab-sharded
+output layer can ``psum`` the partial sums between them (each shard holds a
+slice of the sample sets; every shard then walks one shared theta).
 """
 from __future__ import annotations
 
@@ -26,29 +36,55 @@ import jax.numpy as jnp
 
 def nce_objective(theta: jax.Array, alpha: jax.Array, beta: jax.Array,
                   alpha_mask=None, beta_mask=None) -> jax.Array:
-    """-J(logZ = theta); alpha = log a_i, beta = log b_j."""
-    ta = jax.nn.softplus(theta - alpha)
-    tb = jax.nn.softplus(beta - theta)
+    """-J(logZ = theta); alpha = log a_i (..., A), beta = log b_j (..., B),
+    theta (...,) -> (...,). Masks (same shapes as alpha/beta) drop samples."""
+    ta = jax.nn.softplus(theta[..., None] - alpha)
+    tb = jax.nn.softplus(beta - theta[..., None])
     if alpha_mask is not None:
         ta = ta * alpha_mask
     if beta_mask is not None:
         tb = tb * beta_mask
-    return jnp.sum(ta) + jnp.sum(tb)
+    return jnp.sum(ta, axis=-1) + jnp.sum(tb, axis=-1)
 
 
-def _derivatives(theta, alpha, beta, alpha_mask, beta_mask):
-    sa = jax.nn.sigmoid(theta - alpha)
-    sb = jax.nn.sigmoid(beta - theta)
+def derivative_sums(theta, alpha, beta, alpha_mask=None, beta_mask=None):
+    """(f', f'', f''') of the NCE objective, summed over the sample axis.
+
+    theta (...,), alpha (..., A), beta (..., B) -> three (...,) arrays.
+    These are plain sums over samples, so shards holding disjoint slices of
+    the alpha/beta sets can ``lax.psum`` the three outputs before
+    ``halley_step`` — the distributed-MINCE combine (O(1) floats per iter).
+    """
+    sa = jax.nn.sigmoid(theta[..., None] - alpha)
+    sb = jax.nn.sigmoid(beta - theta[..., None])
     if alpha_mask is not None:
         sa = sa * alpha_mask
     if beta_mask is not None:
         sb = sb * beta_mask
     da = sa * (1.0 - sa)
     db = sb * (1.0 - sb)
-    f1 = jnp.sum(sa) - jnp.sum(sb)
-    f2 = jnp.sum(da) + jnp.sum(db)
-    f3 = jnp.sum(da * (1.0 - 2.0 * sa)) - jnp.sum(db * (1.0 - 2.0 * sb))
+    f1 = jnp.sum(sa, axis=-1) - jnp.sum(sb, axis=-1)
+    f2 = jnp.sum(da, axis=-1) + jnp.sum(db, axis=-1)
+    f3 = jnp.sum(da * (1.0 - 2.0 * sa), axis=-1) - \
+        jnp.sum(db * (1.0 - 2.0 * sb), axis=-1)
     return f1, f2, f3
+
+
+def halley_step(f1, f2, f3, solver: str = "halley",
+                max_step: float = 10.0, eps: float = 1e-12):
+    """One trust-clamped root-finding step from the derivative sums.
+
+    solver: 'halley' (uses f''' — the paper's speedup) or 'newton'. Falls
+    back to Newton where the Halley denominator degenerates.
+    """
+    newton = f1 / (f2 + eps)
+    if solver == "halley":
+        denom = 2.0 * f2 * f2 - f1 * f3
+        halley = 2.0 * f1 * f2 / jnp.where(jnp.abs(denom) < eps, eps, denom)
+        step = jnp.where(jnp.abs(denom) < eps, newton, halley)
+    else:
+        step = newton
+    return jnp.clip(step, -max_step, max_step)
 
 
 @partial(jax.jit, static_argnames=("iters", "solver", "max_step"))
@@ -56,24 +92,17 @@ def solve_log_z(alpha: jax.Array, beta: jax.Array, theta0: jax.Array,
                 iters: int = 25, solver: str = "halley",
                 alpha_mask=None, beta_mask=None,
                 max_step: float = 10.0) -> jax.Array:
-    """Minimize -J over theta = log Z. Returns theta*.
+    """Minimize -J over theta = log Z. Returns theta*, shape = theta0.
 
-    solver: 'halley' (uses f''' — the paper's speedup) or 'newton'.
-    Steps are trust-clamped to +-max_step for robustness far from the root.
+    Batched: alpha (..., A), beta (..., B), theta0 (...,) solve every
+    leading-axis problem simultaneously (one fused Halley sweep per decode
+    batch). Steps are trust-clamped to +-max_step for robustness far from
+    the root.
     """
-    eps = 1e-12
-
     def body(theta, _):
-        f1, f2, f3 = _derivatives(theta, alpha, beta, alpha_mask, beta_mask)
-        newton = f1 / (f2 + eps)
-        if solver == "halley":
-            denom = 2.0 * f2 * f2 - f1 * f3
-            halley = 2.0 * f1 * f2 / jnp.where(jnp.abs(denom) < eps, eps, denom)
-            # fall back to newton when halley denominator degenerates
-            step = jnp.where(jnp.abs(denom) < eps, newton, halley)
-        else:
-            step = newton
-        step = jnp.clip(step, -max_step, max_step)
+        f1, f2, f3 = derivative_sums(theta, alpha, beta, alpha_mask,
+                                     beta_mask)
+        step = halley_step(f1, f2, f3, solver=solver, max_step=max_step)
         return theta - step, jnp.abs(step)
 
     theta, steps = jax.lax.scan(body, theta0, None, length=iters)
@@ -83,15 +112,8 @@ def solve_log_z(alpha: jax.Array, beta: jax.Array, theta0: jax.Array,
 def solver_convergence_trace(alpha, beta, theta0, iters=25, solver="halley"):
     """Per-iteration |f'(theta)| trace — used to benchmark Halley vs Newton."""
     def body(theta, _):
-        f1, f2, f3 = _derivatives(theta, alpha, beta, None, None)
-        newton = f1 / (f2 + 1e-12)
-        if solver == "halley":
-            denom = 2.0 * f2 * f2 - f1 * f3
-            step = jnp.where(jnp.abs(denom) < 1e-12, newton,
-                             2.0 * f1 * f2 / denom)
-        else:
-            step = newton
-        step = jnp.clip(step, -10.0, 10.0)
+        f1, f2, f3 = derivative_sums(theta, alpha, beta, None, None)
+        step = halley_step(f1, f2, f3, solver=solver)
         return theta - step, jnp.abs(f1)
     _, trace = jax.lax.scan(body, theta0, None, length=iters)
     return trace

@@ -14,9 +14,10 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import PartitionConfig
+from . import backends as _backends
 from . import estimators as est
 from . import mips
-from .feature_maps import FMBEState, build_fmbe, make_feature_map
+from .feature_maps import FMBEState
 
 
 @dataclasses.dataclass
@@ -28,20 +29,22 @@ class PartitionLayer:
     @staticmethod
     def build(cfg: PartitionConfig, w_out: jax.Array,
               key: jax.Array) -> "PartitionLayer":
-        """Build retrieval state from the output embedding (index-build time).
+        """Build retrieval state from the output embedding (index-build time)
+        via the method's registered backend (core.backends).
 
         w_out: (vocab, d_model) — rows are the class vectors v_i.
         """
         cfg.validate()
         index = None
         fmbe_state = None
-        if cfg.method == "mimps" and w_out.shape[0] >= 4 * cfg.block_rows:
-            index = mips.build_ivf(key, w_out, block_rows=cfg.block_rows,
-                                   n_clusters=cfg.n_clusters)
-        if cfg.method == "fmbe":
-            fm = make_feature_map(key, w_out.shape[-1], cfg.fmbe_features,
-                                  max_degree=cfg.fmbe_max_degree, p=cfg.fmbe_p)
-            fmbe_state = build_fmbe(fm, w_out)
+        if cfg.method in _backends.BACKENDS:
+            # only the state the *per-query* estimators consume: the serving
+            # backends also index mince/fmbe for sampling candidates, but
+            # estimate_log_z ignores it there and top_candidates must stay
+            # exact for the accuracy studies.
+            state = _backends.get_backend(cfg.method).build(
+                cfg, w_out, key, with_index=(cfg.method == "mimps"))
+            index, fmbe_state = state.index, state.fmbe
         return PartitionLayer(cfg=cfg, index=index, fmbe_state=fmbe_state)
 
     def log_z(self, w_out: jax.Array, h: jax.Array,

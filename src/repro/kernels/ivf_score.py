@@ -80,6 +80,70 @@ def ivf_score(w_blocks, h, block_ids, *, interpret=None):
 
 
 # ---------------------------------------------------------------------------
+# deduplicated union scoring: (Q, U_cap, br) scores, U unique blocks of DMA
+# ---------------------------------------------------------------------------
+
+def _union_kernel(hid_ref, live_ref, h_ref, w_ref, out_ref):
+    si = pl.program_id(1)
+
+    @pl.when(si < live_ref[0])
+    def _score():
+        h = h_ref[...]                                      # (bq, d)
+        w = w_ref[0]                                        # (br, d)
+        out_ref[:, 0, :] = jax.lax.dot_general(
+            h, w, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(si >= live_ref[0])
+    def _pad():
+        out_ref[...] = jnp.zeros_like(out_ref)   # masked by callers
+
+
+def union_scores(w_blocks, h, head_ids, head_live, *, block_q: int = 128,
+                 interpret=None):
+    """Score a deduplicated block union for a whole query batch.
+
+    w_blocks (nb, br, d), h (Q, d), head_ids (U_cap,) (sorted unique ids,
+    pad slots repeat the last id), head_live () -> scores (Q, U_cap, br) f32.
+
+    Per (block_q, d) query tile the grid sweeps the union table once:
+    identical consecutive BlockSpec indices cost no DMA, and slots past
+    ``head_live`` skip their matmul entirely, so embedding reads are the U
+    *unique* blocks — the MINCE/FMBE head at MIMPS-kernel traffic (the XLA
+    gather reference materializes all U_cap slots instead). Pad-slot outputs
+    are zeros; callers mask through the plan's membership mask.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    nb, br, d = w_blocks.shape
+    q = h.shape[0]
+    u_cap = head_ids.shape[0]
+    block_q = min(block_q, max(8, q))
+    pad_q = (-q) % block_q
+    hp = jnp.pad(h, ((0, pad_q), (0, 0)))
+    qp = hp.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(qp // block_q, u_cap),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda qi, si, hid, lv: (qi, 0)),
+            pl.BlockSpec((1, br, d),
+                         lambda qi, si, hid, lv: (hid[si], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, 1, br),
+                               lambda qi, si, hid, lv: (qi, si, 0)),
+    )
+    out = pl.pallas_call(
+        _union_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((qp, u_cap, br), jnp.float32),
+        interpret=interpret,
+    )(head_ids.astype(jnp.int32),
+      jnp.asarray(head_live, jnp.int32).reshape(1), hp, w_blocks)
+    return out[:q]
+
+
+# ---------------------------------------------------------------------------
 # fused batched decode: probe table -> (head lse, tail lse, top-k) per query
 # ---------------------------------------------------------------------------
 

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import fmbe as _fmbe
 from . import fused_ce as _fce
 from . import ivf_score as _ivf
 from . import topk_z as _tkz
@@ -62,6 +63,21 @@ def ivf_block_scores(w_blocks: jax.Array, h: jax.Array,
 
 # The fused decode kernel (_ivf.ivf_decode) is consumed through its planning
 # layer, core.decode.mimps_decode (itself jitted) — no bare wrapper here.
+
+
+@jax.jit
+def fused_fmbe_phi(omega: jax.Array, degree: jax.Array, coef: jax.Array,
+                   x: jax.Array) -> jax.Array:
+    """(Q, P) Kar-Karnick features without the (Q, P, max_degree) HBM
+    intermediate of core.feature_maps.apply_feature_map."""
+    return _fmbe.fmbe_phi(omega, degree, coef, x)
+
+
+@jax.jit
+def fused_fmbe_z(omega: jax.Array, degree: jax.Array, coef: jax.Array,
+                 lam: jax.Array, x: jax.Array) -> jax.Array:
+    """(Q,) signed FMBE Ẑ; the (Q, P) feature matrix never reaches HBM."""
+    return _fmbe.fmbe_z(omega, degree, coef, lam, x)
 
 
 # re-export oracles for benches/tests

@@ -30,7 +30,7 @@ from ..configs import get_config, ASSIGNED_ARCHS           # noqa: E402
 from ..configs.base import SHAPES, TrainConfig, get_shape  # noqa: E402
 from ..models import Model                                  # noqa: E402
 from ..serve.output_layer import (ivf_specs_for, ivf_partition_specs,
-                                  sharded_ivf_decode,
+                                  sharded_decode,
                                   streaming_logz_argmax)    # noqa: E402
 from ..train import init_train_state, make_train_step      # noqa: E402
 from . import mesh as mesh_lib                              # noqa: E402
@@ -151,7 +151,7 @@ def build_lowering(arch: str, shape_name: str, mesh, output_mode="exact"):
                                          sc.global_batch)
     dp = mesh_lib.batch_axis_for(mesh, sc.global_batch)
     pc = cfg.partition
-    use_ivf = output_mode == "mimps" and pc.method == "mimps"
+    use_ivf = output_mode == "mimps" and pc.method in ("mimps", "mince")
     ivf = None
     if use_ivf:
         ivf = ivf_specs_for(cfg.vocab, cfg.d_model, pc.block_rows,
@@ -167,10 +167,12 @@ def build_lowering(arch: str, shape_name: str, mesh, output_mode="exact"):
         elif ivf_arrays is not None:
             p_local = max(1, pc.n_probe // mesh.shape["model"])
             l_local = max(8, pc.l // mesh.shape["model"])
-            log_z, top_id, top_s = sharded_ivf_decode(
-                mesh, ivf_arrays, h, key, n_probe_local=p_local,
+            mince_kw = ({"iters": pc.mince_iters, "solver": pc.mince_solver}
+                        if pc.method == "mince" else {})
+            log_z, top_id, top_s = sharded_decode(
+                mesh, pc.method, ivf_arrays, h, key, n_probe_local=p_local,
                 l_local=l_local,
-                batch_spec=P(dp) if dp else P())
+                batch_spec=P(dp) if dp else P(), **mince_kw)
             out = {"log_z": log_z, "token": top_id,
                    "log_prob": top_s - log_z}
         else:

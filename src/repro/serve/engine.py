@@ -1,13 +1,20 @@
 """Serving engine: prefill + cached decode with partition-estimated
 probabilities — the paper's inference-time use case (Eq. 2/3).
 
-decode_step cost at the output layer:
-  exact     O(V d)         (fused one-pass: kernels.topk_z)
-  mimps     O(nb d + U*br d + l d)  — sublinear fused pipeline (core.decode):
-            batched coarse probe, deduplicated head blocks, shared tail
-            sample; one Pallas kernel from probe table to log-Ẑ under
-            use_pallas, the XLA gather reference otherwise.
-  selfnorm  O(k d)         (head only; assumes Z == 1)
+Every non-audio method dispatches through the estimator-backend registry
+(``core.backends``): one batched decode returns log Ẑ plus retrieved top-k
+candidates, and sampling (greedy or Gumbel-max at temperature T) happens
+once on top — no per-method branching here.
+
+decode_step cost at the output layer (embedding floats per step, Q queries):
+  exact     V·d + Q·d                    (fused one-pass: kernels.topk_z)
+  mimps     nb·d + U·br·d + l·d + Q·d    — fused Eq. 5 pipeline (core.decode)
+  mince     nb·d + U·br·d + l·d + Q·d    — same plan; batched Halley solve
+  fmbe      P·M·d + P + nb·d + U·br·d + Q·d — V-independent Ẑ, IVF head
+                                           for candidates only
+  selfnorm  V·d + Q·d head only          (assumes Z == 1)
+U = deduplicated probed blocks <= min(Q·n_probe, nb); full accounting in
+DESIGN.md SS5/SS8 and BENCH_estimators.json.
 """
 from __future__ import annotations
 
@@ -18,8 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from ..core import mips
-from ..core.decode import mimps_decode
+from ..core.backends import BACKENDS, get_backend
+from ..core.decode import DecodeOut
 from ..models import Model
 
 
@@ -32,8 +39,9 @@ class ServeState:
 
 
 class Engine:
-    """Batched serving for one model. Retrieval state (IVF) is built once
-    from the output embedding at engine construction ("index build time")."""
+    """Batched serving for one model. Retrieval state (IVF index, FMBE
+    sketch) is built once from the output embedding at engine construction
+    ("index build time") by the method's registered backend."""
 
     def __init__(self, model: Model, params, max_len: int,
                  key: Optional[jax.Array] = None, use_pallas: bool = False):
@@ -43,13 +51,18 @@ class Engine:
         self.max_len = max_len
         self.use_pallas = use_pallas
         pc = self.cfg.partition
-        self.index = None
         key = key if key is not None else jax.random.PRNGKey(0)
-        w = model.head_matrix(params)
-        if pc.method == "mimps" and not self.cfg.n_codebooks \
-                and w.shape[0] >= 4 * pc.block_rows:
-            self.index = mips.build_ivf(key, w, block_rows=pc.block_rows,
-                                        n_clusters=pc.n_clusters)
+        # oracle-only study estimators have no batched serving path; they
+        # serve exact Z rather than failing (documented fallthrough).
+        method = pc.method if pc.method in BACKENDS else "exact"
+        self.backend = get_backend(method)
+        if self.cfg.n_codebooks:
+            # audio: small per-codebook vocab, exact softmax per codebook
+            self.state = None
+        else:
+            self.state = self.backend.build(pc, model.head_matrix(params),
+                                            key)
+        self.index = self.state.index if self.state is not None else None
 
     # -- steps (jit-compiled by callers / launch scripts) ---------------------
 
@@ -69,7 +82,8 @@ class Engine:
     def decode_step(self, state: ServeState, key: jax.Array, img=None,
                     temperature: float = 0.0
                     ) -> Tuple[Dict[str, jax.Array], ServeState]:
-        """One token for every stream; returns sampling outputs + new state."""
+        """One token for every stream; returns sampling outputs + new state.
+        ``temperature`` must be a static python float (0.0 = greedy)."""
         h, new_cache = self.model.decode_step(
             self.params, state.cache, state.last_token, state.pos, img=img)
         out = self.next_token_distribution(h, key, temperature)
@@ -82,58 +96,65 @@ class Engine:
     def next_token_distribution(self, h: jax.Array, key: jax.Array,
                                 temperature: float = 0.0
                                 ) -> Dict[str, jax.Array]:
+        """Sample one token per stream. Greedy at temperature == 0.0;
+        otherwise Gumbel-max over the retrieved head candidates with the
+        reported probability normalized by the estimated log Ẑ."""
         cfg = self.cfg
-        pc = cfg.partition
-        w = self.model.head_matrix(self.params)
+        k_est, k_samp = jax.random.split(key)
         if cfg.n_codebooks:
-            # audio: small per-codebook vocab -> exact softmax per codebook
+            # audio: exact per-codebook softmax; temperature over full logits
+            w = self.model.head_matrix(self.params)
             logits = jnp.einsum("bd,cvd->bcv", h, w)
             log_z = jax.nn.logsumexp(logits, -1)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            top = jnp.max(logits, -1)
+            if temperature > 0.0:
+                g = jax.random.gumbel(k_samp, logits.shape)
+                tok = jnp.argmax(logits / temperature + g, -1)
+            else:
+                tok = jnp.argmax(logits, -1)
+            tok = tok.astype(jnp.int32)
+            top = jnp.take_along_axis(logits, tok[..., None], -1)[..., 0]
             return {"token": tok, "log_prob": top - log_z, "log_z": log_z}
 
-        if pc.method == "mimps" and self.index is not None:
-            # fused batched pipeline: one coarse-probe matmul, deduplicated
-            # head blocks, shared tail sample, Eq. 5 combine with
-            # n_tail_total = N - k_eff and the post-rejection sample count.
-            out = mimps_decode(self.index, h, key, n_probe=pc.n_probe,
-                               l=pc.l, k=1, use_pallas=self.use_pallas)
-            return {"token": out.top_id[:, 0].astype(jnp.int32),
-                    "log_prob": out.top_score[:, 0] - out.log_z,
-                    "log_z": out.log_z}
+        pc = cfg.partition
+        n_cand = pc.sample_k if temperature > 0.0 else 1
+        out = self.backend.decode(self.state, h, k_est, pc, k=n_cand,
+                                  use_pallas=self.use_pallas)
+        return _sample_candidates(out, k_samp, temperature)
 
-        if pc.method == "selfnorm":
-            # head-only argmax; Z assumed 1 (trained with selfnorm loss)
-            logits = h @ w.T
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            top = jnp.max(logits, -1)
-            return {"token": tok, "log_prob": top,
-                    "log_z": jnp.zeros_like(top)}
 
-        # exact: fused single pass (Pallas on TPU, streaming XLA elsewhere)
-        if self.use_pallas:
-            from ..kernels.ops import fused_topk_z
-            lse, topv, topi = fused_topk_z(h, w, k=1)
-            return {"token": topi[:, 0], "log_prob": topv[:, 0] - lse,
-                    "log_z": lse}
-        logits = h @ w.T
-        log_z = jax.nn.logsumexp(logits, -1)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        return {"token": tok, "log_prob": jnp.max(logits, -1) - log_z,
-                "log_z": log_z}
+def _sample_candidates(out: DecodeOut, key: jax.Array,
+                       temperature: float) -> Dict[str, jax.Array]:
+    """Gumbel-max over retrieved candidates: token ~ softmax(s/T) restricted
+    to the head. log_prob reports the model's T=1 probability of the chosen
+    token, normalized with the estimated log Ẑ (selfnorm's Ẑ == 1)."""
+    if temperature > 0.0:
+        g = jax.random.gumbel(key, out.top_score.shape)
+        pick = jnp.argmax(out.top_score / temperature + g, axis=-1)
+    else:
+        pick = jnp.zeros(out.top_score.shape[:1], jnp.int32)  # scores sorted
+    tok = jnp.take_along_axis(out.top_id, pick[:, None], 1)[:, 0]
+    score = jnp.take_along_axis(out.top_score, pick[:, None], 1)[:, 0]
+    return {"token": tok.astype(jnp.int32), "log_prob": score - out.log_z,
+            "log_z": out.log_z}
 
 
 def generate(engine: Engine, prompt, n_tokens: int, key: jax.Array,
-             img=None):
-    """Greedy generation loop (host-driven); returns (B, n_tokens) ids."""
-    h, state = engine.prefill(prompt, img=img)
-    out0 = engine.next_token_distribution(h, key)
-    state = ServeState(cache=state.cache, pos=state.pos,
-                       last_token=prompt[:, -1])
+             img=None, temperature: float = 0.0):
+    """Generation loop (host-driven); greedy at temperature == 0.0, Gumbel-max
+    candidate sampling otherwise. Returns (B, n_tokens) ids.
+
+    The prompt is replayed through the decode cache; the last replay step
+    already emits position 0's sample, so there is no separate prefill
+    forward or full-output-layer pass (the seed engine ran both and
+    discarded their results)."""
+    batch = prompt.shape[0]
+    state = ServeState(
+        cache=engine.model.init_decode_state(batch, engine.max_len),
+        pos=jnp.zeros((), jnp.int32),
+        last_token=prompt[:, 0])
     toks = []
-    step_fn = jax.jit(lambda s, k: engine.decode_step(s, k, img=img))
-    # replay the prompt through the cache, then free-run
+    step_fn = jax.jit(lambda s, k: engine.decode_step(
+        s, k, img=img, temperature=temperature))
     for t in range(prompt.shape[1]):
         tok_t = prompt[:, t] if not engine.cfg.n_codebooks \
             else prompt[:, t, :]

@@ -1,27 +1,39 @@
 """Serve-time output layer — the paper's Eq. 2/3 under production sharding.
 
-Two lowered paths (both used by launch/dryrun.py):
+Lowered paths (all used by launch/dryrun.py), dispatched per method through
+``sharded_decode`` — the vocab-sharded face of the estimator-backend
+registry (``core.backends``):
 
  * exact   : streaming chunked logits + online LSE + argmax over the
              vocab-sharded head. O(V d / T) compute per chip, O(B) comms.
- * mimps   : the paper's estimator, vocab-sharded block-IVF inside
-             shard_map: each model shard probes its local blocks, scores
-             them, tail-samples its local complement; combine = one psum
-             (log Z) + one O(k) all_gather (argmax candidates).
+ * mimps   : the paper's Eq. 5, vocab-sharded block-IVF inside shard_map:
+             each model shard probes its local blocks, scores them,
+             tail-samples its local complement; combine = one psum (log Z)
+             + one O(T) all_gather (argmax candidates).
              O((nb + p.br + l) d / T) compute per chip — sublinear in V.
+ * mince   : Eq. 6/7 with the same local probe/tail sets. The NCE root-find
+             is nonlinear, so shards cannot combine log Z post hoc; instead
+             every Halley iteration psums the three derivative partial sums
+             (f', f'', f''') — O(1) floats per iteration — and all shards
+             walk one shared theta.
+ * fmbe    : Ẑ is O(P·M·d) replicated compute with no vocab-sized state, so
+             the estimate needs no sharding at all; only the argmax
+             candidates go through the sharded IVF probe.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from ..core import mince as _mince
 from ..core.distributed import shard_map
 from ..core.estimators import combine_head_tail_lse
+from ..core.feature_maps import FMBEState, fmbe_z_batch
 
 NEG = -1e30
 
@@ -67,7 +79,7 @@ def streaming_logz_argmax(h: jax.Array, w: jax.Array, chunk: int = 8192
 
 
 # ---------------------------------------------------------------------------
-# mimps: vocab-sharded block-IVF decode (the paper's technique, distributed)
+# vocab-sharded block-IVF machinery shared by the mimps/mince/fmbe bodies
 # ---------------------------------------------------------------------------
 
 class IVFSpecs(NamedTuple):
@@ -99,23 +111,11 @@ def ivf_partition_specs() -> IVFSpecs:
                     valid=P("model", None))
 
 
-def _local_ivf_logz(ivf: IVFSpecs, h: jax.Array, key: jax.Array,
-                    n_probe_local: int, l_local: int,
-                    axis_name: str = "model"):
-    """shard_map body: each shard = its own local IVF over its vocab rows.
+def _local_probe(ivf: IVFSpecs, h: jax.Array, n_probe_local: int):
+    """Coarse-probe the local shard, batched (ball upper-bound ranking).
 
-    Batched like core.decode: one (B, d) x (d, nb_l) centroid matmul probes
-    every query at once, and the l_local tail slots are drawn once and shared
-    across the batch (one (B, d) x (d, l) matmul). Eq. 5 scale uses the
-    per-query unprobed population and post-rejection sample count.
-    """
-    nb_l, br, d = ivf.v_blocks.shape
-    shard = lax.axis_index(axis_name)
-    n_slots = nb_l * br
-    flat = ivf.v_blocks.reshape(n_slots, d)
-    flat_valid = ivf.valid.reshape(n_slots)
-
-    # coarse probe, all queries at once (ball upper bound ranking)
+    Returns (bids (B, p), scores (B, p, br) pad-masked to NEG, bvalid,
+    k_eff (B,))."""
     qn = jnp.linalg.norm(h.astype(jnp.float32), axis=-1, keepdims=True)
     cs = (h @ ivf.centroids.T).astype(jnp.float32) + ivf.radius[None] * qn
     _, bids = lax.top_k(cs, n_probe_local)                 # (B, p)
@@ -124,10 +124,19 @@ def _local_ivf_logz(ivf: IVFSpecs, h: jax.Array, key: jax.Array,
                         preferred_element_type=jnp.float32)
     bvalid = ivf.valid[bids]                               # (B, p, br)
     scores = jnp.where(bvalid, scores, NEG)
-    k_eff = bvalid.sum(axis=(-2, -1))                      # (B,)
-    head_lse = jax.nn.logsumexp(scores.reshape(h.shape[0], -1), axis=-1)
+    return bids, scores, bvalid, bvalid.sum(axis=(-2, -1))
 
-    # shared tail sample: uniform slots, reject pads + per-query probed blocks
+
+def _local_tail(ivf: IVFSpecs, key: jax.Array, bids: jax.Array, h: jax.Array,
+                l_local: int, axis_name: str):
+    """Shared uniform tail sample over local slots + per-query rejection.
+
+    Returns (tail (B, l), ok (B, l), n_valid_local ())."""
+    nb_l, br, d = ivf.v_blocks.shape
+    n_slots = nb_l * br
+    flat = ivf.v_blocks.reshape(n_slots, d)
+    flat_valid = ivf.valid.reshape(n_slots)
+    shard = lax.axis_index(axis_name)
     slots = jax.random.randint(jax.random.fold_in(key, shard),
                                (l_local,), 0, n_slots)
     sblk = slots // br
@@ -135,42 +144,185 @@ def _local_ivf_logz(ivf: IVFSpecs, h: jax.Array, key: jax.Array,
     ok = unprobed & flat_valid[slots][None, :]             # (B, l)
     tail = jnp.einsum("bd,ld->bl", h, flat[slots],
                       preferred_element_type=jnp.float32)
-    tail_lse = jax.nn.logsumexp(jnp.where(ok, tail, NEG), axis=-1)
-    n_valid = flat_valid.sum()
-    n_tail_total = jnp.maximum(n_valid - k_eff, 0).astype(jnp.float32)
-    n_acc = ok.sum(axis=-1).astype(jnp.float32)
-    local_logz = combine_head_tail_lse(head_lse, tail_lse, n_tail_total,
-                                       n_acc)
+    return tail, ok, flat_valid.sum()
 
-    # local argmax candidate
-    fs = scores.reshape(h.shape[0], -1)                    # (B, p*br)
+
+def _merge_candidates(bids: jax.Array, scores: jax.Array, nb_l: int, br: int,
+                      axis_name: str):
+    """Local argmax candidate -> O(T) all_gather merge -> global slot id."""
+    fs = scores.reshape(scores.shape[0], -1)               # (B, p*br)
     am = jnp.argmax(fs, axis=-1)
     cand_s = jnp.take_along_axis(fs, am[:, None], -1)[:, 0]
     cand_i = (jnp.take_along_axis(bids, (am // br)[:, None], -1)[:, 0] * br
               + am % br)
-    # combine: distributed LSE (log Z) + O(T) candidate merge (argmax)
-    m = lax.pmax(local_logz, axis_name)
-    z = lax.psum(jnp.exp(local_logz - m), axis_name)
-    log_z = m + jnp.log(z)
     all_s = lax.all_gather(cand_s, axis_name, axis=0)      # (T, B)
     all_i = lax.all_gather(cand_i, axis_name, axis=0)
-    all_shard = jnp.arange(all_s.shape[0])
     best = jnp.argmax(all_s, axis=0)                       # (B,)
     top_score = jnp.take_along_axis(all_s, best[None], 0)[0]
     top_slot = jnp.take_along_axis(all_i, best[None], 0)[0]
     top_global = best.astype(jnp.int32) * nb_l * br + top_slot
+    return top_global, top_score
+
+
+def _logspace_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Distributed logsumexp of per-shard partial LSEs: O(1) floats."""
+    m = lax.pmax(x, axis_name)
+    return m + jnp.log(lax.psum(jnp.exp(x - m), axis_name))
+
+
+# ---------------------------------------------------------------------------
+# per-method shard_map bodies
+# ---------------------------------------------------------------------------
+
+def _local_ivf_logz(ivf: IVFSpecs, h: jax.Array, key: jax.Array,
+                    n_probe_local: int, l_local: int,
+                    axis_name: str = "model"):
+    """MIMPS (Eq. 5) body: each shard = its own local IVF over its vocab rows.
+
+    Batched like core.decode: one (B, d) x (d, nb_l) centroid matmul probes
+    every query at once, and the l_local tail slots are drawn once and shared
+    across the batch (one (B, d) x (d, l) matmul). Eq. 5 scale uses the
+    per-query unprobed population and post-rejection sample count.
+    """
+    nb_l, br, d = ivf.v_blocks.shape
+    bids, scores, bvalid, k_eff = _local_probe(ivf, h, n_probe_local)
+    head_lse = jax.nn.logsumexp(scores.reshape(h.shape[0], -1), axis=-1)
+    tail, ok, n_valid = _local_tail(ivf, key, bids, h, l_local, axis_name)
+    tail_lse = jax.nn.logsumexp(jnp.where(ok, tail, NEG), axis=-1)
+    n_tail_total = jnp.maximum(n_valid - k_eff, 0).astype(jnp.float32)
+    n_acc = ok.sum(axis=-1).astype(jnp.float32)
+    local_logz = combine_head_tail_lse(head_lse, tail_lse, n_tail_total,
+                                       n_acc)
+    log_z = _logspace_psum(local_logz, axis_name)
+    top_global, top_score = _merge_candidates(bids, scores, nb_l, br,
+                                              axis_name)
     return log_z, top_global, top_score
+
+
+def _local_mince_logz(ivf: IVFSpecs, h: jax.Array, key: jax.Array,
+                      n_probe_local: int, l_local: int, iters: int = 25,
+                      solver: str = "halley", axis_name: str = "model"):
+    """MINCE (Eq. 6/7) body: the global NCE problem, derivative-psum'd.
+
+    Each shard holds its slice of the data set (local probe head) and noise
+    set (local tail sample); ``derivative_sums`` are plain sample sums, so
+    one psum of (f', f'', f''') per Halley iteration recovers the exact
+    global step — all shards walk one shared theta from one shared theta0.
+    """
+    nb_l, br, d = ivf.v_blocks.shape
+    b = h.shape[0]
+    bids, scores, bvalid, k_eff_l = _local_probe(ivf, h, n_probe_local)
+    tail, ok, n_valid_l = _local_tail(ivf, key, bids, h, l_local, axis_name)
+
+    k_eff = lax.psum(k_eff_l, axis_name).astype(jnp.float32)
+    n_acc = lax.psum(ok.sum(axis=-1), axis_name).astype(jnp.float32)
+    n_valid = lax.psum(n_valid_l, axis_name).astype(jnp.float32)
+    n_tail = jnp.maximum(n_valid - k_eff, 0.0)
+    log_ratio = (jnp.log(jnp.maximum(k_eff, 1.0)) +
+                 jnp.log(jnp.maximum(n_tail, 1.0)) -
+                 jnp.log(jnp.maximum(n_acc, 1.0)))         # (B,)
+
+    alpha = scores.reshape(b, -1) + log_ratio[:, None]
+    alpha_mask = bvalid.reshape(b, -1).astype(jnp.float32)
+    beta = tail + log_ratio[:, None]
+    beta_mask = ok.astype(jnp.float32)
+    head_lse_l = jax.nn.logsumexp(scores.reshape(b, -1), axis=-1)
+    theta0 = _logspace_psum(head_lse_l, axis_name)
+
+    def body(theta, _):
+        f1, f2, f3 = _mince.derivative_sums(theta, alpha, beta, alpha_mask,
+                                            beta_mask)
+        f1 = lax.psum(f1, axis_name)
+        f2 = lax.psum(f2, axis_name)
+        f3 = lax.psum(f3, axis_name)
+        return theta - _mince.halley_step(f1, f2, f3, solver=solver), None
+
+    theta, _ = lax.scan(body, theta0, None, length=iters)
+
+    tail_lse = _logspace_psum(
+        jax.nn.logsumexp(jnp.where(ok, tail, NEG), axis=-1), axis_name)
+    uniform = tail_lse + jnp.log(jnp.maximum(n_valid, 1.0)) - \
+        jnp.log(jnp.maximum(n_acc, 1.0))
+    log_z = jnp.where(k_eff == 0, uniform, theta)
+    log_z = jnp.where((n_acc == 0) | (n_tail == 0), theta0, log_z)
+    top_global, top_score = _merge_candidates(bids, scores, nb_l, br,
+                                              axis_name)
+    return log_z, top_global, top_score
+
+
+def _local_ivf_topk(ivf: IVFSpecs, h: jax.Array,
+                    n_probe_local: int, axis_name: str = "model"):
+    """Candidates-only body (FMBE): probe + argmax merge, no estimate."""
+    nb_l, br, _ = ivf.v_blocks.shape
+    bids, scores, _, _ = _local_probe(ivf, h, n_probe_local)
+    return _merge_candidates(bids, scores, nb_l, br, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# jit-composable wrappers + the sharded dispatch
+# ---------------------------------------------------------------------------
+
+def _shard_wrap(mesh, fn, ivf, h, key, batch_spec, n_out=3):
+    h_spec = P(*batch_spec, None)
+    in_specs = (ivf_partition_specs(), h_spec) + ((P(),) if key is not None
+                                                  else ())
+    out_specs = tuple(P(*batch_spec) for _ in range(n_out))
+    args = (ivf, h) + ((key,) if key is not None else ())
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_vma=False)(*args)
 
 
 def sharded_ivf_decode(mesh, ivf: IVFSpecs, h: jax.Array, key: jax.Array,
                        *, n_probe_local: int, l_local: int,
                        batch_spec=P("data")):
-    """jit-composable shard_map wrapper. h (B, d) sharded over data."""
+    """Sharded MIMPS decode. h (B, d) sharded over data."""
     fn = functools.partial(_local_ivf_logz, n_probe_local=n_probe_local,
                            l_local=l_local)
-    h_spec = P(*batch_spec, None)
-    return shard_map(
-        fn, mesh=mesh,
-        in_specs=(ivf_partition_specs(), h_spec, P()),
-        out_specs=(P(*batch_spec), P(*batch_spec), P(*batch_spec)),
-        check_vma=False)(ivf, h, key)
+    return _shard_wrap(mesh, fn, ivf, h, key, batch_spec)
+
+
+def sharded_mince_decode(mesh, ivf: IVFSpecs, h: jax.Array, key: jax.Array,
+                         *, n_probe_local: int, l_local: int,
+                         iters: int = 25, solver: str = "halley",
+                         batch_spec=P("data")):
+    """Sharded MINCE decode (derivative-psum Halley)."""
+    fn = functools.partial(_local_mince_logz, n_probe_local=n_probe_local,
+                           l_local=l_local, iters=iters, solver=solver)
+    return _shard_wrap(mesh, fn, ivf, h, key, batch_spec)
+
+
+def sharded_fmbe_decode(mesh, ivf: IVFSpecs, h: jax.Array, key: jax.Array,
+                        *, n_probe_local: int, fmbe_state: FMBEState,
+                        batch_spec=P("data"), l_local: int = 0):
+    """Sharded FMBE decode: replicated O(P·M·d) Ẑ + sharded candidates."""
+    del key, l_local
+    z = fmbe_z_batch(fmbe_state, h)
+    log_z = jnp.log(jnp.maximum(z, 1e-30))
+    fn = functools.partial(_local_ivf_topk, n_probe_local=n_probe_local)
+    top_id, top_s = _shard_wrap(mesh, fn, ivf, h, None, batch_spec, n_out=2)
+    return log_z, top_id, top_s
+
+
+SHARDED_BACKENDS = {
+    "mimps": sharded_ivf_decode,
+    "mince": sharded_mince_decode,
+    "fmbe": sharded_fmbe_decode,
+}
+
+
+def sharded_decode(mesh, method: str, ivf: IVFSpecs, h: jax.Array,
+                   key: jax.Array, *, n_probe_local: int, l_local: int,
+                   batch_spec=P("data"), **method_kwargs):
+    """Vocab-sharded face of the estimator-backend registry: dispatches to
+    the method's shard_map body, returning (log_z, top_id, top_score) each
+    (B,). 'exact' has no IVF state — call ``streaming_logz_argmax`` with the
+    sharded embedding instead."""
+    try:
+        fn = SHARDED_BACKENDS[method]
+    except KeyError:
+        raise ValueError(
+            f"no sharded backend for method {method!r}; have "
+            f"{sorted(SHARDED_BACKENDS)} + 'exact' via streaming_logz_argmax"
+        ) from None
+    return fn(mesh, ivf, h, key, n_probe_local=n_probe_local,
+              l_local=l_local, batch_spec=batch_spec, **method_kwargs)

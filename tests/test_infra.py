@@ -91,7 +91,8 @@ class TestElastic:
 
 
 class TestServe:
-    @pytest.mark.parametrize("method", ["exact", "mimps", "selfnorm"])
+    @pytest.mark.parametrize("method", ["exact", "mimps", "mince",
+                                        "selfnorm"])
     def test_decode_probabilities(self, rng, method):
         import dataclasses
         cfg = reduced_config("qwen1.5-4b")
