@@ -2,11 +2,142 @@
 the roofline reader. Prints ``name,us_per_call,derived`` CSV lines at the end.
 
   PYTHONPATH=src python -m benchmarks.run [--full]
+
+Regression gate (CI):
+
+  PYTHONPATH=src python -m benchmarks.run --check
+
+compares the freshly-written BENCH_decode.json / BENCH_estimators.json
+against the committed ``benchmarks/baseline.json`` and fails on a >25%
+wall-clock regression (us_per_step up or tokens_per_s down) for any tracked
+method, AND enforces the PR-3 wall-clock acceptance invariants:
+speedup_xla > 1, mimps faster than exact, mince within 1.5x of mimps.
+Refresh the baseline after a *deliberate* perf change with:
+
+  PYTHONPATH=src python -m benchmarks.run --update-baseline
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
 import sys
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "baseline.json")
+TOL = 1.25   # >25% regression fails
+
+
+def _machine() -> dict:
+    """Host fingerprint stored with the baseline: absolute wall-clock only
+    compares like against like (a slower CI runner generation is not a code
+    regression); the ratio invariants below are enforced everywhere."""
+    model = platform.processor() or ""
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.startswith("model name"):
+                    model = line.split(":", 1)[1].strip()
+                    break
+    except OSError:
+        pass
+    return {"machine": platform.machine(), "cpu_count": os.cpu_count(),
+            "cpu_model": model}
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _snapshot():
+    """The tracked perf surface of the two decode artifacts."""
+    dec = _load("BENCH_decode.json")
+    est = _load("BENCH_estimators.json")
+    snap = {"decode": {m: {"us_per_step": dec[m]["us_per_step"],
+                           "tokens_per_s": dec[m]["tokens_per_s"]}
+                       for m in ("exact", "mimps")},
+            "decode_speedup_xla": dec["speedup_xla"],
+            "estimators": {m: {"us_per_step": r["us_per_step"],
+                               "tokens_per_s": r["tokens_per_s"]}
+                           for m, r in est["methods"].items()}}
+    return snap, dec, est
+
+
+def update_baseline() -> None:
+    snap, _, _ = _snapshot()
+    snap["host"] = _machine()
+    with open(BASELINE_PATH, "w") as f:
+        json.dump(snap, f, indent=2)
+    print(f"baseline written -> {BASELINE_PATH}")
+
+
+def check() -> int:
+    """Compare fresh artifacts against the committed baseline. Returns the
+    number of failures (0 = green)."""
+    snap, dec, est = _snapshot()
+    base = _load(BASELINE_PATH)
+    failures = []
+    same_host = base.get("host") == _machine()
+    if not same_host:
+        print("note: baseline was recorded on a different host "
+              f"({base.get('host')} vs {_machine()}); absolute wall-clock "
+              "comparisons skipped, ratio invariants still enforced")
+
+    def cmp_section(name, cur, ref):
+        for method, row in ref.items():
+            if method not in cur:
+                failures.append(f"{name}.{method}: missing from artifact")
+                continue
+            us, us0 = cur[method]["us_per_step"], row["us_per_step"]
+            tps, tps0 = cur[method]["tokens_per_s"], row["tokens_per_s"]
+            if us > us0 * TOL:
+                failures.append(
+                    f"{name}.{method}: us_per_step {us:.0f} > "
+                    f"{TOL:.2f}x baseline {us0:.0f}")
+            if tps < tps0 / TOL:
+                failures.append(
+                    f"{name}.{method}: tokens_per_s {tps:.0f} < "
+                    f"baseline {tps0:.0f} / {TOL:.2f}")
+
+    if same_host:
+        cmp_section("decode", snap["decode"], base.get("decode", {}))
+        cmp_section("estimators", snap["estimators"],
+                    base.get("estimators", {}))
+
+    # wall-clock acceptance invariants (machine-relative, so they are stable
+    # across runner generations in a way absolute us_per_step is not)
+    if dec["speedup_xla"] <= 1.0:
+        failures.append(
+            f"decode: speedup_xla {dec['speedup_xla']:.2f} <= 1.0 — the "
+            f"sublinear estimator must beat the exact pass in wall-clock")
+    em = est["methods"]
+    if em["mimps"]["us_per_step"] >= em["exact"]["us_per_step"]:
+        failures.append(
+            f"estimators: mimps {em['mimps']['us_per_step']:.0f}us >= "
+            f"exact {em['exact']['us_per_step']:.0f}us")
+    if em["mince"]["us_per_step"] > 1.5 * em["mimps"]["us_per_step"]:
+        failures.append(
+            f"estimators: mince {em['mince']['us_per_step']:.0f}us > 1.5x "
+            f"mimps {em['mimps']['us_per_step']:.0f}us")
+    for m, cap in (("mimps", 0.5), ("mince", 1.0), ("fmbe", 0.5)):
+        if em[m]["rel_err_vs_exact"] >= cap:
+            failures.append(
+                f"estimators: {m} rel_err {em[m]['rel_err_vs_exact']:.3g} "
+                f">= {cap} (accuracy regression)")
+
+    if failures:
+        print("== bench regression check: FAIL ==")
+        for f in failures:
+            print("  " + f)
+    else:
+        print("== bench regression check: OK ==")
+        for name, sec in (("decode", snap["decode"]),
+                          ("estimators", snap["estimators"])):
+            for m, row in sec.items():
+                print(f"  {name}.{m}: {row['us_per_step']:.0f}us/step "
+                      f"({row['tokens_per_s']:.0f} tok/s)")
+    return len(failures)
 
 
 def main() -> None:
@@ -16,7 +147,19 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,t1,t2,t3,t4,kernels,roofline,"
                          "decode,estimators")
+    ap.add_argument("--check", action="store_true",
+                    help="compare BENCH_*.json against benchmarks/"
+                         "baseline.json; exit 1 on >25%% regression or "
+                         "broken wall-clock acceptance invariants")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite benchmarks/baseline.json from the current "
+                         "BENCH_*.json artifacts")
     args = ap.parse_args()
+    if args.check:
+        sys.exit(1 if check() else 0)
+    if args.update_baseline:
+        update_baseline()
+        return
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
@@ -54,6 +197,7 @@ def main() -> None:
     if sel("decode"):
         rep, us = decode_bench.run(quick=quick)
         csv.append(f"decode_mimps,{us:.1f},"
+                   f"speedup_xla={rep['speedup_xla']:.2f}x;"
                    f"bytes_reduction={rep['bytes_reduction']:.1f}x;"
                    f"bound_ok={rep['bound']['ok']}")
     if sel("estimators"):

@@ -34,7 +34,8 @@ def run(n=20000, d=64, n_queries=100, quick=False, fmbe_features=16384):
         lz = jax.vmap(lambda qq, kk: mimps_log_z(v, qq, 1000, 1000, kk))(
             q, keys)
         row["MIMPS"] = pct_abs_rel_error(lz, lz_true)
-        lz = jax.vmap(lambda qq, kk: mince_log_z(v, qq, 1, 1000, kk))(q, keys)
+        lz = jax.vmap(lambda qq, kk: mince_log_z(
+            v, qq, 1, 1000, kk, weighting="paper"))(q, keys)
         row["MINCE"] = pct_abs_rel_error(lz, lz_true)
         zf = jax.vmap(lambda qq: fmbe_estimate_z(fmbe_state, qq))(q)
         zt = np.exp(np.asarray(lz_true, np.float64))

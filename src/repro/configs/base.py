@@ -33,12 +33,27 @@ class PartitionConfig:
     n_clusters: int = 256
     n_probe: int = 8
     block_rows: int = 512         # vocab rows per Pallas block (cluster pad)
+    head_cap: int = 0             # static union capacity of the XLA decode
+                                  # paths (blocks); 0 = auto (n_probe plus
+                                  # overlap headroom, decode._resolve_head_cap).
+                                  # Shared-context decode batches dedup to
+                                  # U ~ n_probe, so the trimmed gather is the
+                                  # common case; overflow falls back to the
+                                  # full min(Q*n_probe, n_blocks) trace
+                                  # (slower, never wrong).
     # FMBE parameters
     fmbe_features: int = 4096     # P
     fmbe_max_degree: int = 8      # cap on M ~ Geometric(1/p)
     fmbe_p: float = 2.0
     # MINCE solver
-    mince_iters: int = 25
+    mince_iters: int = 2          # iterations of the general bracketed
+                                  # Halley solvers (oracle weighting='paper'
+                                  # and the sharded stats solve); the
+                                  # single-node anchored serving estimate is
+                                  # closed-form — its root IS the Eq.5
+                                  # anchor (mince.anchored_solve) — so it
+                                  # needs none. The seed's 25 dated from the
+                                  # unbracketed cold-start solver
     mince_solver: str = "halley"  # or "newton"
 
     def validate(self) -> None:

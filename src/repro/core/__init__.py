@@ -9,11 +9,13 @@ from .estimators import (exact_log_z, mimps_log_z, uniform_log_z,
                          mimps_ivf, estimate_log_z, relative_error,
                          head_tail_log_z, combine_head_tail_lse)
 from .feature_maps import (FeatureMap, FMBEState, make_feature_map,
-                           apply_feature_map, build_fmbe, fmbe_estimate_z,
-                           fmbe_z_batch)
+                           apply_feature_map, build_fmbe, build_fmbe_blocks,
+                           fmbe_estimate_z, fmbe_tail_z, fmbe_z_batch)
 from .kmeans import kmeans
-from .mince import (derivative_sums, halley_step, nce_objective, solve_log_z,
-                    solver_convergence_trace)
+from .mince import (MinceStats, anchored_atoms, derivative_sums,
+                    halley_step, mince_stats, nce_objective,
+                    solve_from_stats, solve_log_z, solve_shared_atoms,
+                    solver_convergence_trace, stats_derivative_sums)
 from .mips import (IVFIndex, build_ivf, probe, probe_batch, gather_scores,
                    head_count, exact_top_k)
 from .partition_layer import PartitionLayer
@@ -28,8 +30,11 @@ __all__ = [
     "BACKENDS", "BackendState", "EstimatorBackend", "get_backend",
     "register_backend", "FeatureMap", "FMBEState",
     "make_feature_map", "apply_feature_map", "build_fmbe", "fmbe_estimate_z",
-    "fmbe_z_batch", "kmeans", "solve_log_z", "derivative_sums", "halley_step",
-    "nce_objective", "solver_convergence_trace",
+    "fmbe_z_batch", "build_fmbe_blocks", "fmbe_tail_z", "kmeans",
+    "solve_log_z", "derivative_sums", "halley_step",
+    "nce_objective", "solver_convergence_trace", "MinceStats",
+    "anchored_atoms", "mince_stats", "solve_from_stats",
+    "solve_shared_atoms", "stats_derivative_sums",
     "IVFIndex", "build_ivf", "probe", "probe_batch", "gather_scores",
     "head_count", "exact_top_k", "PartitionLayer",
 ]

@@ -32,7 +32,8 @@ from ..configs.base import PartitionConfig
 from . import mips as _mips
 from .decode import (DecodeOut, exact_topk_decode, fmbe_decode, mimps_decode,
                      mince_decode, selfnorm_decode)
-from .feature_maps import FMBEState, build_fmbe, make_feature_map
+from .feature_maps import (FMBEState, build_fmbe, build_fmbe_blocks,
+                           make_feature_map)
 
 
 @dataclasses.dataclass
@@ -66,8 +67,18 @@ class EstimatorBackend:
 
     def decode(self, state: BackendState, h: jax.Array, key: jax.Array,
                cfg: PartitionConfig, *, k: int = 1,
-               use_pallas: bool = False) -> DecodeOut:
+               use_pallas: bool = False, **kernel_cfg) -> DecodeOut:
+        """``kernel_cfg`` carries the method's autotuned Pallas tile sizes
+        (``tune``'s return value); empty = kernel defaults."""
         raise NotImplementedError
+
+    def tune(self, state: BackendState, cfg: PartitionConfig, h: jax.Array,
+             key: jax.Array, *, path=None) -> dict:
+        """Measure-and-cache the method's Pallas tile sizes for a decode
+        batch shaped like ``h`` (kernels.autotune; on-disk cache keyed by
+        shape/dtype/backend). Returns kwargs for ``decode``; {} = nothing
+        to tune."""
+        return {}
 
     # -- SS5/SS8 byte accounting (embedding floats per decode step) ----------
 
@@ -122,16 +133,26 @@ def _head_floats(state: BackendState, cfg: PartitionConfig, q: int,
 class ExactBackend(EstimatorBackend):
     method = "exact"
 
-    def decode(self, state, h, key, cfg, *, k=1, use_pallas=False):
-        return exact_topk_decode(state.w, h, k=k, use_pallas=use_pallas)
+    def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
+               **kernel_cfg):
+        return exact_topk_decode(state.w, h, k=k, use_pallas=use_pallas,
+                                 **kernel_cfg)
+
+    def tune(self, state, cfg, h, key, *, path=None):
+        from ..kernels.autotune import tune_topk_z
+        return tune_topk_z(h, state.w, 1, path=path)
 
 
 @register_backend
 class SelfnormBackend(EstimatorBackend):
     method = "selfnorm"
 
-    def decode(self, state, h, key, cfg, *, k=1, use_pallas=False):
-        return selfnorm_decode(state.w, h, k=k, use_pallas=use_pallas)
+    def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
+               **kernel_cfg):
+        return selfnorm_decode(state.w, h, k=k, use_pallas=use_pallas,
+                               **kernel_cfg)
+
+    tune = ExactBackend.tune
 
 
 @register_backend
@@ -143,11 +164,26 @@ class MimpsBackend(EstimatorBackend):
         return BackendState(
             w=w, index=_build_index(cfg, w, key) if with_index else None)
 
-    def decode(self, state, h, key, cfg, *, k=1, use_pallas=False):
+    def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
+               **kernel_cfg):
         if state.index is None:
             return exact_topk_decode(state.w, h, k=k, use_pallas=use_pallas)
         return mimps_decode(state.index, h, key, n_probe=cfg.n_probe,
-                            l=cfg.l, k=k, use_pallas=use_pallas)
+                            l=cfg.l, k=k, head_cap=cfg.head_cap,
+                            use_pallas=use_pallas, **kernel_cfg)
+
+    def tune(self, state, cfg, h, key, *, path=None):
+        if state.index is None:
+            return {}
+        from ..kernels.autotune import tune_ivf_decode
+        from .decode import _tail_rows, make_plan
+        index = state.index
+        plan = make_plan(index, h, key, cfg.n_probe, max(cfg.l, 1))
+        rows = _tail_rows(index, plan)
+        row_logw = jnp.where(index.valid, 0.0, -1e30).astype(jnp.float32)
+        return tune_ivf_decode(index.v_blocks, h, plan.head_ids,
+                               plan.head_live, plan.head_member, row_logw,
+                               rows, plan.tail_accept, path=path)
 
     def embedding_floats(self, state, cfg, q, u=None):
         base = _head_floats(state, cfg, q, u)
@@ -164,12 +200,23 @@ class MinceBackend(EstimatorBackend):
         return BackendState(
             w=w, index=_build_index(cfg, w, key) if with_index else None)
 
-    def decode(self, state, h, key, cfg, *, k=1, use_pallas=False):
+    def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
+               **kernel_cfg):
         if state.index is None:
             return exact_topk_decode(state.w, h, k=k, use_pallas=use_pallas)
         return mince_decode(state.index, h, key, n_probe=cfg.n_probe,
                             l=cfg.l, k=k, iters=cfg.mince_iters,
-                            solver=cfg.mince_solver, use_pallas=use_pallas)
+                            solver=cfg.mince_solver, head_cap=cfg.head_cap,
+                            use_pallas=use_pallas, **kernel_cfg)
+
+    def tune(self, state, cfg, h, key, *, path=None):
+        if state.index is None:
+            return {}
+        from ..kernels.autotune import tune_union_scores
+        from .decode import make_plan
+        plan = make_plan(state.index, h, key, cfg.n_probe, max(cfg.l, 1))
+        return tune_union_scores(state.index.v_blocks, h, plan.head_ids,
+                                 plan.head_live, path=path)
 
     # same traffic shape as MIMPS: union head blocks + shared tail rows
     embedding_floats = MimpsBackend.embedding_floats
@@ -184,21 +231,40 @@ class FmbeBackend(EstimatorBackend):
         kf, ki = jax.random.split(key)
         fm = make_feature_map(kf, w.shape[-1], cfg.fmbe_features,
                               max_degree=cfg.fmbe_max_degree, p=cfg.fmbe_p)
-        return BackendState(
-            w=w, index=_build_index(cfg, w, ki) if with_index else None,
-            fmbe=build_fmbe(fm, w))
+        index = _build_index(cfg, w, ki) if with_index else None
+        if index is not None:
+            # block-partitioned lambdas (the exact-head/sketch-tail hybrid);
+            # lambda_tilde is their sum — one O(V P M d) phi pass, not two
+            lam_b = build_fmbe_blocks(fm, index.v_blocks, index.valid)
+            fmbe = FMBEState(fm=fm, lambda_tilde=lam_b.sum(0),
+                             lambda_blocks=lam_b)
+        else:
+            fmbe = build_fmbe(fm, w)
+        return BackendState(w=w, index=index, fmbe=fmbe)
 
-    def decode(self, state, h, key, cfg, *, k=1, use_pallas=False):
+    def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
+               **kernel_cfg):
         from .feature_maps import fmbe_z_batch
         if state.index is None:
             out = exact_topk_decode(state.w, h, k=k, use_pallas=use_pallas)
             z = fmbe_z_batch(state.fmbe, h, use_pallas=use_pallas)
             return out._replace(log_z=jnp.log(jnp.maximum(z, 1e-30)))
         return fmbe_decode(state.fmbe, state.index, h, key,
-                           n_probe=cfg.n_probe, k=k, use_pallas=use_pallas)
+                           n_probe=cfg.n_probe, k=k, head_cap=cfg.head_cap,
+                           use_pallas=use_pallas, **kernel_cfg)
+
+    def tune(self, state, cfg, h, key, *, path=None):
+        from ..kernels.autotune import tune_fmbe_z
+        fm = state.fmbe.fm
+        return tune_fmbe_z(fm.omega, fm.degree, fm.coef,
+                           state.fmbe.lambda_tilde, h, path=path)
 
     def embedding_floats(self, state, cfg, q, u=None):
-        # feature sketch (omega + lambda) + the candidate head; no tail
+        # feature sketch (omega + lambda) + the candidate head + the
+        # per-query probed-block lambda gather of the tail hybrid
         fm = state.fmbe.fm
         p_feat, max_deg, d = fm.omega.shape
-        return p_feat * max_deg * d + p_feat + _head_floats(state, cfg, q, u)
+        lam_gather = (q * cfg.n_probe * p_feat
+                      if state.fmbe.lambda_blocks is not None else 0)
+        return (p_feat * max_deg * d + p_feat + lam_gather +
+                _head_floats(state, cfg, q, u))

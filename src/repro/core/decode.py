@@ -27,8 +27,20 @@ engine's N/l scale (both are unbiased; conditioning on the survivor count
 removes the rejection-noise component of the variance, at the cost of
 dropping the tail on the measure-zero-ish event that no sample survives).
 
-``mimps_decode(..., use_pallas=False)`` runs the same plan through an XLA
-gather path — the interpret/CPU reference the parity tests pin the kernel to.
+Wall-clock (the PR-3 fix): the XLA reference used to gather and score the
+full *static capacity* min(Q*p, nb) — at bench scale that is every block,
+i.e. an exact pass with gather overhead on top, which is why
+BENCH_decode.json recorded speedup_xla 0.56. The XLA paths now trim the
+union to a small static ``head_cap`` (auto: n_probe + overlap headroom,
+``_resolve_head_cap``) whenever the
+*measured* unique count fits — the common case for production decode
+batches, whose streams share context — via a ``lax.cond`` whose fallback
+branch is the old full-capacity trace, so overflow costs speed, never
+correctness.  Head rows and tail rows are then scored by ONE fused
+(Q,d)x(d, U*br + l) matmul over a single row gather.
+
+``mimps_decode(..., use_pallas=False)`` runs the same plan through this XLA
+path — the interpret/CPU reference the parity tests pin the kernel to.
 """
 from __future__ import annotations
 
@@ -42,7 +54,7 @@ from ..kernels.ivf_score import ivf_decode, union_scores
 from . import mince as _mince
 from . import mips as _mips
 from .estimators import NEG_INF, combine_head_tail_lse
-from .feature_maps import FMBEState, fmbe_z_batch
+from .feature_maps import FMBEState, fmbe_tail_z, fmbe_z_batch
 
 
 class DecodePlan(NamedTuple):
@@ -122,42 +134,101 @@ def make_plan(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
                       n_accept=accept.sum(axis=-1))
 
 
-def _decode_ref(index: _mips.IVFIndex, h: jax.Array, plan: DecodePlan,
-                k: int):
-    """XLA reference for the fused kernel: same plan, gather-based compute.
+def _resolve_head_cap(head_cap: int, n_probe: int, capacity: int) -> int:
+    """0 = auto: the probe width plus headroom for partial overlap (dedup on
+    a shared-context batch drives U -> n_probe; the fallback trace covers
+    genuinely uncorrelated batches)."""
+    if head_cap <= 0:
+        head_cap = max(n_probe + max(4, n_probe // 2), 8)
+    return min(head_cap, capacity)
 
-    Materializes the (Q, U, br) score tensor the Pallas path exists to avoid;
-    numerics must match ivf_decode to float32 round-off.
-    """
-    br = index.block_rows
-    blocks = index.v_blocks[plan.head_ids]               # (U, br, d)
-    scores = jnp.einsum("ubd,qd->qub", blocks, h,
-                        preferred_element_type=jnp.float32)
-    logw = jnp.where(index.valid, 0.0, NEG_INF)[plan.head_ids]   # (U, br)
-    eff = scores + logw[None]
-    eff = jnp.where(plan.head_member[:, :, None], eff, NEG_INF)
-    q = h.shape[0]
-    flat = eff.reshape(q, -1)
-    head_lse = jax.nn.logsumexp(flat, axis=-1)
-    topv, pos = jax.lax.top_k(flat, k)
-    topi = plan.head_ids[pos // br] * br + pos % br       # global slot ids
-    rows = index.v_blocks[plan.tail_blocks, plan.tail_rows]      # (l, d)
+
+def _tail_rows(index: _mips.IVFIndex, plan: DecodePlan):
+    """Shared tail rows gathered once into a dense (l, d) staging buffer —
+    what both the Pallas kernel's tiled tail phase and the XLA path's fused
+    matmul consume (l*d HBM floats either way)."""
+    flat = index.v_blocks.reshape(-1, index.v_blocks.shape[-1])
+    slots = plan.tail_blocks * index.block_rows + plan.tail_rows
+    return flat[slots]
+
+
+def _tail_row_scores(index: _mips.IVFIndex, h: jax.Array, plan: DecodePlan):
+    """Tail staging rows + their (Q, l) f32 scores (one small matmul)."""
+    rows = _tail_rows(index, plan)
     ts = jnp.einsum("qd,ld->ql", h, rows,
-                    preferred_element_type=jnp.float32)   # (Q, l)
-    tail_lse = jax.nn.logsumexp(
-        jnp.where(plan.tail_accept, ts, NEG_INF), axis=-1)
-    # match the kernel's contract: queries with zero surviving samples get a
-    # genuine -inf, not NEG_INF + log(l)
-    tail_lse = jnp.where(jnp.any(plan.tail_accept, axis=-1), tail_lse,
-                         -jnp.inf)
-    return head_lse, tail_lse, topv, topi.astype(jnp.int32)
+                    preferred_element_type=jnp.float32)
+    return rows, ts
+
+
+def _masked_tail_lse(ts: jax.Array, accept: jax.Array) -> jax.Array:
+    """Per-query tail LSE; genuine -inf where no sample survived (the
+    fused-kernel contract)."""
+    tail_lse = jax.nn.logsumexp(jnp.where(accept, ts, NEG_INF), axis=-1)
+    return jnp.where(jnp.any(accept, axis=-1), tail_lse, -jnp.inf)
+
+
+def _head_scores_xla(index: _mips.IVFIndex, h: jax.Array, head_ids, member,
+                     tail_rows=None):
+    """Gather the union's rows once, score with one dense matmul.
+
+    head_ids (U,) / member (Q, U) may be the trimmed or the full-capacity
+    slice. When ``tail_rows`` (l, d) is given, the tail rides the SAME
+    matmul (one (Q,d)x(d, U*br+l) dot instead of two dispatches) and the
+    (Q, l) tail scores are returned alongside.
+
+    Returns (scores (Q, U*br) f32, mask (Q, U*br) bool[, tail (Q, l) f32])
+    where mask combines per-query membership with cluster-pad validity.
+    """
+    nb, br, d = index.v_blocks.shape
+    flat = index.v_blocks.reshape(-1, d)
+    slot = (head_ids[:, None] * br +
+            jnp.arange(br, dtype=jnp.int32)[None, :]).reshape(-1)
+    w = jnp.take(flat, slot, axis=0)                       # (U*br, d)
+    if tail_rows is not None:
+        w = jnp.concatenate([w, tail_rows.astype(w.dtype)], axis=0)
+    scores = jax.lax.dot_general(
+        h, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (Q, U*br [+ l])
+    mask = (member[:, :, None] & index.valid[head_ids][None]
+            ).reshape(h.shape[0], -1)
+    if tail_rows is not None:
+        n_head = slot.shape[0]
+        return scores[:, :n_head], mask, scores[:, n_head:]
+    return scores, mask
+
+
+def _head_topk(index: _mips.IVFIndex, head_ids, scores, mask, k: int):
+    """(head_lse, topv, top slot ids) over masked union scores."""
+    br = index.v_blocks.shape[1]
+    eff = jnp.where(mask, scores, NEG_INF)
+    head_lse = jax.nn.logsumexp(eff, axis=-1)
+    topv, pos = jax.lax.top_k(eff, k)
+    topi = head_ids[pos // br] * br + pos % br             # global slot ids
+    return head_lse, topv, topi.astype(jnp.int32)
+
+
+def _with_trimmed_head(plan: DecodePlan, head_cap: int, branch_fn):
+    """Run ``branch_fn(head_ids, member)`` on the head_cap-trimmed union when
+    the measured unique count fits, else on the full capacity (identical
+    math, fixed output shapes — overflow costs wall-clock, not correctness).
+    """
+    capacity = plan.head_ids.shape[0]
+    if head_cap >= capacity:
+        return branch_fn(plan.head_ids, plan.head_member)
+    return jax.lax.cond(
+        plan.head_live <= head_cap,
+        lambda: branch_fn(plan.head_ids[:head_cap],
+                          plan.head_member[:, :head_cap]),
+        lambda: branch_fn(plan.head_ids, plan.head_member))
 
 
 @partial(jax.jit, static_argnames=("n_probe", "l", "k", "use_pallas",
-                                   "block_q", "interpret"))
+                                   "block_q", "tail_tile", "head_cap",
+                                   "interpret"))
 def mimps_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
                  *, n_probe: int, l: int, k: int = 1,
                  use_pallas: bool = True, block_q: int = 128,
+                 tail_tile: int = 32, head_cap: int = 0,
                  interpret=None) -> DecodeOut:
     """Batched sublinear decode: h (Q, d) -> log Ẑ, top-k rows, per Eq. 5.
 
@@ -165,17 +236,30 @@ def mimps_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
       n_blocks*d (centroids) + U*br*d (deduplicated head) + l*d (tail rows)
     vs V*d for the exact path. U <= min(Q*n_probe, n_blocks), and decode
     batches serving overlapping contexts dedup toward U ~ n_probe.
+
+    ``block_q`` / ``tail_tile`` are the Pallas pipeline's autotunable tile
+    sizes (kernels.autotune); ``head_cap`` bounds the XLA path's static
+    union capacity (0 = auto, see ``_resolve_head_cap``).
     """
     plan = make_plan(index, h, key, n_probe, l)
+    tail_rows_g = _tail_rows(index, plan)
     if use_pallas:
         row_logw = jnp.where(index.valid, 0.0, NEG_INF).astype(jnp.float32)
         head_lse, tail_lse, topv, topi = ivf_decode(
             index.v_blocks, h, plan.head_ids, plan.head_live,
-            plan.head_member, row_logw,
-            plan.tail_blocks, plan.tail_rows, plan.tail_accept,
-            k=k, block_q=block_q, interpret=interpret)
+            plan.head_member, row_logw, tail_rows_g, plan.tail_accept,
+            k=k, block_q=block_q, tail_tile=tail_tile, interpret=interpret)
     else:
-        head_lse, tail_lse, topv, topi = _decode_ref(index, h, plan, k)
+        cap = _resolve_head_cap(head_cap, n_probe, plan.head_ids.shape[0])
+
+        def branch(ids, member):
+            scores, mask, ts = _head_scores_xla(index, h, ids, member,
+                                                tail_rows=tail_rows_g)
+            tl = _masked_tail_lse(ts, plan.tail_accept)
+            return _head_topk(index, ids, scores, mask, k) + (tl,)
+
+        head_lse, topv, topi, tail_lse = _with_trimmed_head(plan, cap,
+                                                            branch)
     n = index.n
     log_z = combine_head_tail_lse(
         head_lse, tail_lse,
@@ -191,24 +275,23 @@ def mimps_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
 # ---------------------------------------------------------------------------
 
 def union_head_scores(index: _mips.IVFIndex, h: jax.Array, plan: DecodePlan,
-                      use_pallas: bool, interpret=None):
+                      use_pallas: bool, interpret=None, block_q: int = 128):
     """Score the deduplicated probe union for every query.
 
-    Returns (scores (Q, U_cap, br) f32, mask (Q, U_cap, br) bool). Unlike
-    the fused MIMPS kernel this *does* materialize per-row scores — MINCE's
-    Halley iteration revisits every sample 'iters' times, so the alpha set
-    is inherent, not an implementation artifact.
+    Returns (scores (Q, U_cap, br) f32, mask (Q, U_cap, br) bool).
 
     Traffic: the Pallas path (``kernels.ivf_score.union_scores``) fetches
     each of the U *unique* blocks once per query tile (pad slots elide both
     DMA and compute), i.e. U·br·d embedding floats — the figure the SS5/SS8
     accounting reports. The XLA reference gathers all U_cap =
     min(Q·n_probe, nb) static slots (capacity·br·d, the ``floats_bound``
-    ceiling); it is the parity oracle, not the deployment path.
+    ceiling); it is the parity oracle, not the deployment path (which trims
+    to ``head_cap`` — see ``mince_decode`` / ``fmbe_decode``).
     """
     if use_pallas:
         scores = union_scores(index.v_blocks, h, plan.head_ids,
-                              plan.head_live, interpret=interpret)
+                              plan.head_live, block_q=block_q,
+                              interpret=interpret)
     else:
         blocks = index.v_blocks[plan.head_ids]              # (U_cap, br, d)
         scores = jnp.einsum("ubd,qd->qub", blocks, h,
@@ -217,29 +300,26 @@ def union_head_scores(index: _mips.IVFIndex, h: jax.Array, plan: DecodePlan,
     return scores, mask
 
 
-def _union_topk(index: _mips.IVFIndex, plan: DecodePlan, scores, mask,
-                k: int):
-    """Top-k (score, vocab id) over the masked union scores."""
-    q = scores.shape[0]
-    br = index.block_rows
-    flat = jnp.where(mask, scores, NEG_INF).reshape(q, -1)
-    topv, pos = jax.lax.top_k(flat, k)
-    topi = plan.head_ids[pos // br] * br + pos % br          # global slot ids
-    return topv, index.row_id.reshape(-1)[topi]
-
-
 @partial(jax.jit, static_argnames=("n_probe", "l", "k", "iters", "solver",
-                                   "use_pallas", "interpret"))
+                                   "use_pallas", "head_cap", "block_q",
+                                   "interpret"))
 def mince_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
-                 *, n_probe: int, l: int, k: int = 1, iters: int = 25,
+                 *, n_probe: int, l: int, k: int = 1, iters: int = 2,
                  solver: str = "halley", use_pallas: bool = True,
+                 head_cap: int = 0, block_q: int = 128,
                  interpret=None) -> DecodeOut:
     """Batched sublinear MINCE (Eq. 6/7): S_k(q) is the IVF probe head, the
     noise set is the plan's shared uniform tail — no oracle sort anywhere.
 
-    alpha_i = s_i + log(k_eff (N - k_eff) / n_accept) over probed head rows,
-    beta_j likewise over surviving tail samples; one batched trust-clamped
-    Halley sweep solves every query's theta = log Ẑ simultaneously.
+    Score-once: every embedding row is scored exactly once (the same trimmed
+    gather+matmul as MIMPS), and the solver never revisits it. The anchored
+    NCE estimating equation's root provably coincides with the Eq. 5 anchor
+    (the collapse identity — see ``mince.anchored_solve``), so the serving
+    estimate is evaluated in closed form at the anchor; ``iters``/``solver``
+    parameterize the general bracketed solvers used by the oracle
+    (weighting='paper') and sharded paths (the seed ran 25 cold-start
+    iterations per step over the full atom set and still diverged to
+    rel_err ~ 3e5 at bench scale).
 
     Degenerate heads are guarded per query: k_eff == 0 falls back to the
     uniform-noise-only objective (importance sampling over the tail), and an
@@ -248,34 +328,47 @@ def mince_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
     """
     assert l >= 1, "MINCE needs at least one noise sample"
     plan = make_plan(index, h, key, n_probe, l)
-    scores, mask = union_head_scores(index, h, plan, use_pallas, interpret)
-    q = h.shape[0]
-    head = scores.reshape(q, -1)
-    head_mask = mask.reshape(q, -1)
-    flat = index.v_blocks.reshape(-1, index.v_blocks.shape[-1])
-    slots = plan.tail_blocks * index.block_rows + plan.tail_rows
-    tail = jnp.einsum("qd,ld->ql", h, flat[slots],
-                      preferred_element_type=jnp.float32)    # (Q, l)
-    tail_mask = plan.tail_accept
+    tail_rows_g = _tail_rows(index, plan)
 
     n = index.n
     k_eff = plan.k_eff.astype(jnp.float32)
     n_acc = plan.n_accept.astype(jnp.float32)
     n_tail = jnp.maximum(n - k_eff, 0.0)
-    log_ratio = (jnp.log(jnp.maximum(k_eff, 1.0)) +
-                 jnp.log(jnp.maximum(n_tail, 1.0)) -
-                 jnp.log(jnp.maximum(n_acc, 1.0)))           # (Q,)
-    head_lse = jax.nn.logsumexp(
-        jnp.where(head_mask, head, NEG_INF), axis=-1)
-    tail_lse = jax.nn.logsumexp(
-        jnp.where(tail_mask, tail, NEG_INF), axis=-1)
-    tail_lse = jnp.where(jnp.any(tail_mask, axis=-1), tail_lse, -jnp.inf)
 
-    theta = _mince.solve_log_z(
-        head + log_ratio[:, None], tail + log_ratio[:, None], head_lse,
-        iters=iters, solver=solver,
-        alpha_mask=head_mask.astype(jnp.float32),
-        beta_mask=tail_mask.astype(jnp.float32))
+    def solve(scores, mask, ts):
+        """anchored-NCE estimate for one head slice — closed form."""
+        hl = jax.nn.logsumexp(jnp.where(mask, scores, NEG_INF), axis=-1)
+        tl = _masked_tail_lse(ts, plan.tail_accept)
+        # the collapse identity (mince.anchored_solve) proves the anchored
+        # estimating equation's unique root IS the Eq. 5 anchor, so the
+        # estimate is taken in closed form; the bracketed Halley machinery
+        # lives in anchored_solve (cold starts), solve_shared_atoms (oracle
+        # weighting='paper') and solve_from_stats (sharded one-psum combine)
+        theta = combine_head_tail_lse(hl, tl, n_tail, n_acc)
+        return hl, tl, theta
+
+    if use_pallas:
+        scores3, mask3 = union_head_scores(index, h, plan, True, interpret,
+                                           block_q=block_q)
+        q = h.shape[0]
+        scores, mask = scores3.reshape(q, -1), mask3.reshape(q, -1)
+        ts = jnp.einsum("qd,ld->ql", h, tail_rows_g,
+                        preferred_element_type=jnp.float32)
+        head_lse, tail_lse, theta = solve(scores, mask, ts)
+        _, topv, topi = _head_topk(index, plan.head_ids, scores, mask, k)
+    else:
+        cap = _resolve_head_cap(head_cap, n_probe, plan.head_ids.shape[0])
+
+        def branch(ids, member):
+            scores, mask, ts = _head_scores_xla(index, h, ids, member,
+                                                tail_rows=tail_rows_g)
+            hl, tl, theta = solve(scores, mask, ts)
+            _, topv, topi = _head_topk(index, ids, scores, mask, k)
+            return hl, tl, theta, topv, topi
+
+        head_lse, tail_lse, theta, topv, topi = _with_trimmed_head(
+            plan, cap, branch)
+
     # per-query degenerate guards (cannot happen at sane configs, must not NaN)
     uniform = combine_head_tail_lse(
         jnp.full_like(head_lse, NEG_INF), tail_lse,
@@ -283,27 +376,62 @@ def mince_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
     log_z = jnp.where(k_eff == 0, uniform, theta)
     log_z = jnp.where((n_acc == 0) | (n_tail == 0), head_lse, log_z)
 
-    topv, top_id = _union_topk(index, plan, scores, mask, k)
+    top_id = index.row_id.reshape(-1)[topi]
     return DecodeOut(log_z=log_z, top_score=topv, top_id=top_id,
                      head_lse=head_lse, tail_lse=tail_lse, k_eff=plan.k_eff)
 
 
-@partial(jax.jit, static_argnames=("n_probe", "k", "use_pallas", "interpret"))
+@partial(jax.jit, static_argnames=("n_probe", "k", "use_pallas", "head_cap",
+                                   "block_q", "block_p", "interpret"))
 def fmbe_decode(state: FMBEState, index: _mips.IVFIndex, h: jax.Array,
                 key: jax.Array, *, n_probe: int, k: int = 1,
-                use_pallas: bool = True, interpret=None) -> DecodeOut:
-    """Batched FMBE decode: log Ẑ from the random-feature sketch (O(P M d)
-    per query, independent of V), argmax/sampling candidates from the IVF
-    probe head via an l=0 head-only plan. The estimate is deterministic
+                use_pallas: bool = True, head_cap: int = 0,
+                block_q: int = 128, block_p: int = 128,
+                interpret=None) -> DecodeOut:
+    """Batched FMBE decode: exact head + sketch-estimated complement.
+
+    The probed head (the same l=0 plan the candidates come from) is scored
+    exactly; the random-feature sketch estimates only the *complement* mass
+    via the block-partitioned lambda table (``feature_maps.fmbe_tail_z``):
+
+        log Ẑ = logaddexp(head_lse, log max(phi(h)·lambda_rest, 0+))
+
+    The seed fed the whole vocabulary through the sketch, whose degree-capped
+    Taylor expansion collapses once scores exceed ~the cap (rel_err -> 1 at
+    bench scale); partitioning confines the sketch's bias/variance to the
+    tail fraction of Z, so the hybrid error is bounded by the head-recall
+    error regardless of score scale. Falls back to the seed's global-sketch
+    estimate when the state has no per-block table. O(P M d) per query plus
+    p·P lambda floats, still independent of V. The estimate is deterministic
     given the feature map; ``key`` only feeds the empty tail plan.
     """
     plan = make_plan(index, h, key, n_probe, l=0)   # head-only plan
-    scores, mask = union_head_scores(index, h, plan, use_pallas, interpret)
-    head_lse = jax.nn.logsumexp(
-        jnp.where(mask, scores, NEG_INF).reshape(h.shape[0], -1), axis=-1)
-    z = fmbe_z_batch(state, h, use_pallas=use_pallas, interpret=interpret)
-    log_z = jnp.log(jnp.maximum(z, 1e-30))
-    topv, top_id = _union_topk(index, plan, scores, mask, k)
+    cap = _resolve_head_cap(head_cap, n_probe, plan.head_ids.shape[0])
+
+    if use_pallas:
+        scores3, mask3 = union_head_scores(index, h, plan, True, interpret,
+                                           block_q=block_q)
+        q = h.shape[0]
+        head_lse, topv, topi = _head_topk(
+            index, plan.head_ids, scores3.reshape(q, -1),
+            mask3.reshape(q, -1), k)
+    else:
+        def branch(ids, member):
+            scores, mask = _head_scores_xla(index, h, ids, member)
+            return _head_topk(index, ids, scores, mask, k)
+
+        head_lse, topv, topi = _with_trimmed_head(plan, cap, branch)
+
+    if state.lambda_blocks is not None:
+        z_tail = fmbe_tail_z(state, h, plan.block_ids,
+                             use_pallas=use_pallas, interpret=interpret,
+                             block_q=block_q, block_p=block_p)
+        log_z = jnp.logaddexp(head_lse,
+                              jnp.log(jnp.maximum(z_tail, 1e-30)))
+    else:
+        z = fmbe_z_batch(state, h, use_pallas=use_pallas, interpret=interpret)
+        log_z = jnp.log(jnp.maximum(z, 1e-30))
+    top_id = index.row_id.reshape(-1)[topi]
     return DecodeOut(log_z=log_z, top_score=topv, top_id=top_id,
                      head_lse=head_lse,
                      tail_lse=jnp.full_like(log_z, -jnp.inf),
@@ -314,13 +442,16 @@ def fmbe_decode(state: FMBEState, index: _mips.IVFIndex, h: jax.Array,
 # Dense-output decodes (exact / selfnorm) behind the same DecodeOut contract
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
+@partial(jax.jit, static_argnames=("k", "use_pallas", "block_q", "block_v",
+                                   "interpret"))
 def exact_topk_decode(w: jax.Array, h: jax.Array, *, k: int = 1,
-                      use_pallas: bool = False, interpret=None) -> DecodeOut:
+                      use_pallas: bool = False, block_q: int = 128,
+                      block_v: int = 512, interpret=None) -> DecodeOut:
     """Exact log Z + top-k in one pass (Pallas ``topk_z`` or streaming XLA)."""
     if use_pallas:
         from ..kernels.topk_z import topk_z
-        lse, topv, topi = topk_z(h, w, k, interpret=interpret)
+        lse, topv, topi = topk_z(h, w, k, block_q=block_q, block_v=block_v,
+                                 interpret=interpret)
     else:
         logits = (h @ w.T).astype(jnp.float32)
         lse = jax.nn.logsumexp(logits, -1)

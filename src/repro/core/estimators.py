@@ -146,12 +146,26 @@ def nmimps_log_z(v: jax.Array, q: jax.Array, k: int) -> jax.Array:
     return _lse(vals)
 
 
-@partial(jax.jit, static_argnames=("k", "l", "iters", "solver"))
+@partial(jax.jit, static_argnames=("k", "l", "iters", "solver", "weighting"))
 def mince_log_z(v: jax.Array, q: jax.Array, k: int, l: int, key: jax.Array,
-                iters: int = 25, solver: str = "halley") -> jax.Array:
+                iters: int = 25, solver: str = "halley",
+                weighting: str = "anchored") -> jax.Array:
     """MINCE (Eq. 6/7): solve for Z via NCE with S_k as data, uniform noise.
 
-    alpha_i = log a_i = s_i + log(k (N-k) / l); beta_j likewise over noise.
+    weighting='paper' is the literal Eq. 6/7 setup (alpha_i = s_i +
+    log(k (N-k)/l) over the enumerated head, beta_j likewise over noise) —
+    what Table 1 reproduces, and what diverges at concentrated score scales
+    because the enumerated top-k is *not* a k-sample from p = exp(s)/Z
+    (BENCH_estimators.json recorded rel_err ~ 3e5 before this fix; see
+    ``core.mince`` for the analysis).
+
+    weighting='anchored' (default) keeps the NCE estimating equation and the
+    Halley solve but enters each enumerated/sampled atom with its importance
+    weight (``mince.anchored_atoms``), anchored at the Eq. 5 plug-in. The
+    equation then factorizes and its root coincides with the anchor (the
+    collapse identity — ``mince.anchored_solve``), so the estimate is
+    MIMPS-accurate in both flat and concentrated regimes and the bracketed
+    solve cannot diverge.
 
     Degenerate heads are guarded: k == 0 has no data samples, so the NCE
     objective cannot identify Z (log k would poison alpha with -inf and the
@@ -167,12 +181,24 @@ def mince_log_z(v: jax.Array, q: jax.Array, k: int, l: int, key: jax.Array,
     ret = oracle_retrieve(v, q)
     head = ret.scores_sorted[:k]
     noise = _complement_sample(key, ret, k, l)
-    log_ratio = jnp.log(jnp.float32(k)) + jnp.log(jnp.float32(n - k)) - \
-        jnp.log(jnp.float32(l))
-    alpha = head + log_ratio
-    beta = noise + log_ratio
     theta0 = _lse(head)   # head mass is a sane starting point
-    return _mince.solve_log_z(alpha, beta, theta0, iters=iters, solver=solver)
+    if weighting == "paper":
+        log_ratio = jnp.log(jnp.float32(k)) + jnp.log(jnp.float32(n - k)) - \
+            jnp.log(jnp.float32(l))
+        alpha = head + log_ratio
+        beta = noise + log_ratio
+        return _mince.solve_log_z(alpha, beta, theta0, iters=iters,
+                                  solver=solver)
+    assert weighting == "anchored", weighting
+    c_t = jnp.float32(n - k) / jnp.float32(l)
+    scores = jnp.concatenate([head, noise])
+    mult = jnp.concatenate([jnp.ones((k,), jnp.float32),
+                            jnp.full((l,), c_t, jnp.float32)])
+    anchor = head_tail_log_z(head, noise, jnp.float32(n - k), jnp.float32(l))
+    alpha, wd, wn = _mince.anchored_atoms(
+        scores, mult, n, jnp.float32(k), jnp.float32(l), anchor)
+    return _mince.solve_shared_atoms(alpha, wd, wn, anchor, iters=iters,
+                                     solver=solver)
 
 
 def fmbe_log_z(state: FMBEState, q: jax.Array) -> jax.Array:

@@ -8,11 +8,24 @@ exp(x.y) ~= sum_j phi_j(x) phi_j(y).
 We cap M at ``max_degree`` and renormalize the truncated geometric so the
 estimator is unbiased for the degree-capped Taylor expansion of exp (the
 residual past degree 8 is < 1e-4 for |x.y| <~ 4; documented in DESIGN.md).
+
+Block-partitioned sketch (the bench-scale accuracy fix): besides the global
+``lambda_tilde = sum_i phi(v_i)``, the serving build also keeps the per-IVF-
+block partial sums ``lambda_blocks[b] = sum_{i in block b} phi(v_i)``
+(nb x P floats). The decode hybrid then scores the probed head *exactly* and
+asks the sketch only for the complement mass,
+
+    Z_tail_hat(q) = phi(q) . (lambda_tilde - sum_{b probed} lambda_blocks[b]),
+
+so the truncated-Taylor bias and random-feature variance — catastrophic once
+scores exceed ~max_degree nats, which is exactly the concentrated regime
+where the head matters — are confined to the tail fraction of Z. See
+``core.decode.fmbe_decode``.
 """
 from __future__ import annotations
 
 import math
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +42,7 @@ class FeatureMap(NamedTuple):
 class FMBEState(NamedTuple):
     fm: FeatureMap
     lambda_tilde: jax.Array   # (P,) = sum_i phi(v_i)
+    lambda_blocks: Optional[jax.Array] = None  # (nb, P) per-IVF-block sums
 
 
 def make_feature_map(key: jax.Array, d: int, n_features: int,
@@ -76,6 +90,45 @@ def build_fmbe(fm: FeatureMap, v: jax.Array, chunk: int = 2048) -> FMBEState:
     init = jnp.zeros((fm.omega.shape[0],), fm.omega.dtype)
     lam, _ = jax.lax.scan(body, init, (v_chunks, m_chunks))
     return FMBEState(fm=fm, lambda_tilde=lam)
+
+
+def build_fmbe_blocks(fm: FeatureMap, v_blocks: jax.Array,
+                      valid: jax.Array) -> jax.Array:
+    """Per-IVF-block partial lambdas: (nb, br, d) -> (nb, P).
+
+    One scan over blocks (bounded memory, like ``build_fmbe``); cluster-pad
+    rows are masked out. ``lambda_blocks.sum(0) == lambda_tilde`` up to
+    float addition order.
+    """
+    def body(_, xs):
+        vb, mb = xs                                   # (br, d), (br,)
+        phi = apply_feature_map(fm, vb)               # (br, P)
+        return None, jnp.sum(phi * mb[:, None], axis=0)
+
+    _, lam = jax.lax.scan(body, None, (v_blocks, valid.astype(fm.omega.dtype)))
+    return lam
+
+
+def fmbe_tail_z(state: FMBEState, x: jax.Array, probed_blocks: jax.Array,
+                use_pallas: bool = False, interpret=None,
+                block_q: int = 128, block_p: int = 128) -> jax.Array:
+    """Signed sketch estimate of the *complement* mass per query.
+
+    x (Q, d), probed_blocks (Q, p) int32 -> (Q,):
+    phi(x_q) . (lambda_tilde - sum_{b in probed_q} lambda_blocks[b]).
+    Touches p·P lambda floats per query — independent of V and br.
+    """
+    assert state.lambda_blocks is not None, \
+        "fmbe_tail_z needs a block-partitioned build (build_fmbe_blocks)"
+    lam_rest = (state.lambda_tilde[None, :] -
+                state.lambda_blocks[probed_blocks].sum(axis=1))   # (Q, P)
+    if use_pallas:
+        from ..kernels.fmbe import fmbe_z as _fmbe_z
+        return _fmbe_z(state.fm.omega, state.fm.degree, state.fm.coef,
+                       lam_rest, x, block_q=block_q, block_p=block_p,
+                       interpret=interpret)
+    phi = apply_feature_map(state.fm, x)               # (Q, P)
+    return jnp.sum(phi * lam_rest.astype(phi.dtype), axis=-1)
 
 
 def fmbe_estimate_z(state: FMBEState, q: jax.Array) -> jax.Array:

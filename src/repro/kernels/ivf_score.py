@@ -14,13 +14,21 @@ Two kernels:
    through a (Q, p, br) HBM tensor. Kept as the simple reference/bench kernel.
 
  * ``ivf_decode`` — the fused batched decode pipeline. Grid
-   (Q/block_q, U + l): each grid step scores a **(block_q, d) query tile**
-   against one scalar-prefetched vocab block and folds the result directly
-   into per-query online-logsumexp accumulators (head and tail separately)
-   and a running top-k (the ``_select_topk`` sweep shared with
-   ``kernels.topk_z``). Head scores never touch HBM; the only embedding
-   traffic is the U deduplicated head blocks (U*br*d) plus l tail *rows*
-   (l*d) fetched row-granularly through the same scalar-prefetch mechanism.
+   (Q/block_q, U + l/tail_tile): each grid step scores a **(block_q, d)
+   query tile** against one scalar-prefetched vocab block (head phase) or a
+   dense ``(tail_tile, d)`` slab of pre-gathered tail rows (tail phase) and
+   folds the result directly into per-query online-logsumexp accumulators
+   (head and tail separately) and a running top-k (the ``_select_topk``
+   sweep shared with ``kernels.topk_z``). Head scoring, tail reduction and
+   the top-k merge share the single resident query tile — one pass over the
+   probe union per tile, no score tensor in HBM. The tail phase used to
+   issue one (1, d) row DMA + matvec per sample (l grid steps of ~1/128 MXU
+   utilization); rows are now staged dense once (one XLA gather, the same
+   l*d floats) and consumed ``tail_tile`` rows per step, which shrinks the
+   grid from U+l to U+l/tail_tile steps of real matmuls.
+
+``block_q`` and ``tail_tile`` are autotuned per (shape, dtype, backend) by
+``kernels.autotune`` with on-disk caching.
 
 HBM bytes per decode step drop from  V*d  to  U*br*d + l*d
 (+ n_blocks*d for centroids) — e.g. gemma3-4b (V=262144, block 512,
@@ -147,7 +155,7 @@ def union_scores(w_blocks, h, head_ids, head_live, *, block_q: int = 128,
 # fused batched decode: probe table -> (head lse, tail lse, top-k) per query
 # ---------------------------------------------------------------------------
 
-def _decode_kernel(hid_ref, live_ref, tb_ref, tr_ref,       # scalar prefetch
+def _decode_kernel(hid_ref, live_ref,                       # scalar prefetch
                    h_ref, wh_ref, logw_ref, member_ref, wt_ref, acc_ref,
                    hlse_ref, tlse_ref, topv_ref, topi_ref,
                    mh_scr, sh_scr, mt_scr, st_scr, tv_scr, ti_scr,
@@ -194,16 +202,17 @@ def _decode_kernel(hid_ref, live_ref, tb_ref, tr_ref,       # scalar prefetch
 
     @pl.when(si >= n_head)
     def _tail_step():
-        row = wt_ref[0]                                     # (1, d)
+        rows = wt_ref[...]                                  # (tt, d)
         s = jax.lax.dot_general(
-            h, row, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)             # (bq, 1)
-        acc = acc_ref[...]                                  # (bq, 1) 0/1
+            h, rows, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)             # (bq, tt)
+        acc = acc_ref[...]                                  # (bq, tt) 0/1
         eff = jnp.where(acc > 0, s, NEG)
         m_prev = mt_scr[...]
-        m_new = jnp.maximum(m_prev, eff)
+        m_new = jnp.maximum(m_prev, jnp.max(eff, axis=1, keepdims=True))
         contrib = jnp.where(eff > NEG * 0.5, jnp.exp(eff - m_new), 0.0)
-        st_scr[...] = st_scr[...] * jnp.exp(m_prev - m_new) + contrib
+        st_scr[...] = (st_scr[...] * jnp.exp(m_prev - m_new) +
+                       jnp.sum(contrib, axis=1, keepdims=True))
         mt_scr[...] = m_new
 
     @pl.when(si == pl.num_programs(1) - 1)
@@ -215,8 +224,9 @@ def _decode_kernel(hid_ref, live_ref, tb_ref, tr_ref,       # scalar prefetch
 
 
 def ivf_decode(w_blocks, h, head_ids, head_live, head_member, row_logw,
-               tail_blocks, tail_rows, tail_accept,
-               *, k: int = 1, block_q: int = 128, interpret=None):
+               tail_rows_g, tail_accept,
+               *, k: int = 1, block_q: int = 128, tail_tile: int = 32,
+               interpret=None):
     """Fused batched MIMPS decode over a deduplicated probe plan.
 
     Inputs (see ``core.decode`` for plan construction):
@@ -231,9 +241,13 @@ def ivf_decode(w_blocks, h, head_ids, head_live, head_member, row_logw,
                                O(capacity)
       head_member (Q, U) bool  query q probes union slot u
       row_logw    (nb, br) f32 0 for real rows, NEG for cluster-pad rows
-      tail_blocks (l,) int32   block of each shared tail sample
-      tail_rows   (l,) int32   row-within-block of each shared tail sample
+      tail_rows_g (l, d)       shared tail sample rows, staged dense by the
+                               caller (one XLA gather; l*d floats, consumed
+                               ``tail_tile`` rows per grid step)
       tail_accept (Q, l) bool  sample j survives rejection for query q
+
+    ``block_q`` (query tile) and ``tail_tile`` (tail rows per step) are the
+    autotuned knobs (kernels.autotune.tune_ivf_decode).
 
     Returns (head_lse (Q,), tail_lse (Q,), topv (Q, k), topi (Q, k)) with
     topi global *slot* ids (block*br + row); map through row_id outside.
@@ -244,41 +258,47 @@ def ivf_decode(w_blocks, h, head_ids, head_live, head_member, row_logw,
     nb, br, d = w_blocks.shape
     q = h.shape[0]
     n_head = head_ids.shape[0]
-    l = tail_blocks.shape[0]
+    l = tail_rows_g.shape[0]
     assert l >= 1, "fused decode needs at least one tail sample"
     block_q = min(block_q, max(8, q))
+    tail_tile = max(1, min(tail_tile, l))
     pad_q = (-q) % block_q
+    pad_l = (-l) % tail_tile
     hp = jnp.pad(h, ((0, pad_q), (0, 0)))
     member_p = jnp.pad(head_member.astype(jnp.float32), ((0, pad_q), (0, 0)))
-    accept_p = jnp.pad(tail_accept.astype(jnp.float32), ((0, pad_q), (0, 0)))
+    # pad rows contribute via accept == 0 only — value never read; keep the
+    # rows' own dtype (mixed-dtype dot with f32 accumulate, like the head
+    # phase) so bf16 queries stay bit-comparable with the XLA reference
+    wt_p = jnp.pad(tail_rows_g, ((0, pad_l), (0, 0)))
+    accept_p = jnp.pad(tail_accept.astype(jnp.float32),
+                       ((0, pad_q), (0, pad_l)))
     qp = hp.shape[0]
-
-    def _hs(si):
-        return jnp.minimum(si, n_head - 1)
+    n_tiles = (l + pad_l) // tail_tile
 
     def _ts(si):
-        return jnp.clip(si - n_head, 0, l - 1)
+        return jnp.clip(si - n_head, 0, n_tiles - 1)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
-        grid=(qp // block_q, n_head + l),
+        num_scalar_prefetch=2,
+        grid=(qp // block_q, n_head + n_tiles),
         in_specs=[
             pl.BlockSpec((block_q, d),
-                         lambda qi, si, hid, lv, tb, tr: (qi, 0)),
+                         lambda qi, si, hid, lv: (qi, 0)),
             # head: whole probed block; clamped (hence DMA-elided) on tail steps
             pl.BlockSpec((1, br, d),
-                         lambda qi, si, hid, lv, tb, tr: (hid[_hs(si)], 0, 0)),
+                         lambda qi, si, hid, lv:
+                         (hid[jnp.minimum(si, lv[0] - 1)], 0, 0)),
             pl.BlockSpec((1, br),
-                         lambda qi, si, hid, lv, tb, tr: (hid[_hs(si)], 0)),
+                         lambda qi, si, hid, lv:
+                         (hid[jnp.minimum(si, lv[0] - 1)], 0)),
             pl.BlockSpec((block_q, 1),
-                         lambda qi, si, hid, lv, tb, tr: (qi, _hs(si))),
-            # tail: single (1, 1, d) row of the addressed block — row-granular
-            # gather through the same scalar-prefetch mechanism (l*d floats)
-            pl.BlockSpec((1, 1, d),
-                         lambda qi, si, hid, lv, tb, tr: (tb[_ts(si)],
-                                                          tr[_ts(si)], 0)),
-            pl.BlockSpec((block_q, 1),
-                         lambda qi, si, hid, lv, tb, tr: (qi, _ts(si))),
+                         lambda qi, si, hid, lv:
+                         (qi, jnp.minimum(si, n_head - 1))),
+            # tail: dense (tail_tile, d) slab of the staged rows
+            pl.BlockSpec((tail_tile, d),
+                         lambda qi, si, hid, lv: (_ts(si), 0)),
+            pl.BlockSpec((block_q, tail_tile),
+                         lambda qi, si, hid, lv: (qi, _ts(si))),
         ],
         out_specs=[
             pl.BlockSpec((block_q, 1), lambda qi, si, *_: (qi, 0)),
@@ -309,6 +329,5 @@ def ivf_decode(w_blocks, h, head_ids, head_live, head_member, row_logw,
         interpret=interpret,
     )(head_ids.astype(jnp.int32),
       jnp.asarray(head_live, jnp.int32).reshape(1),
-      tail_blocks.astype(jnp.int32), tail_rows.astype(jnp.int32),
-      hp, w_blocks, row_logw, member_p, w_blocks, accept_p)
+      hp, w_blocks, row_logw, member_p, wt_p, accept_p)
     return hlse[:q, 0], tlse[:q, 0], topv[:q], topi[:q]

@@ -44,7 +44,8 @@ class Engine:
     ("index build time") by the method's registered backend."""
 
     def __init__(self, model: Model, params, max_len: int,
-                 key: Optional[jax.Array] = None, use_pallas: bool = False):
+                 key: Optional[jax.Array] = None, use_pallas: bool = False,
+                 autotune: bool = False, autotune_batch: int = 64):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -63,6 +64,16 @@ class Engine:
             self.state = self.backend.build(pc, model.head_matrix(params),
                                             key)
         self.index = self.state.index if self.state is not None else None
+        # measured Pallas tile sizes, swept once at engine build on a
+        # representative decode batch and cached on disk (kernels.autotune);
+        # the per-query tiles clamp to the live batch, so one sweep covers
+        # the serving range
+        self.kernel_cfg: dict = {}
+        if autotune and use_pallas and self.state is not None:
+            h_rep = 0.1 * jax.random.normal(
+                jax.random.fold_in(key, 0xA07),
+                (autotune_batch, self.cfg.d_model)).astype(self.cfg.dtype)
+            self.kernel_cfg = self.backend.tune(self.state, pc, h_rep, key)
 
     # -- steps (jit-compiled by callers / launch scripts) ---------------------
 
@@ -118,7 +129,8 @@ class Engine:
         pc = cfg.partition
         n_cand = pc.sample_k if temperature > 0.0 else 1
         out = self.backend.decode(self.state, h, k_est, pc, k=n_cand,
-                                  use_pallas=self.use_pallas)
+                                  use_pallas=self.use_pallas,
+                                  **self.kernel_cfg)
         return _sample_candidates(out, k_samp, temperature)
 
 
@@ -139,29 +151,129 @@ def _sample_candidates(out: DecodeOut, key: jax.Array,
 
 
 def generate(engine: Engine, prompt, n_tokens: int, key: jax.Array,
-             img=None, temperature: float = 0.0):
-    """Generation loop (host-driven); greedy at temperature == 0.0, Gumbel-max
-    candidate sampling otherwise. Returns (B, n_tokens) ids.
+             img=None, temperature: float = 0.0, host_loop: bool = False,
+             return_aux: bool = False):
+    """Generation loop; greedy at temperature == 0.0, Gumbel-max candidate
+    sampling otherwise. Returns (B, n_tokens) ids.
+
+    Device-resident by default: prompt replay and generation run as ONE
+    compiled ``jax.lax.scan`` over decode steps — per-step keys are
+    pre-split, every replay step force-feeds its prompt token, and the whole
+    loop is a single XLA dispatch (the seed dispatched one jitted step per
+    token from Python, paying a host round-trip per generated token).
+    ``host_loop=True`` keeps the step-by-step Python loop as a debug mode;
+    both paths produce bit-identical tokens / log_prob / log_z
+    (tests/test_generate.py pins this).
 
     The prompt is replayed through the decode cache; the last replay step
     already emits position 0's sample, so there is no separate prefill
     forward or full-output-layer pass (the seed engine ran both and
     discarded their results)."""
+    if prompt.shape[1] == 0:
+        raise ValueError(
+            "generate() needs a non-empty prompt: the first sample is "
+            "emitted by the last prompt-replay step, so there is nothing "
+            "to condition on (the seed crashed here with UnboundLocalError)")
+    if n_tokens < 1:
+        raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
+    if host_loop:
+        return _generate_host(engine, prompt, n_tokens, key, img=img,
+                              temperature=temperature, return_aux=return_aux)
+    t_replay = prompt.shape[1]
+    fold_ids = jnp.concatenate([
+        jnp.arange(t_replay, dtype=jnp.int32),
+        10_000 + jnp.arange(n_tokens - 1, dtype=jnp.int32)])
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(fold_ids)
+    # prompt tokens step-major, padded to the full scan length (the padding
+    # is never read: is_replay gates on t < t_replay)
+    prompt_sm = jnp.moveaxis(prompt, 1, 0)
+    total = fold_ids.shape[0]
+    pad = total - t_replay
+    prompt_sm = jnp.concatenate(
+        [prompt_sm, jnp.zeros((pad,) + prompt_sm.shape[1:],
+                              prompt_sm.dtype)]) if pad else prompt_sm
+    is_replay = jnp.arange(total) < t_replay
+    run = _scan_runner(engine, prompt.shape, str(jnp.asarray(prompt).dtype),
+                       t_replay, float(temperature))
+    toks, lp, lz = run(prompt_sm, keys, is_replay, img)
+    if return_aux:
+        return toks, {"log_prob": lp, "log_z": lz}
+    return toks
+
+
+def _scan_runner(engine: Engine, prompt_shape, prompt_dtype, t_replay: int,
+                 temperature: float):
+    """Build (or fetch) the compiled scan for one (engine, shapes, T) cell.
+
+    The executable is cached on the engine: jit keys its trace cache on the
+    function object, so a fresh inner ``run`` per generate() call would
+    recompile the whole replay+decode scan every request — exactly the
+    dispatch overhead the device-resident loop exists to remove. ``img`` is
+    a traced *argument* (not a closure constant) so cached executables serve
+    changing images.
+    """
+    cache = getattr(engine, "_scan_runners", None)
+    if cache is None:
+        cache = engine._scan_runners = {}
+    key = (prompt_shape, prompt_dtype, t_replay, temperature)
+    run = cache.get(key)
+    if run is not None:
+        return run
+
+    @jax.jit
+    def run(prompt_sm, keys, is_replay, img):
+        state = ServeState(
+            cache=engine.model.init_decode_state(prompt_shape[0],
+                                                 engine.max_len),
+            pos=jnp.zeros((), jnp.int32),
+            last_token=prompt_sm[0])
+
+        def step(state, xs):
+            k_t, tok_t, replay_t = xs
+            last = jnp.where(replay_t, tok_t, state.last_token)
+            state = dataclasses.replace(state, last_token=last)
+            out, state = engine.decode_step(state, k_t, img=img,
+                                            temperature=temperature)
+            return state, (out["token"], out["log_prob"], out["log_z"])
+
+        _, (toks, lp, lz) = jax.lax.scan(step, state,
+                                         (keys, prompt_sm, is_replay))
+        # steps 0..t_replay-2 replay the prompt; the emitted samples start
+        # at the last replay step (position 0 of the generation)
+        sl = slice(t_replay - 1, None)
+        return (jnp.moveaxis(toks[sl], 0, 1),
+                jnp.moveaxis(lp[sl], 0, 1), jnp.moveaxis(lz[sl], 0, 1))
+
+    cache[key] = run
+    return run
+
+
+def _generate_host(engine: Engine, prompt, n_tokens: int, key: jax.Array,
+                   img=None, temperature: float = 0.0,
+                   return_aux: bool = False):
+    """Debug path: one jitted decode_step dispatch per token (the seed
+    loop). Key schedule matches the scan path exactly."""
     batch = prompt.shape[0]
     state = ServeState(
         cache=engine.model.init_decode_state(batch, engine.max_len),
         pos=jnp.zeros((), jnp.int32),
         last_token=prompt[:, 0])
-    toks = []
+    outs = []
     step_fn = jax.jit(lambda s, k: engine.decode_step(
         s, k, img=img, temperature=temperature))
+    out = None
     for t in range(prompt.shape[1]):
         tok_t = prompt[:, t] if not engine.cfg.n_codebooks \
             else prompt[:, t, :]
         state = dataclasses.replace(state, last_token=tok_t)
         out, state = step_fn(state, jax.random.fold_in(key, t))
-    toks.append(out["token"])
+    outs.append(out)
     for t in range(n_tokens - 1):
         out, state = step_fn(state, jax.random.fold_in(key, 10_000 + t))
-        toks.append(out["token"])
-    return jnp.stack(toks, axis=1)
+        outs.append(out)
+    toks = jnp.stack([o["token"] for o in outs], axis=1)
+    if return_aux:
+        return toks, {
+            "log_prob": jnp.stack([o["log_prob"] for o in outs], axis=1),
+            "log_z": jnp.stack([o["log_z"] for o in outs], axis=1)}
+    return toks

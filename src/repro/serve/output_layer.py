@@ -13,9 +13,11 @@ registry (``core.backends``):
              O((nb + p.br + l) d / T) compute per chip — sublinear in V.
  * mince   : Eq. 6/7 with the same local probe/tail sets. The NCE root-find
              is nonlinear, so shards cannot combine log Z post hoc; instead
-             every Halley iteration psums the three derivative partial sums
-             (f', f'', f''') — O(1) floats per iteration — and all shards
-             walk one shared theta.
+             each shard compresses its local anchored atoms into the
+             fixed-size MinceStats histogram and ONE psum of the stacked
+             (B, S, 4) sums recovers the global sufficient statistics —
+             every shard then solves locally with zero per-iteration
+             communication (the seed psum'd f'/f''/f''' every iteration).
  * fmbe    : Ẑ is O(P·M·d) replicated compute with no vocab-sized state, so
              the estimate needs no sharding at all; only the argmax
              candidates go through the sharded IVF probe.
@@ -200,14 +202,20 @@ def _local_ivf_logz(ivf: IVFSpecs, h: jax.Array, key: jax.Array,
 
 
 def _local_mince_logz(ivf: IVFSpecs, h: jax.Array, key: jax.Array,
-                      n_probe_local: int, l_local: int, iters: int = 25,
-                      solver: str = "halley", axis_name: str = "model"):
-    """MINCE (Eq. 6/7) body: the global NCE problem, derivative-psum'd.
+                      n_probe_local: int, l_local: int, iters: int = 3,
+                      solver: str = "halley", n_bins: int = 128,
+                      axis_name: str = "model"):
+    """MINCE (Eq. 6/7) body: the global NCE problem, stats-combined ONCE.
 
-    Each shard holds its slice of the data set (local probe head) and noise
-    set (local tail sample); ``derivative_sums`` are plain sample sums, so
-    one psum of (f', f'', f''') per Halley iteration recovers the exact
-    global step — all shards walk one shared theta from one shared theta0.
+    Each shard holds its slice of the atom set (local probe head + local
+    tail sample) and compresses it into the fixed-size ``mince.MinceStats``
+    histogram around the globally-psum'd Eq. 5 anchor. Histograms are plain
+    weighted sums over samples, so ONE psum of the stacked (B, S, 4) stats
+    recovers the exact global sufficient statistics — every shard then runs
+    the identical bracketed Halley solve locally on one shared theta. The
+    seed psum'd (f', f'', f''') every iteration; the pre-solve combine
+    removes the per-iteration collective entirely (iters x 3 scalars ->
+    one (B, S, 4) array, and the solve no longer serializes on the wire).
     """
     nb_l, br, d = ivf.v_blocks.shape
     b = h.shape[0]
@@ -218,29 +226,35 @@ def _local_mince_logz(ivf: IVFSpecs, h: jax.Array, key: jax.Array,
     n_acc = lax.psum(ok.sum(axis=-1), axis_name).astype(jnp.float32)
     n_valid = lax.psum(n_valid_l, axis_name).astype(jnp.float32)
     n_tail = jnp.maximum(n_valid - k_eff, 0.0)
-    log_ratio = (jnp.log(jnp.maximum(k_eff, 1.0)) +
-                 jnp.log(jnp.maximum(n_tail, 1.0)) -
-                 jnp.log(jnp.maximum(n_acc, 1.0)))         # (B,)
+    c_t = n_tail / jnp.maximum(n_acc, 1.0)
 
-    alpha = scores.reshape(b, -1) + log_ratio[:, None]
-    alpha_mask = bvalid.reshape(b, -1).astype(jnp.float32)
-    beta = tail + log_ratio[:, None]
-    beta_mask = ok.astype(jnp.float32)
     head_lse_l = jax.nn.logsumexp(scores.reshape(b, -1), axis=-1)
     theta0 = _logspace_psum(head_lse_l, axis_name)
-
-    def body(theta, _):
-        f1, f2, f3 = _mince.derivative_sums(theta, alpha, beta, alpha_mask,
-                                            beta_mask)
-        f1 = lax.psum(f1, axis_name)
-        f2 = lax.psum(f2, axis_name)
-        f3 = lax.psum(f3, axis_name)
-        return theta - _mince.halley_step(f1, f2, f3, solver=solver), None
-
-    theta, _ = lax.scan(body, theta0, None, length=iters)
-
     tail_lse = _logspace_psum(
         jax.nn.logsumexp(jnp.where(ok, tail, NEG), axis=-1), axis_name)
+    anchor = combine_head_tail_lse(theta0, tail_lse, n_tail, n_acc)  # (B,)
+
+    # local anchored atoms -> local histograms on the shared (global-anchor)
+    # bins -> ONE psum of the stacked sums -> identical local solves
+    s_all = jnp.concatenate([scores.reshape(b, -1), tail], axis=-1)
+    m_all = jnp.concatenate(
+        [bvalid.reshape(b, -1).astype(jnp.float32),
+         ok.astype(jnp.float32) * c_t[:, None]], axis=-1)
+    alpha, wd, wn = _mince.anchored_atoms(s_all, m_all, n_valid, k_eff,
+                                          n_acc, anchor)
+    st = _mince.mince_stats(alpha, wd, wn, anchor, n_bins=n_bins)
+    stacked = jnp.stack([st.w_data, st.w_noise,
+                         st.a_data * st.w_data,
+                         st.a_noise * st.w_noise], axis=-1)   # (B, S, 4)
+    g = lax.psum(stacked, axis_name)
+    stats = _mince.MinceStats(
+        a_data=g[..., 2] / jnp.maximum(g[..., 0], 1e-30),
+        w_data=g[..., 0],
+        a_noise=g[..., 3] / jnp.maximum(g[..., 1], 1e-30),
+        w_noise=g[..., 1], lo=st.lo, hi=st.hi)
+    theta = _mince.solve_from_stats(stats, anchor, iters=iters,
+                                    solver=solver)
+
     uniform = tail_lse + jnp.log(jnp.maximum(n_valid, 1.0)) - \
         jnp.log(jnp.maximum(n_acc, 1.0))
     log_z = jnp.where(k_eff == 0, uniform, theta)
@@ -283,9 +297,9 @@ def sharded_ivf_decode(mesh, ivf: IVFSpecs, h: jax.Array, key: jax.Array,
 
 def sharded_mince_decode(mesh, ivf: IVFSpecs, h: jax.Array, key: jax.Array,
                          *, n_probe_local: int, l_local: int,
-                         iters: int = 25, solver: str = "halley",
+                         iters: int = 3, solver: str = "halley",
                          batch_spec=P("data")):
-    """Sharded MINCE decode (derivative-psum Halley)."""
+    """Sharded MINCE decode (one pre-solve stats psum, local Halley)."""
     fn = functools.partial(_local_mince_logz, n_probe_local=n_probe_local,
                            l_local=l_local, iters=iters, solver=solver)
     return _shard_wrap(mesh, fn, ivf, h, key, batch_spec)

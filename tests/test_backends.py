@@ -111,7 +111,9 @@ class TestUnionScores:
 class TestBatchedMince:
     def test_batched_solver_matches_per_query_mince(self, vectors, rng):
         """The rank-polymorphic Halley solver on stacked oracle alpha/beta
-        reproduces per-query mince_log_z exactly (same sample sets)."""
+        reproduces per-query mince_log_z(weighting='paper') exactly (same
+        sample sets; the anchored default follows a different estimating
+        equation — see core/mince.py)."""
         k, l = 100, 100
         qs = vectors[:6]
         n = vectors.shape[0]
@@ -125,7 +127,8 @@ class TestBatchedMince:
             alphas.append(head + log_ratio)
             betas.append(noise + log_ratio)
             theta0s.append(jax.nn.logsumexp(head))
-            per_query.append(float(mince_log_z(vectors, qs[i], k, l, kq)))
+            per_query.append(float(mince_log_z(vectors, qs[i], k, l, kq,
+                                               weighting="paper")))
         batched = solve_log_z(jnp.stack(alphas), jnp.stack(betas),
                               jnp.stack(theta0s))
         np.testing.assert_allclose(np.asarray(batched),

@@ -1,0 +1,121 @@
+"""Device-resident generation (serve.generate): the compiled lax.scan loop
+must be indistinguishable from the host-driven debug loop — bit-identical
+tokens, log_prob and log_z, greedy and sampled, text and audio heads — and
+the empty-prompt crash of the seed must be a clean error."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import Model
+from repro.serve import Engine, generate
+
+
+def _text_engine(rng, method="mimps", temperature_vocab=2048):
+    cfg = reduced_config("qwen1.5-4b")
+    cfg = dataclasses.replace(
+        cfg, vocab=temperature_vocab, partition=dataclasses.replace(
+            cfg.partition, method=method, block_rows=128, n_probe=4, l=128))
+    m = Model(cfg)
+    return Engine(m, m.init(rng), max_len=32), cfg
+
+
+def _audio_engine(rng):
+    cfg = reduced_config("musicgen-medium")
+    m = Model(cfg)
+    return Engine(m, m.init(rng), max_len=32), cfg
+
+
+def _both(eng, prompt, n, key, temperature=0.0):
+    scan = generate(eng, prompt, n, key, temperature=temperature,
+                    return_aux=True)
+    host = generate(eng, prompt, n, key, temperature=temperature,
+                    host_loop=True, return_aux=True)
+    return scan, host
+
+
+class TestScanHostParity:
+    @pytest.mark.parametrize("temperature", [0.0, 0.8])
+    def test_text_bit_identical(self, rng, temperature):
+        eng, cfg = _text_engine(jax.random.fold_in(rng, 1))
+        prompt = jax.random.randint(rng, (2, 3), 0, cfg.vocab)
+        (t_s, aux_s), (t_h, aux_h) = _both(eng, prompt, 5, rng,
+                                           temperature=temperature)
+        assert t_s.shape == (2, 5)
+        np.testing.assert_array_equal(np.asarray(t_s), np.asarray(t_h))
+        np.testing.assert_array_equal(np.asarray(aux_s["log_prob"]),
+                                      np.asarray(aux_h["log_prob"]))
+        np.testing.assert_array_equal(np.asarray(aux_s["log_z"]),
+                                      np.asarray(aux_h["log_z"]))
+
+    @pytest.mark.parametrize("temperature", [0.0, 1.0])
+    def test_audio_bit_identical(self, rng, temperature):
+        eng, cfg = _audio_engine(jax.random.fold_in(rng, 2))
+        prompt = jax.random.randint(rng, (2, 3, cfg.n_codebooks), 0,
+                                    cfg.vocab)
+        (t_s, aux_s), (t_h, aux_h) = _both(eng, prompt, 4, rng,
+                                           temperature=temperature)
+        assert t_s.shape == (2, 4, cfg.n_codebooks)
+        np.testing.assert_array_equal(np.asarray(t_s), np.asarray(t_h))
+        np.testing.assert_array_equal(np.asarray(aux_s["log_z"]),
+                                      np.asarray(aux_h["log_z"]))
+
+    def test_exact_backend_parity(self, rng):
+        eng, cfg = _text_engine(jax.random.fold_in(rng, 3), method="exact",
+                                temperature_vocab=512)
+        prompt = jax.random.randint(rng, (1, 2), 0, cfg.vocab)
+        (t_s, _), (t_h, _) = _both(eng, prompt, 6, rng)
+        np.testing.assert_array_equal(np.asarray(t_s), np.asarray(t_h))
+
+    def test_single_token_generation(self, rng):
+        """n_tokens == 1: only the last replay step emits."""
+        eng, cfg = _text_engine(jax.random.fold_in(rng, 4))
+        prompt = jax.random.randint(rng, (2, 4), 0, cfg.vocab)
+        t_s = generate(eng, prompt, 1, rng)
+        t_h = generate(eng, prompt, 1, rng, host_loop=True)
+        assert t_s.shape == (2, 1)
+        np.testing.assert_array_equal(np.asarray(t_s), np.asarray(t_h))
+
+    def test_default_path_returns_tokens_only(self, rng):
+        eng, cfg = _text_engine(jax.random.fold_in(rng, 5))
+        prompt = jax.random.randint(rng, (1, 2), 0, cfg.vocab)
+        toks = generate(eng, prompt, 3, rng)
+        assert isinstance(toks, jax.Array)
+        assert toks.shape == (1, 3)
+
+    def test_compiled_runner_is_cached_per_engine(self, rng):
+        """Repeated generate() calls with the same shapes must reuse ONE
+        compiled scan (a fresh inner jit per call would recompile the whole
+        loop every request)."""
+        eng, cfg = _text_engine(jax.random.fold_in(rng, 7))
+        prompt = jax.random.randint(rng, (2, 3), 0, cfg.vocab)
+        t0 = generate(eng, prompt, 4, rng)
+        assert len(eng._scan_runners) == 1
+        t1 = generate(eng, prompt, 4, jax.random.fold_in(rng, 1))
+        assert len(eng._scan_runners) == 1
+        np.testing.assert_array_equal(
+            np.asarray(generate(eng, prompt, 4, rng)), np.asarray(t0))
+        del t1
+
+
+class TestEmptyPromptGuard:
+    @pytest.mark.parametrize("host_loop", [False, True])
+    def test_empty_prompt_raises_value_error(self, rng, host_loop):
+        """Seed regression: prompt.shape[1] == 0 crashed the host loop with
+        UnboundLocalError (``out`` read before assignment)."""
+        eng, cfg = _text_engine(jax.random.fold_in(rng, 6))
+        empty = jnp.zeros((2, 0), jnp.int32)
+        with pytest.raises(ValueError, match="non-empty prompt"):
+            generate(eng, empty, 4, rng, host_loop=host_loop)
+
+    @pytest.mark.parametrize("host_loop", [False, True])
+    def test_zero_tokens_raises(self, rng, host_loop):
+        """n_tokens == 0 would silently return one token (the last replay
+        step's sample); both paths must refuse instead."""
+        eng, cfg = _text_engine(jax.random.fold_in(rng, 8))
+        prompt = jax.random.randint(rng, (1, 2), 0, cfg.vocab)
+        with pytest.raises(ValueError, match="n_tokens"):
+            generate(eng, prompt, 0, rng, host_loop=host_loop)

@@ -1,0 +1,226 @@
+"""PR-3 wall-clock/accuracy regressions, pinned at the quick-bench config
+(V=8192, d=128, br=128, p=8, l=256, Q=32 — the BENCH_*.json scale):
+
+ * MINCE accuracy blow-up (rel_err ~ 3e5 in the PR-2 artifact) fixed by the
+   anchored weighting + bracketed solve — rel_err < 1 asserted, and the
+   collapse identity (anchored root == Eq. 5 anchor) asserted directly;
+ * FMBE collapse (rel_err ~ 1.0: Ẑ ~ 2e-7 Z from the degree-capped Taylor)
+   fixed by the exact-head/sketch-tail hybrid — rel_err < 0.5 asserted;
+ * head_cap-trimmed XLA decode == full-capacity decode, on both the
+   trim-taken and the overflow-fallback branches;
+ * the benchmark regression gate's comparison logic.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import make_embeddings, shared_context_batch
+from repro.core import build_ivf, mince_log_z
+from repro.core.decode import fmbe_decode, mimps_decode, mince_decode
+from repro.core import mince as _mince
+
+
+@pytest.fixture(scope="module")
+def bench():
+    """The quick-bench world: embeddings, shared-context batch, index."""
+    n, d, br, q = 8192, 128, 128, 32
+    key = jax.random.PRNGKey(0)
+    v = make_embeddings(key, n, d)
+    h = shared_context_batch(key, v, q)
+    index = build_ivf(key, v, block_rows=br)
+    exact_lz = jax.nn.logsumexp((h @ v.T).astype(jnp.float32), -1)
+    return v, h, index, exact_lz, jax.random.fold_in(key, 2)
+
+
+class TestMinceBenchRegression:
+    def test_decode_rel_err_under_one(self, bench):
+        """PR-2 artifact: rel_err_vs_exact == 2.95e5. Must stay < 1."""
+        v, h, index, exact_lz, kd = bench
+        out = mince_decode(index, h, kd, n_probe=8, l=256, k=1,
+                           use_pallas=False)
+        rel = np.asarray(jnp.abs(1 - jnp.exp(out.log_z - exact_lz)))
+        assert np.isfinite(rel).all()
+        assert rel.mean() < 1.0, rel.mean()
+        # in practice the anchored root is MIMPS-accurate; keep margin loose
+        assert rel.mean() < 0.5, rel.mean()
+
+    def test_oracle_mince_log_z_rel_err_under_one(self, bench):
+        """The satellite's target: mince_log_z at the bench config."""
+        v, h, index, exact_lz, kd = bench
+        errs = [abs(1 - float(jnp.exp(
+            mince_log_z(v, h[i], 1024, 256, jax.random.fold_in(kd, i))
+            - exact_lz[i]))) for i in range(4)]
+        assert max(errs) < 1.0, errs
+
+    def test_collapse_identity(self, bench):
+        """The anchored root IS the Eq. 5 anchor: MINCE and MIMPS on the
+        same key (hence the same plan and tail draw) must agree on log Ẑ
+        (mince.anchored_solve docstring), and the scalar solver must reach
+        the anchor from a cold start under the bracket."""
+        v, h, index, exact_lz, kd = bench
+        out = mince_decode(index, h, kd, n_probe=8, l=256, k=1,
+                           use_pallas=False)
+        ref = mimps_decode(index, h, kd, n_probe=8, l=256, k=1,
+                           use_pallas=False)
+        np.testing.assert_allclose(np.asarray(out.log_z),
+                                   np.asarray(ref.log_z), atol=2e-3)
+        # scalar solver: far-off init converges to the anchor under bracket
+        a = jnp.array([3.0, -5.0, 40.0])
+        th = _mince.anchored_solve(a, a + jnp.array([10.0, -12.0, 0.5]),
+                                   iters=30)
+        np.testing.assert_allclose(np.asarray(th), np.asarray(a), atol=1e-4)
+        thn = _mince.anchored_solve(a, a + 8.0, iters=30, solver="newton")
+        np.testing.assert_allclose(np.asarray(thn), np.asarray(a), atol=1e-4)
+
+    def test_stats_solver_matches_dense_solver(self, rng):
+        """The sharded path's bucketed MinceStats solve must agree with the
+        dense shared-atom solve on the same weighted atom sets (the
+        histogram is the one-psum combine format; S=128 buckets keep the
+        root within ~1e-2)."""
+        k1, k2, k3 = jax.random.split(rng, 3)
+        alpha = jax.random.normal(k1, (3, 400)) * 6.0
+        wd = jax.random.uniform(k2, (3, 400)) * 2.0
+        wn = jax.random.uniform(k3, (3, 400))
+        theta0 = jnp.zeros((3,))
+        dense = _mince.solve_shared_atoms(alpha, wd, wn, theta0, iters=40)
+        stats = _mince.mince_stats(alpha, wd, wn, theta0)
+        bucketed = _mince.solve_from_stats(stats, theta0, iters=40)
+        np.testing.assert_allclose(np.asarray(bucketed), np.asarray(dense),
+                                   atol=3e-2)
+
+    def test_paper_weighting_still_diverges_less_catastrophically(self,
+                                                                  bench):
+        """weighting='paper' is kept for Table 1; the bracketed solver keeps
+        it finite (the seed's trust-clamped walk reached +12 nats)."""
+        v, h, index, exact_lz, kd = bench
+        lz = mince_log_z(v, h[0], 1024, 256, kd, weighting="paper")
+        assert bool(jnp.isfinite(lz))
+
+
+class TestFmbeBenchRegression:
+    def test_hybrid_rel_err(self, bench):
+        """PR-2 artifact: rel_err_vs_exact ~ 1.0 (estimate collapsed toward
+        Ẑ ~ 0: degree-capped Taylor at 28-nat scores). The exact-head /
+        sketch-tail hybrid must stay < 0.5 at bench scale."""
+        from repro.core.feature_maps import (FMBEState, build_fmbe,
+                                             build_fmbe_blocks,
+                                             make_feature_map)
+        v, h, index, exact_lz, kd = bench
+        fm = make_feature_map(jax.random.fold_in(kd, 7), 128, 1024,
+                              max_degree=4)
+        st = build_fmbe(fm, v)
+        st = FMBEState(fm=st.fm, lambda_tilde=st.lambda_tilde,
+                       lambda_blocks=build_fmbe_blocks(
+                           fm, index.v_blocks, index.valid))
+        out = fmbe_decode(st, index, h, kd, n_probe=8, k=1,
+                          use_pallas=False)
+        rel = np.asarray(jnp.abs(1 - jnp.exp(out.log_z - exact_lz)))
+        assert rel.mean() < 0.5, rel.mean()
+        # the hybrid can never be worse than dropping the tail entirely
+        head_only = np.asarray(jnp.abs(1 - jnp.exp(out.head_lse - exact_lz)))
+        assert rel.mean() <= head_only.mean() + 1e-6
+
+    def test_lambda_blocks_sum_to_global(self, bench):
+        from repro.core.feature_maps import (build_fmbe, build_fmbe_blocks,
+                                             make_feature_map)
+        v, h, index, exact_lz, kd = bench
+        fm = make_feature_map(jax.random.fold_in(kd, 8), 128, 256,
+                              max_degree=3)
+        st = build_fmbe(fm, v)
+        lam_b = build_fmbe_blocks(fm, index.v_blocks, index.valid)
+        np.testing.assert_allclose(np.asarray(lam_b.sum(0)),
+                                   np.asarray(st.lambda_tilde),
+                                   rtol=2e-4, atol=2e-3)
+
+
+class TestHeadCapTrim:
+    def test_trim_equals_full_on_shared_context(self, bench):
+        """U = 8 unique blocks -> the head_cap=12 trim branch runs; it must
+        match the full-capacity decode exactly."""
+        v, h, index, exact_lz, kd = bench
+        small = mimps_decode(index, h, kd, n_probe=8, l=256, k=2,
+                             use_pallas=False, head_cap=12)
+        full = mimps_decode(index, h, kd, n_probe=8, l=256, k=2,
+                            use_pallas=False, head_cap=10_000)
+        np.testing.assert_allclose(np.asarray(small.log_z),
+                                   np.asarray(full.log_z), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(small.top_id),
+                                      np.asarray(full.top_id))
+
+    def test_overflow_falls_back_to_full(self, bench):
+        """An uncorrelated batch overflows a tiny head_cap -> the cond's
+        fallback branch must reproduce the full-capacity result."""
+        v, h, index, exact_lz, kd = bench
+        h_u = v[jax.random.choice(jax.random.fold_in(kd, 3), v.shape[0],
+                                  (32,), replace=False)]
+        tiny = mimps_decode(index, h_u, kd, n_probe=8, l=256, k=1,
+                            use_pallas=False, head_cap=2)
+        full = mimps_decode(index, h_u, kd, n_probe=8, l=256, k=1,
+                            use_pallas=False, head_cap=10_000)
+        np.testing.assert_allclose(np.asarray(tiny.log_z),
+                                   np.asarray(full.log_z), atol=1e-5)
+
+    def test_mince_trim_branches_agree(self, bench):
+        v, h, index, exact_lz, kd = bench
+        small = mince_decode(index, h, kd, n_probe=8, l=256, k=1,
+                             use_pallas=False, head_cap=12)
+        full = mince_decode(index, h, kd, n_probe=8, l=256, k=1,
+                            use_pallas=False, head_cap=10_000)
+        np.testing.assert_allclose(np.asarray(small.log_z),
+                                   np.asarray(full.log_z), atol=1e-4)
+
+
+class TestRegressionGate:
+    def _write(self, tmp_path, dec_mimps_us=1000.0, est=None):
+        est = est or {}
+        dec = {"exact": {"us_per_step": 2000.0, "tokens_per_s": 16000.0},
+               "mimps": {"us_per_step": dec_mimps_us,
+                         "tokens_per_s": 32.0 / dec_mimps_us * 1e6}}
+        methods = {}
+        for m, us in {"exact": 2000.0, "mimps": 1200.0, "mince": 1400.0,
+                      "fmbe": 1800.0, **est}.items():
+            methods[m] = {"us_per_step": us, "tokens_per_s": 32.0 / us * 1e6,
+                          "rel_err_vs_exact":
+                              {"exact": 0.0, "mimps": 0.12, "mince": 0.12,
+                               "fmbe": 0.03}[m]}
+        (tmp_path / "BENCH_decode.json").write_text(json.dumps(
+            {**dec, "speedup_xla": dec["exact"]["us_per_step"] /
+             dec["mimps"]["us_per_step"]}))
+        (tmp_path / "BENCH_estimators.json").write_text(json.dumps(
+            {"methods": methods}))
+
+    def _check(self, tmp_path, monkeypatch):
+        import benchmarks.run as run
+        monkeypatch.chdir(tmp_path)
+        return run.check()
+
+    def test_green_within_tolerance(self, tmp_path, monkeypatch):
+        import benchmarks.run as run
+        self._write(tmp_path)
+        monkeypatch.chdir(tmp_path)
+        monkeypatch.setattr(run, "BASELINE_PATH",
+                            str(tmp_path / "baseline.json"))
+        run.update_baseline()
+        assert self._check(tmp_path, monkeypatch) == 0
+        # 20% slower mimps: inside the 25% budget
+        self._write(tmp_path, dec_mimps_us=1200.0)
+        assert self._check(tmp_path, monkeypatch) == 0
+
+    def test_fails_on_regression_and_broken_invariant(self, tmp_path,
+                                                      monkeypatch):
+        import benchmarks.run as run
+        self._write(tmp_path)
+        monkeypatch.chdir(tmp_path)
+        monkeypatch.setattr(run, "BASELINE_PATH",
+                            str(tmp_path / "baseline.json"))
+        run.update_baseline()
+        # 30% slower decode mimps: regression AND (at 2600us > 2000us exact)
+        # a broken speedup_xla invariant
+        self._write(tmp_path, dec_mimps_us=2600.0)
+        assert self._check(tmp_path, monkeypatch) >= 2
+        # mince blowing past 1.5x mimps fails the acceptance invariant
+        self._write(tmp_path, est={"mince": 2500.0})
+        assert self._check(tmp_path, monkeypatch) >= 1
