@@ -7,12 +7,14 @@ Regression gate (CI):
 
   PYTHONPATH=src python -m benchmarks.run --check
 
-compares the freshly-written BENCH_decode.json / BENCH_estimators.json
-against the committed ``benchmarks/baseline.json`` and fails on a >25%
-wall-clock regression (us_per_step up or tokens_per_s down) for any tracked
-method, AND enforces the PR-3 wall-clock acceptance invariants:
-speedup_xla > 1, mimps faster than exact, mince within 1.5x of mimps.
-Refresh the baseline after a *deliberate* perf change with:
+compares the freshly-written BENCH_decode.json / BENCH_estimators.json /
+BENCH_serving.json against the committed ``benchmarks/baseline.json`` and
+fails on a >25% wall-clock regression (us_per_step up or tokens_per_s down)
+for any tracked method, AND enforces the wall-clock acceptance invariants:
+speedup_xla > 1, mimps faster than exact, mince within 1.5x of mimps (PR 3);
+continuous batching beats sequential generate() on goodput, steady-state
+slot occupancy > 0.5, batched-vs-solo token parity, zero recompiles after
+warmup (PR 4). Refresh the baseline after a *deliberate* perf change with:
 
   PYTHONPATH=src python -m benchmarks.run --update-baseline
 """
@@ -51,21 +53,24 @@ def _load(path):
 
 
 def _snapshot():
-    """The tracked perf surface of the two decode artifacts."""
+    """The tracked perf surface of the three serving artifacts."""
     dec = _load("BENCH_decode.json")
     est = _load("BENCH_estimators.json")
+    srv = _load("BENCH_serving.json")
     snap = {"decode": {m: {"us_per_step": dec[m]["us_per_step"],
                            "tokens_per_s": dec[m]["tokens_per_s"]}
                        for m in ("exact", "mimps")},
             "decode_speedup_xla": dec["speedup_xla"],
             "estimators": {m: {"us_per_step": r["us_per_step"],
                                "tokens_per_s": r["tokens_per_s"]}
-                           for m, r in est["methods"].items()}}
-    return snap, dec, est
+                           for m, r in est["methods"].items()},
+            "serving": {"goodput_tok_s": srv["goodput_tok_s"],
+                        "p95_token_ms": srv["p95_token_ms"]}}
+    return snap, dec, est, srv
 
 
 def update_baseline() -> None:
-    snap, _, _ = _snapshot()
+    snap, _, _, _ = _snapshot()
     snap["host"] = _machine()
     with open(BASELINE_PATH, "w") as f:
         json.dump(snap, f, indent=2)
@@ -75,7 +80,7 @@ def update_baseline() -> None:
 def check() -> int:
     """Compare fresh artifacts against the committed baseline. Returns the
     number of failures (0 = green)."""
-    snap, dec, est = _snapshot()
+    snap, dec, est, srv = _snapshot()
     base = _load(BASELINE_PATH)
     failures = []
     same_host = base.get("host") == _machine()
@@ -104,6 +109,16 @@ def check() -> int:
         cmp_section("decode", snap["decode"], base.get("decode", {}))
         cmp_section("estimators", snap["estimators"],
                     base.get("estimators", {}))
+        ref_srv = base.get("serving")
+        if ref_srv:
+            # goodput only: p95 is stored for trend-watching but is a
+            # small-sample tail statistic — on a shared container it
+            # measures the neighbors, not the code
+            cur = snap["serving"]
+            if cur["goodput_tok_s"] < ref_srv["goodput_tok_s"] / TOL:
+                failures.append(
+                    f"serving: goodput {cur['goodput_tok_s']:.0f} tok/s < "
+                    f"baseline {ref_srv['goodput_tok_s']:.0f} / {TOL:.2f}")
 
     # wall-clock acceptance invariants (machine-relative, so they are stable
     # across runner generations in a way absolute us_per_step is not)
@@ -126,6 +141,33 @@ def check() -> int:
                 f"estimators: {m} rel_err {em[m]['rel_err_vs_exact']:.3g} "
                 f">= {cap} (accuracy regression)")
 
+    # serving acceptance invariants (machine-relative / exact, PR 4):
+    # continuous batching must beat sequential generate() on goodput at
+    # >= 8 concurrent mixed-length requests, with saturated slots, ZERO
+    # recompiles after warmup, and bit-identical batched-vs-solo tokens.
+    if srv["speedup_vs_sequential"] <= 1.0:
+        failures.append(
+            f"serving: continuous goodput {srv['goodput_tok_s']:.0f} tok/s "
+            f"<= sequential {srv['sequential_goodput_tok_s']:.0f} "
+            f"(speedup {srv['speedup_vs_sequential']:.2f}x)")
+    if srv["peak_concurrency"] < 8:
+        failures.append(
+            f"serving: peak concurrency {srv['peak_concurrency']} < 8 — "
+            f"the workload never filled the slot table")
+    if srv["occupancy_steady"] <= 0.5:
+        failures.append(
+            f"serving: steady-state occupancy {srv['occupancy_steady']:.2f}"
+            f" <= 0.5 (admission is starving the slot table)")
+    if not srv["token_parity_vs_solo"]:
+        failures.append(
+            "serving: batched tokens differ from solo generate() — the "
+            "slot table broke per-request sampling")
+    if srv["recompiles_after_warmup"] != 0:
+        failures.append(
+            f"serving: {srv['recompiles_after_warmup']} recompiles after "
+            f"warmup (the mixed step must serve every admission/replay/"
+            f"decode mix with one executable)")
+
     if failures:
         print("== bench regression check: FAIL ==")
         for f in failures:
@@ -137,6 +179,10 @@ def check() -> int:
             for m, row in sec.items():
                 print(f"  {name}.{m}: {row['us_per_step']:.0f}us/step "
                       f"({row['tokens_per_s']:.0f} tok/s)")
+        print(f"  serving: {srv['goodput_tok_s']:.0f} tok/s goodput "
+              f"({srv['speedup_vs_sequential']:.2f}x sequential), "
+              f"occupancy {srv['occupancy_steady']:.2f}, p95 "
+              f"{srv['p95_token_ms']:.2f}ms")
     return len(failures)
 
 
@@ -146,7 +192,7 @@ def main() -> None:
                     help="paper-scale sizes (slower)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,t1,t2,t3,t4,kernels,roofline,"
-                         "decode,estimators")
+                         "decode,estimators,serving")
     ap.add_argument("--check", action="store_true",
                     help="compare BENCH_*.json against benchmarks/"
                          "baseline.json; exit 1 on >25%% regression or "
@@ -164,8 +210,8 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from . import (decode_bench, estimator_bench, fig1_cdf, kernels_bench,
-                   roofline, table1_grid, table2_noise, table3_retrieval,
-                   table4_lbl)
+                   roofline, serving_bench, table1_grid, table2_noise,
+                   table3_retrieval, table4_lbl)
 
     csv = ["name,us_per_call,derived"]
 
@@ -205,6 +251,13 @@ def main() -> None:
         csv.append(f"estimators,{us:.1f},"
                    f"bound_ok_all={rep['bound']['ok_all']};"
                    f"byte_sublinear_all={rep['bound']['byte_sublinear_all']}")
+    if sel("serving"):
+        rep, us = serving_bench.run(quick=quick)
+        csv.append(f"serving,{us:.1f},"
+                   f"speedup={rep['speedup_vs_sequential']:.2f}x;"
+                   f"occupancy={rep['occupancy_steady']:.2f};"
+                   f"parity={rep['token_parity_vs_solo']};"
+                   f"recompiles={rep['recompiles_after_warmup']}")
 
     print("\n== CSV ==")
     print("\n".join(csv))

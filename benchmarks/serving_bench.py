@@ -1,0 +1,148 @@
+"""Serving-traffic benchmark: continuous batching vs sequential generate().
+
+Drives the slot scheduler (serve.Scheduler / serve.Server) with a Poisson
+stream of mixed-prompt-length, mixed-temperature requests and measures what
+a traffic-serving deployment cares about:
+
+ * goodput (emitted tokens per wall second) vs the one-request-at-a-time
+   ``generate()`` baseline over the SAME workload (same prompts, keys,
+   temperatures — the sequential pass doubles as the token-parity oracle:
+   continuous batching must emit bit-identical tokens per request),
+ * per-token latency p50/p95,
+ * slot occupancy (mean + steady-state while demand is backed up),
+ * probe-union dedup ratio U/(Q*n_probe) vs batch fill — the amortization
+   argument for retrieval-based estimators under load,
+ * recompiles after warmup (must be ZERO: one compiled mixed step serves
+   every admission/replay/decode mix).
+
+Writes BENCH_serving.json; gated by ``benchmarks/run.py --check``.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _build(quick: bool):
+    import dataclasses
+
+    from repro.configs import reduced_config
+    from repro.models import Model
+    from repro.serve import Engine
+
+    cfg = reduced_config("qwen1.5-4b")
+    cfg = dataclasses.replace(
+        cfg, vocab=2048 if quick else 8192,
+        partition=dataclasses.replace(cfg.partition, method="mimps",
+                                      block_rows=128, n_probe=4, l=128))
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    gen = 8 if quick else 16
+    p_max = 12 if quick else 24
+    eng = Engine(model, params, max_len=p_max + gen + 1, key=key)
+    return eng, cfg, gen, p_max
+
+
+def _workload(cfg, n_req: int, gen: int, p_lens, seed: int = 0):
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_req):
+        p_len = p_lens[i % len(p_lens)]
+        reqs.append(Request(
+            prompt=rng.integers(0, cfg.vocab, size=(p_len,), dtype=np.int32),
+            max_new_tokens=gen,
+            key=jax.random.PRNGKey(7_000 + i),
+            temperature=0.0 if i % 2 == 0 else 0.8))
+    return reqs
+
+
+def _sequential(eng, reqs, time_it: bool):
+    """One-request-at-a-time generate() over the workload. Returns
+    (tokens_per_request, wall_seconds). Compile buckets are warmed by the
+    caller running this once with time_it=False first."""
+    from repro.serve import generate
+    import time
+    outs = []
+    t0 = time.perf_counter()
+    for r in reqs:
+        toks = generate(eng, jnp.asarray(r.prompt)[None], r.max_new_tokens,
+                        r.key, temperature=r.temperature)
+        outs.append([int(t) for t in np.asarray(jax.device_get(toks))[0]])
+    dt = time.perf_counter() - t0
+    return outs, (dt if time_it else float("nan"))
+
+
+def run(quick: bool = True):
+    from repro.serve import Scheduler, Server, poisson_arrivals
+
+    eng, cfg, gen, p_max = _build(quick)
+    n_slots = 8 if quick else 16
+    n_req = 16 if quick else 64
+    p_lens = [4, 6, 9, 12] if quick else [4, 8, 12, 17, 24]
+    reqs = _workload(cfg, n_req, gen, p_lens)
+
+    # -- sequential baseline (also the parity oracle). First pass warms every
+    #    (bucket, n_tokens) scan compile; second pass is the measurement.
+    _sequential(eng, reqs, time_it=False)
+    seq_tokens, seq_wall = _sequential(eng, reqs, time_it=True)
+    seq_goodput = sum(len(t) for t in seq_tokens) / seq_wall
+
+    # -- continuous batching. Warm the scheduler's two executables on a
+    #    throwaway workload, then reset bookkeeping and serve the real one.
+    sched = Scheduler(eng, n_slots=n_slots, key=jax.random.PRNGKey(1))
+    warm = Server(sched)
+    for r in _workload(cfg, 2, 2, [3, 5], seed=99):
+        warm.submit(r)
+    warm.run()
+    traces_after_warmup = (sched.step_traces, sched.admit_traces)
+
+    server = Server(sched)
+    arrivals = poisson_arrivals(reqs, rate=2.0, seed=0)
+    rep = server.run(arrivals=arrivals)
+    recompiles = (sched.step_traces - traces_after_warmup[0]) + \
+        (sched.admit_traces - traces_after_warmup[1])
+
+    got = {c.request.req_id: c.tokens for c in rep.completions}
+    parity = all(got.get(r.req_id) == seq_tokens[i]
+                 for i, r in enumerate(reqs))
+    # concurrency actually reached (acceptance: benefits at >= 8 in flight)
+    peak_active = rep.peak_concurrency
+
+    report = {
+        "config": {"vocab": cfg.vocab, "n_slots": n_slots, "n_req": n_req,
+                   "gen": gen, "prompt_lens": p_lens,
+                   "method": cfg.partition.method, "quick": quick},
+        "goodput_tok_s": rep.goodput_tok_s,
+        "sequential_goodput_tok_s": seq_goodput,
+        "speedup_vs_sequential": rep.goodput_tok_s / seq_goodput,
+        "p50_token_ms": rep.p50_token_ms,
+        "p95_token_ms": rep.p95_token_ms,
+        "occupancy_mean": rep.occupancy_mean,
+        "occupancy_steady": rep.occupancy_steady,
+        "peak_concurrency": int(peak_active),
+        "dedup_ratio_mean": rep.dedup_ratio_mean,
+        "dedup_by_fill": {str(k): v for k, v in rep.dedup_by_fill.items()},
+        "queue_wait_steps_mean": rep.queue_wait_steps_mean,
+        "steps": rep.steps,
+        "wall_s": rep.wall_s,
+        "token_parity_vs_solo": bool(parity),
+        "recompiles_after_warmup": int(recompiles),
+    }
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(report, f, indent=2)
+    total_tokens = sum(len(t) for t in seq_tokens)
+    us_per_token = rep.wall_s / max(total_tokens, 1) * 1e6
+    print(f"serving: goodput {rep.goodput_tok_s:.0f} tok/s vs sequential "
+          f"{seq_goodput:.0f} ({report['speedup_vs_sequential']:.2f}x), "
+          f"occupancy {rep.occupancy_steady:.2f}, parity {parity}, "
+          f"recompiles {recompiles}")
+    return report, us_per_token
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Continuous-batching quickstart: serve a live traffic stream.
+
+  PYTHONPATH=src python examples/serve_traffic.py
+
+Builds a reduced model, wraps it in the slot scheduler, and serves a small
+Poisson arrival stream of mixed-length, mixed-temperature requests with
+streaming callbacks — then shows the two properties the subsystem is built
+around: (1) slot-table decoding is bit-identical per request to a solo
+``generate()`` run, and (2) everything after the first step/admission runs
+with ZERO recompiles.
+"""
+import sys
+sys.path.insert(0, "src")
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.models import Model
+from repro.serve import (Engine, Request, Scheduler, Server, generate,
+                         poisson_arrivals)
+
+# -- model + engine (mimps partition estimation at the output layer) --------
+cfg = reduced_config("qwen1.5-4b")
+cfg = dataclasses.replace(
+    cfg, vocab=4096, partition=dataclasses.replace(
+        cfg.partition, method="mimps", block_rows=128, n_probe=4, l=128))
+model = Model(cfg)
+key = jax.random.PRNGKey(0)
+params = model.init(key)
+engine = Engine(model, params, max_len=32, key=key)
+
+# -- a little traffic: 6 requests, mixed prompt lengths and temperatures ----
+rng = np.random.default_rng(0)
+requests = [
+    Request(prompt=rng.integers(0, cfg.vocab, size=(3 + 2 * (i % 3),)),
+            max_new_tokens=6,
+            key=jax.random.PRNGKey(100 + i),
+            temperature=0.0 if i % 2 == 0 else 0.8,
+            on_token=lambda r, tok, t: print(
+                f"    req {r.req_id}: +token {tok}"),
+            on_complete=lambda r, comp: print(
+                f"  done req {r.req_id} (T={r.temperature}): {comp.tokens}"))
+    for i in range(6)
+]
+
+# -- serve: 4 slots, Poisson arrivals, admission queue, slot recycling ------
+scheduler = Scheduler(engine, n_slots=4, key=key)
+server = Server(scheduler)
+report = server.run(arrivals=poisson_arrivals(requests, rate=1.0, seed=0))
+print("\ntraffic report:", report.summary())
+print(f"compiles: step={scheduler.step_traces} admit="
+      f"{scheduler.admit_traces} (1 each; nothing recompiled under mixed "
+      f"replay/decode/admission)")
+
+# -- the invisibility guarantee: batched == solo, bit for bit ---------------
+req = requests[1]
+solo = generate(engine, jax.numpy.asarray(req.prompt)[None],
+                req.max_new_tokens, req.key, temperature=req.temperature)
+batched = next(c for c in report.completions
+               if c.request.req_id == req.req_id).tokens
+assert batched == [int(t) for t in np.asarray(solo)[0]]
+print(f"\nreq {req.req_id} served in the busy slot table == solo "
+      f"generate(): {batched}")

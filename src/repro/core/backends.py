@@ -6,8 +6,9 @@ obligations:
  * ``build(cfg, w, key)``   — index-build-time state derived from the output
    embedding ``w (V, d)``: the block-IVF index, the FMBE feature sketch, or
    nothing (exact / selfnorm).
- * ``decode(state, h, key, cfg, k, use_pallas)`` — one batched decode step
-   for queries ``h (Q, d)``, returning the uniform ``DecodeOut`` contract:
+ * ``decode(state, h, key, cfg, k, use_pallas, active)`` — one batched
+   decode step for queries ``h (Q, d)``, returning the uniform ``DecodeOut``
+   contract:
    ``log Ẑ (Q,)`` plus retrieved top-k ``(score, vocab id)`` candidates the
    sampler draws from. No backend touches ``oracle_retrieve`` here — the
    O(N log N) sort exists only for the paper's per-query accuracy studies
@@ -67,9 +68,14 @@ class EstimatorBackend:
 
     def decode(self, state: BackendState, h: jax.Array, key: jax.Array,
                cfg: PartitionConfig, *, k: int = 1,
-               use_pallas: bool = False, **kernel_cfg) -> DecodeOut:
+               use_pallas: bool = False,
+               active: Optional[jax.Array] = None,
+               **kernel_cfg) -> DecodeOut:
         """``kernel_cfg`` carries the method's autotuned Pallas tile sizes
-        (``tune``'s return value); empty = kernel defaults."""
+        (``tune``'s return value); empty = kernel defaults. ``active`` (Q,)
+        bool marks the live rows of a padded slot-table batch (continuous
+        batching): probe paths keep masked rows out of the dedup'd union
+        (core.decode.make_plan), dense paths ignore it."""
         raise NotImplementedError
 
     def tune(self, state: BackendState, cfg: PartitionConfig, h: jax.Array,
@@ -134,9 +140,9 @@ class ExactBackend(EstimatorBackend):
     method = "exact"
 
     def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
-               **kernel_cfg):
+               active=None, **kernel_cfg):
         return exact_topk_decode(state.w, h, k=k, use_pallas=use_pallas,
-                                 **kernel_cfg)
+                                 active=active, **kernel_cfg)
 
     def tune(self, state, cfg, h, key, *, path=None):
         from ..kernels.autotune import tune_topk_z
@@ -148,9 +154,9 @@ class SelfnormBackend(EstimatorBackend):
     method = "selfnorm"
 
     def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
-               **kernel_cfg):
+               active=None, **kernel_cfg):
         return selfnorm_decode(state.w, h, k=k, use_pallas=use_pallas,
-                               **kernel_cfg)
+                               active=active, **kernel_cfg)
 
     tune = ExactBackend.tune
 
@@ -165,12 +171,13 @@ class MimpsBackend(EstimatorBackend):
             w=w, index=_build_index(cfg, w, key) if with_index else None)
 
     def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
-               **kernel_cfg):
+               active=None, **kernel_cfg):
         if state.index is None:
             return exact_topk_decode(state.w, h, k=k, use_pallas=use_pallas)
         return mimps_decode(state.index, h, key, n_probe=cfg.n_probe,
                             l=cfg.l, k=k, head_cap=cfg.head_cap,
-                            use_pallas=use_pallas, **kernel_cfg)
+                            use_pallas=use_pallas, active=active,
+                            **kernel_cfg)
 
     def tune(self, state, cfg, h, key, *, path=None):
         if state.index is None:
@@ -201,13 +208,14 @@ class MinceBackend(EstimatorBackend):
             w=w, index=_build_index(cfg, w, key) if with_index else None)
 
     def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
-               **kernel_cfg):
+               active=None, **kernel_cfg):
         if state.index is None:
             return exact_topk_decode(state.w, h, k=k, use_pallas=use_pallas)
         return mince_decode(state.index, h, key, n_probe=cfg.n_probe,
                             l=cfg.l, k=k, iters=cfg.mince_iters,
                             solver=cfg.mince_solver, head_cap=cfg.head_cap,
-                            use_pallas=use_pallas, **kernel_cfg)
+                            use_pallas=use_pallas, active=active,
+                            **kernel_cfg)
 
     def tune(self, state, cfg, h, key, *, path=None):
         if state.index is None:
@@ -243,7 +251,7 @@ class FmbeBackend(EstimatorBackend):
         return BackendState(w=w, index=index, fmbe=fmbe)
 
     def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
-               **kernel_cfg):
+               active=None, **kernel_cfg):
         from .feature_maps import fmbe_z_batch
         if state.index is None:
             out = exact_topk_decode(state.w, h, k=k, use_pallas=use_pallas)
@@ -251,7 +259,8 @@ class FmbeBackend(EstimatorBackend):
             return out._replace(log_z=jnp.log(jnp.maximum(z, 1e-30)))
         return fmbe_decode(state.fmbe, state.index, h, key,
                            n_probe=cfg.n_probe, k=k, head_cap=cfg.head_cap,
-                           use_pallas=use_pallas, **kernel_cfg)
+                           use_pallas=use_pallas, active=active,
+                           **kernel_cfg)
 
     def tune(self, state, cfg, h, key, *, path=None):
         from ..kernels.autotune import tune_fmbe_z

@@ -45,7 +45,7 @@ path — the interpret/CPU reference the parity tests pin the kernel to.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -76,6 +76,9 @@ class DecodeOut(NamedTuple):
     head_lse: jax.Array     # (Q,)
     tail_lse: jax.Array     # (Q,)  -inf where no tail sample survived
     k_eff: jax.Array        # (Q,)
+    head_live: Any = None   # ()   measured deduplicated union size U (probe
+                            #      paths only; None for dense decodes) — the
+                            #      serving scheduler's dedup-vs-fill metric
 
 
 def plan_heads(block_ids: jax.Array, capacity: int):
@@ -120,9 +123,24 @@ def plan_tail(index: _mips.IVFIndex, key: jax.Array, l: int,
 
 
 def make_plan(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
-              n_probe: int, l: int) -> DecodePlan:
-    """Probe + dedup + tail-sample: everything the fused kernel consumes."""
+              n_probe: int, l: int,
+              active: Optional[jax.Array] = None) -> DecodePlan:
+    """Probe + dedup + tail-sample: everything the fused kernel consumes.
+
+    ``active`` (Q,) bool marks the real queries of a padded slot-table batch
+    (continuous-batching serving): masked-out rows adopt the first live
+    row's probe set, so a half-full slot table never inflates the dedup'd
+    union U with garbage blocks — U (and the decode's wall-clock) tracks the
+    *live* batch, and the dedup-vs-fill metric stays meaningful. Per-query
+    outputs of masked rows are well-formed but meaningless (the scheduler
+    discards them); active rows are untouched — their membership mask, and
+    therefore their candidates and head/tail LSEs, never depend on what the
+    other rows probe.
+    """
     block_ids = _mips.probe_batch(index, h, n_probe)
+    if active is not None:
+        donor = block_ids[jnp.argmax(active)]          # (p,) first live row
+        block_ids = jnp.where(active[:, None], block_ids, donor[None, :])
     capacity = min(h.shape[0] * n_probe, index.n_blocks)
     head_ids, member, n_unique = plan_heads(block_ids, capacity)
     tb, tr, accept = plan_tail(index, key, l, block_ids)
@@ -229,6 +247,7 @@ def mimps_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
                  *, n_probe: int, l: int, k: int = 1,
                  use_pallas: bool = True, block_q: int = 128,
                  tail_tile: int = 32, head_cap: int = 0,
+                 active: Optional[jax.Array] = None,
                  interpret=None) -> DecodeOut:
     """Batched sublinear decode: h (Q, d) -> log Ẑ, top-k rows, per Eq. 5.
 
@@ -239,9 +258,10 @@ def mimps_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
 
     ``block_q`` / ``tail_tile`` are the Pallas pipeline's autotunable tile
     sizes (kernels.autotune); ``head_cap`` bounds the XLA path's static
-    union capacity (0 = auto, see ``_resolve_head_cap``).
+    union capacity (0 = auto, see ``_resolve_head_cap``); ``active`` masks
+    the live rows of a padded slot-table batch (see ``make_plan``).
     """
-    plan = make_plan(index, h, key, n_probe, l)
+    plan = make_plan(index, h, key, n_probe, l, active=active)
     tail_rows_g = _tail_rows(index, plan)
     if use_pallas:
         row_logw = jnp.where(index.valid, 0.0, NEG_INF).astype(jnp.float32)
@@ -267,7 +287,8 @@ def mimps_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
         plan.n_accept.astype(jnp.float32))
     top_id = index.row_id.reshape(-1)[topi]
     return DecodeOut(log_z=log_z, top_score=topv, top_id=top_id,
-                     head_lse=head_lse, tail_lse=tail_lse, k_eff=plan.k_eff)
+                     head_lse=head_lse, tail_lse=tail_lse, k_eff=plan.k_eff,
+                     head_live=plan.head_live)
 
 
 # ---------------------------------------------------------------------------
@@ -307,6 +328,7 @@ def mince_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
                  *, n_probe: int, l: int, k: int = 1, iters: int = 2,
                  solver: str = "halley", use_pallas: bool = True,
                  head_cap: int = 0, block_q: int = 128,
+                 active: Optional[jax.Array] = None,
                  interpret=None) -> DecodeOut:
     """Batched sublinear MINCE (Eq. 6/7): S_k(q) is the IVF probe head, the
     noise set is the plan's shared uniform tail — no oracle sort anywhere.
@@ -327,7 +349,7 @@ def mince_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
     the exactly-scored head.
     """
     assert l >= 1, "MINCE needs at least one noise sample"
-    plan = make_plan(index, h, key, n_probe, l)
+    plan = make_plan(index, h, key, n_probe, l, active=active)
     tail_rows_g = _tail_rows(index, plan)
 
     n = index.n
@@ -378,7 +400,8 @@ def mince_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
 
     top_id = index.row_id.reshape(-1)[topi]
     return DecodeOut(log_z=log_z, top_score=topv, top_id=top_id,
-                     head_lse=head_lse, tail_lse=tail_lse, k_eff=plan.k_eff)
+                     head_lse=head_lse, tail_lse=tail_lse, k_eff=plan.k_eff,
+                     head_live=plan.head_live)
 
 
 @partial(jax.jit, static_argnames=("n_probe", "k", "use_pallas", "head_cap",
@@ -387,6 +410,7 @@ def fmbe_decode(state: FMBEState, index: _mips.IVFIndex, h: jax.Array,
                 key: jax.Array, *, n_probe: int, k: int = 1,
                 use_pallas: bool = True, head_cap: int = 0,
                 block_q: int = 128, block_p: int = 128,
+                active: Optional[jax.Array] = None,
                 interpret=None) -> DecodeOut:
     """Batched FMBE decode: exact head + sketch-estimated complement.
 
@@ -405,7 +429,8 @@ def fmbe_decode(state: FMBEState, index: _mips.IVFIndex, h: jax.Array,
     p·P lambda floats, still independent of V. The estimate is deterministic
     given the feature map; ``key`` only feeds the empty tail plan.
     """
-    plan = make_plan(index, h, key, n_probe, l=0)   # head-only plan
+    plan = make_plan(index, h, key, n_probe, l=0,   # head-only plan
+                     active=active)
     cap = _resolve_head_cap(head_cap, n_probe, plan.head_ids.shape[0])
 
     if use_pallas:
@@ -435,7 +460,7 @@ def fmbe_decode(state: FMBEState, index: _mips.IVFIndex, h: jax.Array,
     return DecodeOut(log_z=log_z, top_score=topv, top_id=top_id,
                      head_lse=head_lse,
                      tail_lse=jnp.full_like(log_z, -jnp.inf),
-                     k_eff=plan.k_eff)
+                     k_eff=plan.k_eff, head_live=plan.head_live)
 
 
 # ---------------------------------------------------------------------------
@@ -446,8 +471,13 @@ def fmbe_decode(state: FMBEState, index: _mips.IVFIndex, h: jax.Array,
                                    "interpret"))
 def exact_topk_decode(w: jax.Array, h: jax.Array, *, k: int = 1,
                       use_pallas: bool = False, block_q: int = 128,
-                      block_v: int = 512, interpret=None) -> DecodeOut:
-    """Exact log Z + top-k in one pass (Pallas ``topk_z`` or streaming XLA)."""
+                      block_v: int = 512,
+                      active: Optional[jax.Array] = None,
+                      interpret=None) -> DecodeOut:
+    """Exact log Z + top-k in one pass (Pallas ``topk_z`` or streaming XLA).
+    ``active`` is accepted for backend-signature uniformity and ignored —
+    the dense pass scores every row regardless of slot occupancy."""
+    del active
     if use_pallas:
         from ..kernels.topk_z import topk_z
         lse, topv, topi = topk_z(h, w, k, block_q=block_q, block_v=block_v,
@@ -465,9 +495,12 @@ def exact_topk_decode(w: jax.Array, h: jax.Array, *, k: int = 1,
 
 @partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
 def selfnorm_decode(w: jax.Array, h: jax.Array, *, k: int = 1,
-                    use_pallas: bool = False, interpret=None) -> DecodeOut:
+                    use_pallas: bool = False,
+                    active: Optional[jax.Array] = None,
+                    interpret=None) -> DecodeOut:
     """Self-normalized head: candidates as exact, but Z assumed == 1
     (log Ẑ == 0; the model was trained with the selfnorm penalty)."""
+    del active
     out = exact_topk_decode(w, h, k=k, use_pallas=use_pallas,
                             interpret=interpret)
     return out._replace(log_z=jnp.zeros_like(out.log_z))

@@ -136,28 +136,37 @@ class KVCache(NamedTuple):
 
 def decode_self_attention(p: Params, x: jax.Array, cache: KVCache, pos,
                           cfg, *, window: int = 0):
-    """Single-token decode. x (B, 1, d); pos: scalar absolute position.
+    """Single-token decode. x (B, 1, d); pos: absolute position — a scalar
+    shared by the batch (generate()'s lock-step loop) or an (B,) vector of
+    per-stream positions (the continuous-batching slot table, where each
+    lane is at a different depth of its own request).
 
     Returns (out (B, 1, d), updated cache). For sliding-window layers the
     cache is a ring buffer of length `window`.
     """
     q, k, v = _project_qkv(p, x, x, cfg)             # q (B,1,Kv,G,Dh)
-    posv = jnp.asarray(pos)[None]
+    pos = jnp.asarray(pos)
+    per_slot = pos.ndim == 1
+    posv = pos[:, None] if per_slot else pos[None]   # (B,1) | (1,)
     b = x.shape[0]
     qf = apply_rope(q.reshape(b, 1, -1, q.shape[-1]), posv, cfg.rope_theta)
     q = qf.reshape(q.shape)
     k = apply_rope(k, posv, cfg.rope_theta)
     s_max = cache.k.shape[1]
-    slot = (jnp.asarray(pos) % window) if window else jnp.asarray(pos)
+    slot = (pos % window) if window else pos
     new_k = _dyn_update(cache.k, k, slot)
     new_v = _dyn_update(cache.v, v, slot)
-    valid = jnp.minimum(jnp.asarray(pos) + 1, s_max)
+    valid = jnp.minimum(pos + 1, s_max)
     scale = cfg.resolved_head_dim ** -0.5
     s = jnp.einsum("bqkgd,bskd->bkgqs", q, new_k,
                    preferred_element_type=jnp.float32) * scale
     kv_idx = jnp.arange(s_max)
-    mask = kv_idx < valid
-    s = jnp.where(mask[None, None, None, None], s, NEG)
+    if per_slot:
+        mask = kv_idx[None, :] < valid[:, None]      # (B, s_max)
+        s = jnp.where(mask[:, None, None, None, :], s, NEG)
+    else:
+        mask = kv_idx < valid
+        s = jnp.where(mask[None, None, None, None], s, NEG)
     a = jax.nn.softmax(s, axis=-1).astype(new_v.dtype)
     o = jnp.einsum("bkgqs,bskd->bqkgd", a, new_v)
     out = o.reshape(*x.shape[:-1], -1) @ p["wo"]
@@ -165,6 +174,12 @@ def decode_self_attention(p: Params, x: jax.Array, cache: KVCache, pos,
 
 
 def _dyn_update(buf: jax.Array, row: jax.Array, slot) -> jax.Array:
-    return jax.lax.dynamic_update_slice(
-        buf, row.astype(buf.dtype),
-        (0, jnp.asarray(slot, jnp.int32), 0, 0))
+    """Write one token's KV at `slot` — scalar (whole batch at the same
+    position) or (B,) (each lane at its own position, vmapped)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    row = row.astype(buf.dtype)
+    if slot.ndim == 0:
+        return jax.lax.dynamic_update_slice(buf, row, (0, slot, 0, 0))
+    return jax.vmap(
+        lambda b, r, s: jax.lax.dynamic_update_slice(b, r, (s, 0, 0))
+    )(buf, row, slot)

@@ -1,1 +1,8 @@
 from .engine import Engine, ServeState, generate
+from .scheduler import Completion, Request, Scheduler, SlotTable
+from .server import (Arrival, Server, ServerReport, poisson_arrivals,
+                     trace_arrivals)
+
+__all__ = ["Engine", "ServeState", "generate", "Scheduler", "SlotTable",
+           "Request", "Completion", "Server", "ServerReport", "Arrival",
+           "poisson_arrivals", "trace_arrivals"]

@@ -94,10 +94,29 @@ class Engine:
                     temperature: float = 0.0
                     ) -> Tuple[Dict[str, jax.Array], ServeState]:
         """One token for every stream; returns sampling outputs + new state.
-        ``temperature`` must be a static python float (0.0 = greedy)."""
+        ``temperature`` may be a python float or a traced scalar (0 =
+        greedy) — it is sampling data, not a compile-time constant.
+
+        Cache-capacity guard: a concrete (eager / host-loop) position past
+        ``max_len`` raises — the KV write would silently clobber or wrap.
+        Inside a compiled step the position is clamped to the last slot and
+        the step is flagged in ``out["overflow"]`` instead (a traced value
+        cannot raise); callers that loop (generate, the slot scheduler)
+        bound their step counts so the flag never fires in normal service.
+        """
+        pos = state.pos
+        if not isinstance(pos, jax.core.Tracer):
+            if int(jnp.max(jnp.asarray(pos))) >= self.max_len:
+                raise ValueError(
+                    f"decode position {jnp.max(jnp.asarray(pos))} is past "
+                    f"the KV-cache capacity max_len={self.max_len}; the "
+                    f"write would wrap/clobber earlier positions")
+        overflow = pos >= self.max_len
+        pos_safe = jnp.minimum(pos, self.max_len - 1)
         h, new_cache = self.model.decode_step(
-            self.params, state.cache, state.last_token, state.pos, img=img)
+            self.params, state.cache, state.last_token, pos_safe, img=img)
         out = self.next_token_distribution(h, key, temperature)
+        out["overflow"] = overflow
         new_state = ServeState(cache=new_cache, pos=state.pos + 1,
                                last_token=out["token"])
         return out, new_state
@@ -107,43 +126,56 @@ class Engine:
     def next_token_distribution(self, h: jax.Array, key: jax.Array,
                                 temperature: float = 0.0
                                 ) -> Dict[str, jax.Array]:
-        """Sample one token per stream. Greedy at temperature == 0.0;
+        """Sample one token per stream. Greedy at temperature == 0;
         otherwise Gumbel-max over the retrieved head candidates with the
-        reported probability normalized by the estimated log Ẑ."""
+        reported probability normalized by the estimated log Ẑ.
+
+        ``temperature`` is *traced data* (float or scalar array): changing
+        it never recompiles, so the per-slot scheduler can thread one
+        temperature per stream through the same executable. The backend
+        always retrieves ``sample_k`` candidates — greedy decodes take the
+        top-1 of the same (sorted) retrieval, so the candidate shape stays
+        temperature-independent."""
         cfg = self.cfg
         k_est, k_samp = jax.random.split(key)
         if cfg.n_codebooks:
             # audio: exact per-codebook softmax; temperature over full logits
+            t = jnp.asarray(temperature, jnp.float32)
             w = self.model.head_matrix(self.params)
             logits = jnp.einsum("bd,cvd->bcv", h, w)
             log_z = jax.nn.logsumexp(logits, -1)
-            if temperature > 0.0:
-                g = jax.random.gumbel(k_samp, logits.shape)
-                tok = jnp.argmax(logits / temperature + g, -1)
-            else:
-                tok = jnp.argmax(logits, -1)
+            g = jax.random.gumbel(k_samp, logits.shape)
+            safe_t = jnp.where(t > 0.0, t, 1.0)
+            tok = jnp.where(t > 0.0,
+                            jnp.argmax(logits / safe_t + g, -1),
+                            jnp.argmax(logits, -1))
             tok = tok.astype(jnp.int32)
             top = jnp.take_along_axis(logits, tok[..., None], -1)[..., 0]
             return {"token": tok, "log_prob": top - log_z, "log_z": log_z}
 
         pc = cfg.partition
-        n_cand = pc.sample_k if temperature > 0.0 else 1
-        out = self.backend.decode(self.state, h, k_est, pc, k=n_cand,
+        out = self.backend.decode(self.state, h, k_est, pc, k=pc.sample_k,
                                   use_pallas=self.use_pallas,
                                   **self.kernel_cfg)
         return _sample_candidates(out, k_samp, temperature)
 
 
 def _sample_candidates(out: DecodeOut, key: jax.Array,
-                       temperature: float) -> Dict[str, jax.Array]:
+                       temperature) -> Dict[str, jax.Array]:
     """Gumbel-max over retrieved candidates: token ~ softmax(s/T) restricted
     to the head. log_prob reports the model's T=1 probability of the chosen
-    token, normalized with the estimated log Ẑ (selfnorm's Ẑ == 1)."""
-    if temperature > 0.0:
-        g = jax.random.gumbel(key, out.top_score.shape)
-        pick = jnp.argmax(out.top_score / temperature + g, axis=-1)
-    else:
-        pick = jnp.zeros(out.top_score.shape[:1], jnp.int32)  # scores sorted
+    token, normalized with the estimated log Ẑ (selfnorm's Ẑ == 1).
+    ``temperature`` is a traced scalar (0 = greedy: index 0 of the sorted
+    candidates); the gumbel draw happens unconditionally so the executable
+    is shared across temperatures — counter-based keys mean the unused draw
+    perturbs nothing else."""
+    t = jnp.asarray(temperature, jnp.float32)
+    g = jax.random.gumbel(key, out.top_score.shape)
+    safe_t = jnp.where(t > 0.0, t, 1.0)
+    pick = jnp.where(t > 0.0,
+                     jnp.argmax(out.top_score / safe_t + g, axis=-1),
+                     jnp.zeros(out.top_score.shape[:1], jnp.int32)
+                     ).astype(jnp.int32)
     tok = jnp.take_along_axis(out.top_id, pick[:, None], 1)[:, 0]
     score = jnp.take_along_axis(out.top_score, pick[:, None], 1)[:, 0]
     return {"token": tok.astype(jnp.int32), "log_prob": score - out.log_z,
@@ -176,54 +208,75 @@ def generate(engine: Engine, prompt, n_tokens: int, key: jax.Array,
             "to condition on (the seed crashed here with UnboundLocalError)")
     if n_tokens < 1:
         raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
+    t_replay = prompt.shape[1]
+    if t_replay + n_tokens - 1 > engine.max_len:
+        raise ValueError(
+            f"prompt length {t_replay} + {n_tokens} generated tokens needs "
+            f"{t_replay + n_tokens - 1} cache positions but the engine was "
+            f"built with max_len={engine.max_len}; the KV write past "
+            f"capacity would clobber earlier positions")
     if host_loop:
         return _generate_host(engine, prompt, n_tokens, key, img=img,
                               temperature=temperature, return_aux=return_aux)
-    t_replay = prompt.shape[1]
-    fold_ids = jnp.concatenate([
-        jnp.arange(t_replay, dtype=jnp.int32),
-        10_000 + jnp.arange(n_tokens - 1, dtype=jnp.int32)])
+    # Bucket the replay length to the next power of two so heterogeneous
+    # prompt lengths share ONE compiled scan per bucket (the seed compiled a
+    # fresh replay+decode scan for every distinct prompt length). The scan
+    # runs `bucket + n_tokens - 1` steps; replay/generation switchover gates
+    # on the TRUE length via the traced is_replay flags and fold schedule,
+    # and the emitted window is cut out with a traced dynamic slice — pad
+    # steps trail the real ones, burn a few decode steps, and are discarded.
+    bucket = 1 << (t_replay - 1).bit_length()
+    total = bucket + n_tokens - 1
+    step_ix = jnp.arange(total, dtype=jnp.int32)
+    fold_ids = jnp.where(step_ix < t_replay, step_ix,
+                         10_000 + step_ix - t_replay)
     keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(fold_ids)
     # prompt tokens step-major, padded to the full scan length (the padding
     # is never read: is_replay gates on t < t_replay)
     prompt_sm = jnp.moveaxis(prompt, 1, 0)
-    total = fold_ids.shape[0]
     pad = total - t_replay
     prompt_sm = jnp.concatenate(
         [prompt_sm, jnp.zeros((pad,) + prompt_sm.shape[1:],
                               prompt_sm.dtype)]) if pad else prompt_sm
-    is_replay = jnp.arange(total) < t_replay
-    run = _scan_runner(engine, prompt.shape, str(jnp.asarray(prompt).dtype),
-                       t_replay, float(temperature))
-    toks, lp, lz = run(prompt_sm, keys, is_replay, img)
+    is_replay = step_ix < t_replay
+    batch_shape = prompt.shape[:1] + prompt.shape[2:]
+    run = _scan_runner(engine, batch_shape, str(jnp.asarray(prompt).dtype),
+                       bucket, n_tokens)
+    toks, lp, lz = run(prompt_sm, keys, is_replay,
+                       jnp.asarray(t_replay - 1, jnp.int32),
+                       jnp.asarray(temperature, jnp.float32), img)
     if return_aux:
         return toks, {"log_prob": lp, "log_z": lz}
     return toks
 
 
-def _scan_runner(engine: Engine, prompt_shape, prompt_dtype, t_replay: int,
-                 temperature: float):
-    """Build (or fetch) the compiled scan for one (engine, shapes, T) cell.
+def _scan_runner(engine: Engine, batch_shape, prompt_dtype, bucket: int,
+                 n_tokens: int):
+    """Build (or fetch) the compiled scan for one (engine, batch, replay
+    bucket, n_tokens) cell.
 
     The executable is cached on the engine: jit keys its trace cache on the
     function object, so a fresh inner ``run`` per generate() call would
     recompile the whole replay+decode scan every request — exactly the
     dispatch overhead the device-resident loop exists to remove. ``img`` is
     a traced *argument* (not a closure constant) so cached executables serve
-    changing images.
+    changing images; the true replay length (as ``t_start``: the step index
+    of the first emitted sample) and the temperature are traced arguments
+    too, so neither prompt-length variation within a bucket nor a sampling-
+    parameter change ever recompiles.
     """
     cache = getattr(engine, "_scan_runners", None)
     if cache is None:
         cache = engine._scan_runners = {}
-    key = (prompt_shape, prompt_dtype, t_replay, temperature)
+    key = (batch_shape, prompt_dtype, bucket, n_tokens)
     run = cache.get(key)
     if run is not None:
         return run
 
     @jax.jit
-    def run(prompt_sm, keys, is_replay, img):
+    def run(prompt_sm, keys, is_replay, t_start, temperature, img):
         state = ServeState(
-            cache=engine.model.init_decode_state(prompt_shape[0],
+            cache=engine.model.init_decode_state(batch_shape[0],
                                                  engine.max_len),
             pos=jnp.zeros((), jnp.int32),
             last_token=prompt_sm[0])
@@ -238,11 +291,12 @@ def _scan_runner(engine: Engine, prompt_shape, prompt_dtype, t_replay: int,
 
         _, (toks, lp, lz) = jax.lax.scan(step, state,
                                          (keys, prompt_sm, is_replay))
-        # steps 0..t_replay-2 replay the prompt; the emitted samples start
-        # at the last replay step (position 0 of the generation)
-        sl = slice(t_replay - 1, None)
-        return (jnp.moveaxis(toks[sl], 0, 1),
-                jnp.moveaxis(lp[sl], 0, 1), jnp.moveaxis(lz[sl], 0, 1))
+        # steps 0..t_start-1 replay the prompt; the emitted samples start at
+        # the last replay step (position 0 of the generation) and any
+        # bucket-padding steps trail behind the emitted window
+        cut = lambda a: jax.lax.dynamic_slice_in_dim(a, t_start, n_tokens, 0)
+        return (jnp.moveaxis(cut(toks), 0, 1),
+                jnp.moveaxis(cut(lp), 0, 1), jnp.moveaxis(cut(lz), 0, 1))
 
     cache[key] = run
     return run

@@ -1,0 +1,363 @@
+"""Continuous-batching slot scheduler: ONE compiled mixed step for a
+fixed-capacity slot table (DESIGN.md SS12).
+
+``Engine.generate`` serves one synchronous same-length batch per call; under
+real traffic that leaves slots idle while the longest request drains and
+recompiles whenever shapes drift. This module holds per-request decode state
+in a padded device batch of ``n_slots`` lanes — KV-cache lane, position,
+remaining-token budget, per-slot PRNG key, per-slot sampling params
+(temperature / sample_k as *traced arrays*) — and advances every live lane
+together with a single jitted step:
+
+ * **Mixed prefill/decode.** Prompt replay is chunked into the decode path
+   one token per step (the same replay-through-cache trick generate() uses),
+   so a lane mid-replay and a lane mid-generation ride the SAME executable:
+   admitting a request never stalls in-flight decodes and never recompiles.
+ * **Shared estimator work.** The batched backend decode runs once over all
+   lanes; the probe-union dedup that makes retrieval estimators pay off
+   under load (U <= min(Q*n_probe, nb)) happens across *requests*. Inactive
+   lanes are masked out of the union (``core.decode.make_plan(active=...)``)
+   so a half-empty table never pays for garbage probes.
+ * **Per-slot sampling on generate()'s key schedule.** Each lane folds its
+   own request key with its own stream-step index (``fold_in(key, t)`` on
+   replay, ``fold_in(key, 10000 + t)`` after), splits off the sampling key,
+   and draws its own Gumbel noise — so a request decoded in a busy slot
+   table emits bit-identical tokens to the same request run alone through
+   ``generate()`` (tests/test_scheduler.py pins this).
+ * **Slot recycling.** A finished lane is marked inactive on device and
+   returned to the host free list; the next admission rewinds the lane to
+   position 0 — stale KV above the new request's frontier is masked by the
+   per-slot validity window, so no cache zeroing is needed.
+
+Both jitted entry points (``_step``, ``_admit``) carry trace counters:
+after one step and one admission, NOTHING recompiles — asserted by tests
+and by ``benchmarks/serving_bench.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from functools import partial
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_REQ_IDS = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request. ``key`` may be a PRNG key array or an int seed;
+    it drives this request's sampling exactly as the same key would in
+    ``generate()``. ``sample_k=0`` means the engine's configured
+    ``sample_k``; smaller values restrict Gumbel-max to the top candidates.
+    """
+    prompt: Any                       # (L,) ints (list / np / jax array)
+    max_new_tokens: int
+    key: Any = 0
+    temperature: float = 0.0
+    sample_k: int = 0
+    on_token: Optional[Callable] = None     # fn(request, token, wall_time)
+    on_complete: Optional[Callable] = None  # fn(request, completion)
+    req_id: int = dataclasses.field(default_factory=lambda: next(_REQ_IDS))
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if np.ndim(self.key) == 0:
+            self.key = jax.random.PRNGKey(int(self.key))
+
+
+@dataclasses.dataclass
+class Completion:
+    """Streamed back through ``Request.on_complete`` and returned by
+    ``Scheduler.step`` when a lane finishes."""
+    request: Request
+    tokens: List[int]
+    log_probs: List[float]
+    log_zs: List[float]
+    admit_time: float
+    first_token_time: Optional[float]
+    done_time: float
+    overflowed: bool = False
+    error: Optional[str] = None    # set when admission rejected the request
+                                   # (tokens stay empty)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SlotTable:
+    """Device-resident per-lane decode state (everything the mixed step
+    reads or writes; one pytree, one dispatch)."""
+    cache: Any              # model decode state, batch = n_slots
+    prompt: jax.Array       # (S, P_cap) padded prompt tokens
+    last_token: jax.Array   # (S,)  lane's previous sampled token
+    t_stream: jax.Array     # (S,)  step index within the lane's request ==
+                            #       the lane's next KV position (one token
+                            #       is consumed at position t per step)
+    t_replay: jax.Array     # (S,)  lane's true prompt length
+    budget: jax.Array       # (S,)  tokens still to emit
+    req_key: jax.Array      # (S, 2) per-request PRNG key
+    temperature: jax.Array  # (S,)  per-slot sampling temperature
+    sample_k: jax.Array     # (S,)  per-slot candidate restriction
+    active: jax.Array       # (S,)  lane holds a live request
+    step_idx: jax.Array     # ()    global step counter (estimator PRNG)
+
+
+def sample_slots(out, keys: jax.Array, temperature: jax.Array,
+                 sample_k: Optional[jax.Array] = None):
+    """Per-slot Gumbel-max over retrieved candidates: the traced-array
+    generalization of ``engine._sample_candidates`` — one temperature, key
+    and candidate budget PER ROW. Bit-compatible with the batch-shared
+    sampler lane-for-lane when ``sample_k`` equals the retrieved width (the
+    gumbel draw per lane matches the solo (1, k) draw exactly).
+
+    keys (S, 2) are each lane's k_samp; temperature (S,) with 0 = greedy
+    (index 0 of the sorted candidates); sample_k (S,) restricts lane s to
+    its top ``sample_k[s]`` candidates.
+    """
+    kc = out.top_score.shape[1]
+    g = jax.vmap(lambda k: jax.random.gumbel(k, (1, kc))[0])(keys)
+    t = jnp.asarray(temperature, jnp.float32)
+    safe_t = jnp.where(t > 0.0, t, 1.0)
+    noisy = out.top_score / safe_t[:, None] + g
+    if sample_k is not None:
+        allowed = jnp.arange(kc)[None, :] < \
+            jnp.maximum(sample_k, 1)[:, None]
+        noisy = jnp.where(allowed, noisy, -jnp.inf)
+    pick = jnp.where(t > 0.0, jnp.argmax(noisy, axis=-1),
+                     jnp.zeros(t.shape, jnp.int32)).astype(jnp.int32)
+    tok = jnp.take_along_axis(out.top_id, pick[:, None], 1)[:, 0]
+    score = jnp.take_along_axis(out.top_score, pick[:, None], 1)[:, 0]
+    return tok.astype(jnp.int32), score
+
+
+class Scheduler:
+    """Fixed-capacity continuous-batching scheduler over one ``Engine``.
+
+    Host-side: a free-slot list, per-slot request bookkeeping, streaming
+    callbacks. Device-side: the ``SlotTable`` plus two jitted functions —
+    ``_admit`` (traced slot index: one compile serves every slot) and
+    ``_step`` (the mixed replay/decode step). Audio (multi-codebook) heads
+    have no slot-table path; use ``generate``.
+    """
+
+    def __init__(self, engine, n_slots: int, prompt_cap: Optional[int] = None,
+                 key: Optional[jax.Array] = None):
+        if engine.cfg.n_codebooks:
+            raise NotImplementedError(
+                "the slot scheduler serves single-stream text heads; "
+                "audio codebook decoding goes through serve.generate")
+        self.engine = engine
+        self.n_slots = n_slots
+        self.prompt_cap = int(prompt_cap or engine.max_len)
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.step_traces = 0
+        self.admit_traces = 0
+        self._free = list(range(n_slots))
+        self._slot_req: List[Optional[Request]] = [None] * n_slots
+        self._slot_acc: List[Optional[Completion]] = [None] * n_slots
+        self.table = self._init_table()
+        self._step_fn = self._build_step()
+        self._admit_fn = self._build_admit()
+
+    # -- device state --------------------------------------------------------
+
+    def _init_table(self) -> SlotTable:
+        s = self.n_slots
+        eng = self.engine
+        return SlotTable(
+            cache=eng.model.init_decode_state(s, eng.max_len),
+            prompt=jnp.zeros((s, self.prompt_cap), jnp.int32),
+            last_token=jnp.zeros((s,), jnp.int32),
+            t_stream=jnp.zeros((s,), jnp.int32),
+            t_replay=jnp.ones((s,), jnp.int32),
+            budget=jnp.zeros((s,), jnp.int32),
+            req_key=jnp.zeros((s, 2), jnp.uint32),
+            temperature=jnp.zeros((s,), jnp.float32),
+            sample_k=jnp.ones((s,), jnp.int32),
+            active=jnp.zeros((s,), bool),
+            step_idx=jnp.zeros((), jnp.int32))
+
+    def _build_step(self):
+        eng = self.engine
+        model, params = eng.model, eng.params
+        pc = eng.cfg.partition
+        backend, bstate = eng.backend, eng.state
+        kernel_cfg = dict(eng.kernel_cfg)
+        use_pallas = eng.use_pallas
+        max_len = eng.max_len
+        est_key = jax.random.fold_in(self.key, 0xE57)
+        # donate the table: the step updates the KV cache in place instead
+        # of allocating + copying n_slots x max_len of it per token (CPU has
+        # no donation support and would warn on every compile, so gate it)
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+
+        @partial(jax.jit, donate_argnums=donate)
+        def step(table: SlotTable):
+            self.step_traces += 1   # python side effect: counts (re)traces
+            # -- input token: next prompt token while replaying, else the
+            #    lane's own previous sample
+            is_replay = table.t_stream < table.t_replay
+            t_clamp = jnp.minimum(table.t_stream, self.prompt_cap - 1)
+            ptok = jnp.take_along_axis(table.prompt, t_clamp[:, None],
+                                       1)[:, 0]
+            tok_in = jnp.where(is_replay, ptok, table.last_token)
+            # -- cache-capacity guard: traced positions clamp-with-flag
+            #    (Engine.decode_step's compiled-path contract)
+            overflow = table.active & (table.t_stream >= max_len)
+            pos_safe = jnp.minimum(table.t_stream, max_len - 1)
+            h, new_cache = model.decode_step(params, table.cache, tok_in,
+                                             pos_safe)
+            # -- per-slot sampling keys on generate()'s fold schedule
+            fold = jnp.where(is_replay, table.t_stream,
+                             10_000 + table.t_stream - table.t_replay)
+            step_keys = jax.vmap(jax.random.fold_in)(table.req_key, fold)
+            k_samp = jax.vmap(lambda k: jax.random.split(k)[1])(step_keys)
+            # -- ONE shared estimator decode across every lane; masked lanes
+            #    stay out of the probe union
+            k_est = jax.random.fold_in(est_key, table.step_idx)
+            out = backend.decode(bstate, h, k_est, pc, k=pc.sample_k,
+                                 use_pallas=use_pallas, active=table.active,
+                                 **kernel_cfg)
+            tok, score = sample_slots(out, k_samp, table.temperature,
+                                      table.sample_k)
+            # -- lifecycle: the lane's first kept sample is emitted by its
+            #    LAST replay step (t_stream == t_replay - 1), same as
+            #    generate(); budget counts emitted tokens
+            emitted = table.active & (table.t_stream >= table.t_replay - 1) \
+                & ~overflow
+            new_budget = table.budget - emitted.astype(jnp.int32)
+            finished = (emitted & (new_budget <= 0)) | overflow
+            act = table.active
+            new_table = dataclasses.replace(
+                table,
+                cache=new_cache,
+                last_token=jnp.where(act, tok, table.last_token),
+                t_stream=table.t_stream + act.astype(jnp.int32),
+                budget=new_budget,
+                active=act & ~finished,
+                step_idx=table.step_idx + 1)
+            head_live = out.head_live if out.head_live is not None \
+                else jnp.zeros((), jnp.int32)
+            outs = {"token": tok, "log_prob": score - out.log_z,
+                    "log_z": out.log_z, "emitted": emitted,
+                    "finished": finished, "overflow": overflow,
+                    "n_active": act.astype(jnp.int32).sum(),
+                    "head_live": head_live}
+            return new_table, outs
+
+        return step
+
+    def _build_admit(self):
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+
+        @partial(jax.jit, donate_argnums=donate)
+        def admit(table: SlotTable, slot, prompt_row, p_len, budget, key,
+                  temp, sample_k):
+            self.admit_traces += 1
+            upd = lambda arr, val: arr.at[slot].set(val)
+            return dataclasses.replace(
+                table,
+                prompt=jax.lax.dynamic_update_slice(
+                    table.prompt, prompt_row[None, :], (slot, 0)),
+                last_token=upd(table.last_token, prompt_row[0]),
+                t_stream=upd(table.t_stream, 0),
+                t_replay=upd(table.t_replay, p_len),
+                budget=upd(table.budget, budget),
+                req_key=table.req_key.at[slot].set(key),
+                temperature=upd(table.temperature, temp),
+                sample_k=upd(table.sample_k, sample_k),
+                active=upd(table.active, True))
+
+        return admit
+
+    # -- host API -------------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_in_flight(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def admit(self, request: Request) -> int:
+        """Place a request in a free lane; returns the slot index. Raises
+        when the table is full (callers queue — see serve.server) or when
+        the request cannot fit the engine's caches (host-path guard:
+        admission is the last point where a python error is possible)."""
+        p_len = int(request.prompt.shape[0])
+        if p_len < 1:
+            raise ValueError("request needs a non-empty prompt")
+        if p_len > self.prompt_cap:
+            raise ValueError(
+                f"prompt length {p_len} > scheduler prompt_cap "
+                f"{self.prompt_cap}")
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        need = p_len + request.max_new_tokens - 1
+        if need > self.engine.max_len:
+            raise ValueError(
+                f"request needs {need} cache positions (prompt {p_len} + "
+                f"{request.max_new_tokens} tokens) but engine max_len is "
+                f"{self.engine.max_len}")
+        if not self._free:
+            raise RuntimeError("no free slot; queue the request instead")
+        slot = self._free.pop(0)
+        prompt_row = np.zeros((self.prompt_cap,), np.int32)
+        prompt_row[:p_len] = request.prompt
+        sk = request.sample_k or self.engine.cfg.partition.sample_k
+        sk = max(1, min(sk, self.engine.cfg.partition.sample_k))
+        self.table = self._admit_fn(
+            self.table, jnp.int32(slot), jnp.asarray(prompt_row),
+            jnp.int32(p_len), jnp.int32(request.max_new_tokens),
+            jnp.asarray(request.key, jnp.uint32), jnp.float32(
+                request.temperature), jnp.int32(sk))
+        self._slot_req[slot] = request
+        self._slot_acc[slot] = Completion(
+            request=request, tokens=[], log_probs=[], log_zs=[],
+            admit_time=time.perf_counter(), first_token_time=None,
+            done_time=0.0)
+        return slot
+
+    def step(self) -> dict:
+        """Advance every live lane one token. Returns a host-side record:
+        emitted tokens (streamed through ``on_token``), finished requests
+        (``on_complete`` + listed under ``"completions"``), occupancy and
+        probe-dedup metrics for this step."""
+        t0 = time.perf_counter()
+        self.table, out = self._step_fn(self.table)
+        out = jax.device_get(out)
+        now = time.perf_counter()
+        completions = []
+        for s in range(self.n_slots):
+            req = self._slot_req[s]
+            if req is None:
+                continue
+            acc = self._slot_acc[s]
+            if out["emitted"][s]:
+                if acc.first_token_time is None:
+                    acc.first_token_time = now
+                acc.tokens.append(int(out["token"][s]))
+                acc.log_probs.append(float(out["log_prob"][s]))
+                acc.log_zs.append(float(out["log_z"][s]))
+                if req.on_token is not None:
+                    req.on_token(req, int(out["token"][s]), now)
+            if out["finished"][s]:
+                acc.done_time = now
+                acc.overflowed = bool(out["overflow"][s])
+                self._slot_req[s] = None
+                self._slot_acc[s] = None
+                self._free.append(s)
+                self._free.sort()
+                completions.append(acc)
+                if req.on_complete is not None:
+                    req.on_complete(req, acc)
+        return {"wall_s": now - t0,
+                "n_active": int(out["n_active"]),
+                "head_live": int(out["head_live"]),
+                "occupancy": int(out["n_active"]) / self.n_slots,
+                "completions": completions}

@@ -1,0 +1,223 @@
+"""Traffic-facing serving loop over the slot scheduler (DESIGN.md SS12).
+
+The ``Scheduler`` is mechanism (slot table + one compiled mixed step); the
+``Server`` is policy: an admission queue, arrival processes (Poisson or a
+replayed trace), slot recycling back into admission, streaming per-token /
+per-request callbacks, and the latency accounting the serving benchmark
+reports.
+
+Time model: arrivals are scheduled on a **virtual step clock** (a request
+"arrives" at step t), which keeps traffic generation deterministic and
+backend-speed-independent — the same trace replays bit-identically on any
+machine. Latency metrics are real wall-clock, measured around the compiled
+step. When the table drains and the queue is empty but arrivals remain in
+the future, the clock fast-forwards to the next arrival (idle steps are not
+simulated).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from .scheduler import Completion, Request, Scheduler
+
+
+@dataclasses.dataclass
+class Arrival:
+    at_step: float
+    request: Request
+
+
+def poisson_arrivals(requests: Sequence[Request], rate: float,
+                     seed: int = 0) -> List[Arrival]:
+    """Poisson process on the virtual step clock: inter-arrival gaps are
+    Exp(rate) steps (``rate`` = expected requests per scheduler step)."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for req in requests:
+        t += float(rng.exponential(1.0 / max(rate, 1e-9)))
+        out.append(Arrival(at_step=t, request=req))
+    return out
+
+
+def trace_arrivals(requests: Sequence[Request],
+                   at_steps: Sequence[float]) -> List[Arrival]:
+    """Replay a recorded trace: request i arrives at virtual step
+    ``at_steps[i]``."""
+    assert len(requests) == len(at_steps)
+    return sorted((Arrival(float(t), r)
+                   for t, r in zip(at_steps, requests)),
+                  key=lambda a: a.at_step)
+
+
+@dataclasses.dataclass
+class ServerReport:
+    completions: List[Completion]
+    wall_s: float                  # first admission -> last completion
+    steps: int
+    goodput_tok_s: float           # emitted tokens / wall_s
+    p50_token_ms: float            # per-token latency percentiles over all
+    p95_token_ms: float            #   emitted tokens (gap to previous token
+                                   #   of the same request; first token:
+                                   #   admission -> emit)
+    peak_concurrency: int          # max live lanes reached during the run
+    occupancy_mean: float          # mean live-lane fraction over live steps
+    occupancy_steady: float        # same, but only while demand exceeded
+                                   #   capacity (queue non-empty at step
+                                   #   start) — the saturation figure
+    dedup_ratio_mean: Optional[float]  # mean U / (n_active * n_probe)
+    dedup_by_fill: dict            # n_active -> mean dedup ratio
+    queue_wait_steps_mean: float   # admission queueing delay (virtual steps)
+
+    def summary(self) -> str:
+        ded = f"{self.dedup_ratio_mean:.2f}" \
+            if self.dedup_ratio_mean is not None else "n/a"
+        return (f"{len(self.completions)} requests, {self.steps} steps, "
+                f"{self.goodput_tok_s:.1f} tok/s goodput, per-token p50 "
+                f"{self.p50_token_ms:.2f}ms p95 {self.p95_token_ms:.2f}ms, "
+                f"occupancy {self.occupancy_mean:.2f} "
+                f"(steady {self.occupancy_steady:.2f}), probe dedup {ded}")
+
+
+class Server:
+    """Admission queue + run loop around one ``Scheduler``.
+
+    Requests enter via ``submit`` (immediate) or a pre-built arrival list
+    (``run(arrivals=...)``); free slots are filled FIFO from the queue at
+    every step boundary, so a completion recycles its lane into the next
+    queued request on the very next step.
+    """
+
+    def __init__(self, scheduler: Scheduler):
+        self.scheduler = scheduler
+        self.queue: deque = deque()
+        self._queued_at: dict = {}      # req_id -> virtual step queued
+        # per-run accumulators, reset by run() (entries are dropped from
+        # _queued_at at admission so bookkeeping stays bounded)
+        self._run_waits: List[float] = []
+        self._rejected: List[Completion] = []
+        self.step_i = 0
+
+    def submit(self, request: Request) -> None:
+        self._queued_at[request.req_id] = float(self.step_i)
+        self.queue.append(request)
+
+    def _admit_ready(self) -> None:
+        while self.queue and self.scheduler.n_free:
+            req = self.queue.popleft()
+            queued = self._queued_at.pop(req.req_id, self.step_i)
+            try:
+                self.scheduler.admit(req)
+            except ValueError as e:
+                # one unadmittable request (over cache capacity, empty
+                # prompt) must not kill the loop for every other request:
+                # reject it with an errored, token-less completion
+                now = time.perf_counter()
+                comp = Completion(request=req, tokens=[], log_probs=[],
+                                  log_zs=[], admit_time=now,
+                                  first_token_time=None, done_time=now,
+                                  error=str(e))
+                self._rejected.append(comp)
+                if req.on_complete is not None:
+                    req.on_complete(req, comp)
+                continue
+            self._run_waits.append(self.step_i - queued)
+
+    def run(self, arrivals: Optional[Sequence[Arrival]] = None,
+            max_steps: int = 100_000,
+            on_step: Optional[Callable] = None) -> ServerReport:
+        """Drive the loop until every submitted/arriving request completes
+        (or ``max_steps``). Returns the traffic report."""
+        pending = deque(sorted(arrivals or [], key=lambda a: a.at_step))
+        completions: List[Completion] = []
+        token_lat: List[float] = []
+        steady_occ: List[float] = []
+        run_records: List[dict] = []    # THIS run's step records only — a
+                                        # reused/warmed scheduler must not
+                                        # leak its history into the report
+        t_start = None
+        t_end = None
+        steps = 0
+        self._run_waits = []
+        self._rejected = []
+        while steps < max_steps:
+            while pending and pending[0].at_step <= self.step_i:
+                self.submit(pending.popleft().request)
+            if not self.queue and self.scheduler.n_in_flight == 0:
+                if not pending:
+                    break
+                # fast-forward the idle gap to the next arrival
+                self.step_i = max(self.step_i, int(np.ceil(
+                    pending[0].at_step)))
+                continue
+            demand_backed_up = bool(self.queue)
+            self._admit_ready()
+            if self.scheduler.n_in_flight == 0:
+                # everything queued was rejected at admission: nothing to
+                # step (and no occupancy sample to take)
+                continue
+            if t_start is None:
+                t_start = time.perf_counter()
+            rec = self.scheduler.step()
+            run_records.append(rec)
+            now = time.perf_counter()
+            if demand_backed_up:
+                steady_occ.append(rec["occupancy"])
+            for comp in rec["completions"]:
+                completions.append(comp)
+                t_end = now
+            self.step_i += 1
+            steps += 1
+            if on_step is not None:
+                on_step(self, rec)
+        # latency accounting from completion records: token i's latency is
+        # the gap between consecutive emissions; completions record only the
+        # first/last stamps, so spread the post-first-token budget evenly —
+        # the steady-state decode cadence (every live lane emits once per
+        # step) makes this exact up to scheduler jitter.
+        for comp in completions:
+            n = len(comp.tokens)
+            if n == 0:
+                continue
+            first = (comp.first_token_time or comp.done_time) \
+                - comp.admit_time
+            token_lat.append(first)
+            if n > 1 and comp.first_token_time is not None:
+                per = (comp.done_time - comp.first_token_time) / (n - 1)
+                token_lat.extend([per] * (n - 1))
+        total_tokens = sum(len(c.tokens) for c in completions)
+        wall = (t_end - t_start) if (t_start and t_end) else float("nan")
+        n_probe = self.scheduler.engine.cfg.partition.n_probe
+        live = [r for r in run_records if r["n_active"] > 0]
+        occ = [r["occupancy"] for r in live]
+        waits = self._run_waits
+        completions.extend(self._rejected)
+        fills: dict = {}
+        for r in live:
+            if r["head_live"] > 0:
+                fills.setdefault(r["n_active"], []).append(
+                    r["head_live"] / (r["n_active"] * n_probe))
+        dedup = [x for v in fills.values() for x in v]
+        return ServerReport(
+            completions=completions,
+            wall_s=wall,
+            steps=steps,
+            goodput_tok_s=total_tokens / wall if wall and wall > 0
+            else float("nan"),
+            p50_token_ms=float(np.percentile(token_lat, 50) * 1e3)
+            if token_lat else float("nan"),
+            p95_token_ms=float(np.percentile(token_lat, 95) * 1e3)
+            if token_lat else float("nan"),
+            peak_concurrency=max((r["n_active"] for r in live), default=0),
+            occupancy_mean=float(np.mean(occ)) if occ else 0.0,
+            occupancy_steady=float(np.mean(steady_occ)) if steady_occ
+            else (float(np.mean(occ)) if occ else 0.0),
+            dedup_ratio_mean=float(np.mean(dedup)) if dedup else None,
+            dedup_by_fill={k: float(np.mean(v))
+                           for k, v in sorted(fills.items())},
+            queue_wait_steps_mean=float(np.mean(waits)) if waits else 0.0)

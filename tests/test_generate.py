@@ -101,6 +101,36 @@ class TestScanHostParity:
         del t1
 
 
+class TestReplayBucketing:
+    """The scan runner buckets the replay length to the next power of two:
+    heterogeneous prompt lengths share ONE compiled scan per bucket (the
+    seed compiled per exact length), the padded trailing steps are
+    discarded, and the emitted window is cut with a traced slice — so
+    bucketing must be invisible in the outputs."""
+
+    def test_lengths_in_one_bucket_share_one_runner(self, rng):
+        eng, cfg = _text_engine(jax.random.fold_in(rng, 9))
+        for t_replay in (3, 4):                      # both bucket to 4
+            prompt = jax.random.randint(rng, (2, t_replay), 0, cfg.vocab)
+            generate(eng, prompt, 4, rng)
+        assert len(eng._scan_runners) == 1
+        run = next(iter(eng._scan_runners.values()))
+        if hasattr(run, "_cache_size"):              # one XLA executable
+            assert run._cache_size() == 1
+
+    @pytest.mark.parametrize("t_replay", [3, 5, 6])
+    def test_non_pow2_lengths_bit_identical_to_host(self, rng, t_replay):
+        """Pad replay steps + traced output slice == the unpadded host
+        loop, for lengths below / between power-of-two buckets."""
+        eng, cfg = _text_engine(jax.random.fold_in(rng, 10))
+        prompt = jax.random.randint(rng, (2, t_replay), 0, cfg.vocab)
+        (t_s, aux_s), (t_h, aux_h) = _both(eng, prompt, 4, rng,
+                                           temperature=0.7)
+        np.testing.assert_array_equal(np.asarray(t_s), np.asarray(t_h))
+        np.testing.assert_array_equal(np.asarray(aux_s["log_z"]),
+                                      np.asarray(aux_h["log_z"]))
+
+
 class TestEmptyPromptGuard:
     @pytest.mark.parametrize("host_loop", [False, True])
     def test_empty_prompt_raises_value_error(self, rng, host_loop):

@@ -1,0 +1,255 @@
+"""Continuous-batching slot scheduler (serve.scheduler / serve.server).
+
+The contract under test: the slot table is INVISIBLE to each request —
+a request decoded in a busy, mixed-temperature, mixed-phase slot table
+emits bit-identical tokens to the same request run alone through
+``generate()`` — while slots recycle, admission never stalls in-flight
+decodes, nothing recompiles after warmup, and cache-capacity overflows are
+refused on host paths / clamped-with-flag in compiled steps."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import Model
+from repro.serve import (Engine, Request, Scheduler, Server, ServeState,
+                         generate, poisson_arrivals, trace_arrivals)
+
+
+@pytest.fixture(scope="module")
+def served(rng):
+    """One shared engine (mimps, IVF engaged) for the whole module."""
+    cfg = reduced_config("qwen1.5-4b")
+    cfg = dataclasses.replace(
+        cfg, vocab=1024, partition=dataclasses.replace(
+            cfg.partition, method="mimps", block_rows=64, n_probe=4, l=64))
+    m = Model(cfg)
+    eng = Engine(m, m.init(jax.random.fold_in(rng, 42)), max_len=24)
+    return eng, cfg
+
+
+def _solo(eng, prompt, n, key, temperature=0.0):
+    toks = generate(eng, jnp.asarray(prompt)[None], n, key,
+                    temperature=temperature)
+    return [int(t) for t in np.asarray(toks)[0]]
+
+
+def _mixed_requests(cfg, rng):
+    """Different lengths, temperatures, keys — the heterogeneous traffic a
+    synchronous batch cannot serve without padding/recompiling."""
+    mk = lambda i, n: np.asarray(
+        jax.random.randint(jax.random.fold_in(rng, 100 + i), (n,), 0,
+                           cfg.vocab), np.int32)
+    return [
+        Request(prompt=mk(0, 3), max_new_tokens=5,
+                key=jax.random.fold_in(rng, 7), temperature=0.0),
+        Request(prompt=mk(1, 6), max_new_tokens=4,
+                key=jax.random.fold_in(rng, 8), temperature=0.9),
+        Request(prompt=mk(2, 4), max_new_tokens=6,
+                key=jax.random.fold_in(rng, 9), temperature=0.5),
+    ]
+
+
+class TestPerSlotSamplingParity:
+    def test_mixed_temps_and_keys_bit_identical_to_solo(self, served, rng):
+        """Satellite: two+ requests sharing the slot table with different
+        temperatures/keys == running each alone through generate()."""
+        eng, cfg = served
+        reqs = _mixed_requests(cfg, rng)
+        solo = [_solo(eng, r.prompt, r.max_new_tokens, r.key,
+                      r.temperature) for r in reqs]
+        server = Server(Scheduler(eng, n_slots=4, key=rng))
+        for r in reqs:
+            server.submit(r)
+        rep = server.run()
+        got = {c.request.req_id: c.tokens for c in rep.completions}
+        assert len(got) == len(reqs)
+        for r, want in zip(reqs, solo):
+            assert got[r.req_id] == want
+
+    def test_staggered_admission_does_not_perturb_in_flight(self, served,
+                                                            rng):
+        """Admitting mid-generation (chunked replay interleaved with live
+        decodes) must not change any stream's tokens: membership masks keep
+        each query's candidates its own, and sampling keys are per-slot."""
+        eng, cfg = served
+        reqs = _mixed_requests(cfg, rng)
+        solo = [_solo(eng, r.prompt, r.max_new_tokens, r.key,
+                      r.temperature) for r in reqs]
+        server = Server(Scheduler(eng, n_slots=4, key=rng))
+        rep = server.run(arrivals=trace_arrivals(reqs, [0, 2, 5]))
+        got = {c.request.req_id: c.tokens for c in rep.completions}
+        for r, want in zip(reqs, solo):
+            assert got[r.req_id] == want
+
+    def test_log_prob_finite_and_log_z_estimated(self, served, rng):
+        eng, cfg = served
+        reqs = _mixed_requests(cfg, rng)
+        server = Server(Scheduler(eng, n_slots=4, key=rng))
+        for r in reqs:
+            server.submit(r)
+        rep = server.run()
+        for c in rep.completions:
+            assert len(c.log_probs) == len(c.tokens) == len(c.log_zs)
+            assert np.all(np.isfinite(c.log_probs))
+            assert np.all(np.asarray(c.log_probs) <= 1e-4)  # log p <= 0
+
+
+class TestCompileStability:
+    def test_zero_recompiles_after_warmup(self, served, rng):
+        """ONE compiled mixed step + ONE compiled admit serve every
+        admission / replay / decode / recycle mix (acceptance criterion)."""
+        eng, cfg = served
+        sched = Scheduler(eng, n_slots=3, key=rng)
+        server = Server(sched)
+        # warmup: first step + first admission compile
+        server.submit(Request(prompt=[5, 7], max_new_tokens=2, key=1))
+        server.run()
+        assert sched.step_traces == 1
+        assert sched.admit_traces == 1
+        # mixed follow-on traffic: different lengths, temps, budgets, slots
+        reqs = _mixed_requests(cfg, rng) + [
+            Request(prompt=[3], max_new_tokens=7, key=2, temperature=2.0),
+            Request(prompt=list(range(8)), max_new_tokens=1, key=3),
+        ]
+        server2 = Server(sched)
+        rep = server2.run(arrivals=poisson_arrivals(reqs, rate=1.5, seed=1))
+        assert len(rep.completions) == len(reqs)
+        assert sched.step_traces == 1, "mixed step recompiled"
+        assert sched.admit_traces == 1, "admission recompiled"
+
+    def test_temperature_change_does_not_recompile_generate(self, served,
+                                                            rng):
+        """Sampling params are traced data: T=0 and T>0 share one scan."""
+        eng, cfg = served
+        eng._scan_runners = {}
+        prompt = jax.random.randint(rng, (1, 4), 0, cfg.vocab)
+        generate(eng, prompt, 3, rng, temperature=0.0)
+        generate(eng, prompt, 3, rng, temperature=0.8)
+        assert len(eng._scan_runners) == 1
+
+
+class TestSlotRecycling:
+    def test_more_requests_than_slots_all_complete(self, served, rng):
+        eng, cfg = served
+        n_req, n_slots = 7, 2
+        reqs = [Request(prompt=[(11 * i + 3) % cfg.vocab, i % cfg.vocab],
+                        max_new_tokens=2 + i % 3, key=50 + i,
+                        temperature=0.0 if i % 2 else 0.7)
+                for i in range(n_req)]
+        sched = Scheduler(eng, n_slots=n_slots, key=rng)
+        server = Server(sched)
+        for r in reqs:
+            server.submit(r)
+        rep = server.run()
+        assert len(rep.completions) == n_req
+        assert sched.n_free == n_slots          # every lane recycled
+        assert rep.occupancy_steady > 0.5       # the CI gate's invariant
+        assert rep.queue_wait_steps_mean > 0    # some requests queued
+
+    def test_streaming_callbacks_fire_in_order(self, served, rng):
+        eng, cfg = served
+        seen = []
+        done = []
+        req = Request(prompt=[1, 2, 3], max_new_tokens=4, key=5,
+                      on_token=lambda r, tok, t: seen.append(tok),
+                      on_complete=lambda r, comp: done.append(comp))
+        server = Server(Scheduler(eng, n_slots=2, key=rng))
+        server.submit(req)
+        server.run()
+        assert len(done) == 1
+        assert seen == done[0].tokens
+        assert len(seen) == 4
+
+
+class TestCapacityGuards:
+    def test_admit_rejects_request_past_cache_capacity(self, served, rng):
+        eng, cfg = served
+        sched = Scheduler(eng, n_slots=2, key=rng)
+        bad = Request(prompt=list(range(10)), max_new_tokens=eng.max_len,
+                      key=0)
+        with pytest.raises(ValueError, match="cache positions"):
+            sched.admit(bad)
+
+    def test_server_rejects_bad_request_without_killing_the_run(self,
+                                                                served, rng):
+        """One unadmittable request must not abandon the rest of the
+        workload: it resolves as an errored, token-less completion and
+        every other request still completes (with parity)."""
+        eng, cfg = served
+        good = Request(prompt=[4, 2], max_new_tokens=3, key=11)
+        bad = Request(prompt=list(range(10)), max_new_tokens=eng.max_len,
+                      key=12)
+        solo = _solo(eng, good.prompt, 3, good.key)
+        server = Server(Scheduler(eng, n_slots=2, key=rng))
+        server.submit(good)
+        server.submit(bad)
+        rep = server.run()
+        by_id = {c.request.req_id: c for c in rep.completions}
+        assert by_id[good.req_id].tokens == solo
+        assert by_id[good.req_id].error is None
+        assert by_id[bad.req_id].tokens == []
+        assert "cache positions" in by_id[bad.req_id].error
+
+    def test_generate_rejects_request_past_cache_capacity(self, served,
+                                                          rng):
+        eng, cfg = served
+        prompt = jnp.zeros((1, 10), jnp.int32)
+        for host_loop in (False, True):
+            with pytest.raises(ValueError, match="max_len"):
+                generate(eng, prompt, eng.max_len, rng, host_loop=host_loop)
+
+    def test_eager_decode_step_raises_past_max_len(self, served, rng):
+        """Host-path guard: a concrete position past capacity raises
+        instead of silently wrapping the KV ring."""
+        eng, cfg = served
+        state = ServeState(
+            cache=eng.model.init_decode_state(1, eng.max_len),
+            pos=jnp.asarray(eng.max_len, jnp.int32),
+            last_token=jnp.zeros((1,), jnp.int32))
+        with pytest.raises(ValueError, match="capacity"):
+            eng.decode_step(state, rng)
+
+    def test_compiled_decode_step_clamps_with_flag(self, served, rng):
+        """Inside jit the same condition cannot raise: the write clamps to
+        the last slot and the step reports ``overflow``."""
+        eng, cfg = served
+        step = jax.jit(lambda s, k: eng.decode_step(s, k)[0]["overflow"])
+        mk = lambda p: ServeState(
+            cache=eng.model.init_decode_state(1, eng.max_len),
+            pos=jnp.asarray(p, jnp.int32),
+            last_token=jnp.zeros((1,), jnp.int32))
+        assert bool(step(mk(eng.max_len), rng))
+        assert not bool(step(mk(eng.max_len - 1), rng))
+
+
+class TestPerSlotPositions:
+    def test_vector_pos_matches_per_lane_scalar_decode(self, served, rng):
+        """models.decode_step with a (B,) position vector == slicing each
+        lane out and decoding it alone at its scalar position."""
+        eng, cfg = served
+        model, params = eng.model, eng.params
+        toks = jnp.asarray([3, 9], jnp.int32)
+        pos = jnp.asarray([5, 0], jnp.int32)
+        state = model.init_decode_state(2, eng.max_len)
+        h_vec, _ = model.decode_step(params, state, toks, pos)
+        for lane in range(2):
+            lane_state = jax.tree.map(
+                lambda t: jax.lax.dynamic_slice_in_dim(t, lane, 1, axis=1),
+                state)
+            h_solo, _ = model.decode_step(params, lane_state,
+                                          toks[lane:lane + 1],
+                                          jnp.asarray(pos[lane]))
+            np.testing.assert_allclose(np.asarray(h_vec[lane]),
+                                       np.asarray(h_solo[0]),
+                                       rtol=2e-2, atol=2e-2)
+
+    def test_audio_head_not_slot_servable(self, rng):
+        cfg = reduced_config("musicgen-medium")
+        m = Model(cfg)
+        eng = Engine(m, m.init(rng), max_len=16)
+        with pytest.raises(NotImplementedError, match="generate"):
+            Scheduler(eng, n_slots=2)

@@ -174,7 +174,7 @@ class TestHeadCapTrim:
 
 
 class TestRegressionGate:
-    def _write(self, tmp_path, dec_mimps_us=1000.0, est=None):
+    def _write(self, tmp_path, dec_mimps_us=1000.0, est=None, srv=None):
         est = est or {}
         dec = {"exact": {"us_per_step": 2000.0, "tokens_per_s": 16000.0},
                "mimps": {"us_per_step": dec_mimps_us,
@@ -191,6 +191,14 @@ class TestRegressionGate:
              dec["mimps"]["us_per_step"]}))
         (tmp_path / "BENCH_estimators.json").write_text(json.dumps(
             {"methods": methods}))
+        serving = {"goodput_tok_s": 600.0,
+                   "sequential_goodput_tok_s": 150.0,
+                   "speedup_vs_sequential": 4.0,
+                   "p50_token_ms": 5.0, "p95_token_ms": 30.0,
+                   "occupancy_steady": 0.9, "peak_concurrency": 8,
+                   "token_parity_vs_solo": True,
+                   "recompiles_after_warmup": 0, **(srv or {})}
+        (tmp_path / "BENCH_serving.json").write_text(json.dumps(serving))
 
     def _check(self, tmp_path, monkeypatch):
         import benchmarks.run as run
@@ -224,3 +232,23 @@ class TestRegressionGate:
         # mince blowing past 1.5x mimps fails the acceptance invariant
         self._write(tmp_path, est={"mince": 2500.0})
         assert self._check(tmp_path, monkeypatch) >= 1
+
+    def test_fails_on_broken_serving_invariants(self, tmp_path,
+                                                monkeypatch):
+        """The PR-4 gate: losing to sequential generate(), starving the
+        slot table, breaking batched-vs-solo parity, or recompiling after
+        warmup each fail --check on their own."""
+        import benchmarks.run as run
+        self._write(tmp_path)
+        monkeypatch.chdir(tmp_path)
+        monkeypatch.setattr(run, "BASELINE_PATH",
+                            str(tmp_path / "baseline.json"))
+        run.update_baseline()
+        assert self._check(tmp_path, monkeypatch) == 0
+        for bad in ({"speedup_vs_sequential": 0.8},
+                    {"occupancy_steady": 0.3},
+                    {"peak_concurrency": 4},
+                    {"token_parity_vs_solo": False},
+                    {"recompiles_after_warmup": 2}):
+            self._write(tmp_path, srv=bad)
+            assert self._check(tmp_path, monkeypatch) >= 1, bad
