@@ -8,13 +8,17 @@ Regression gate (CI):
   PYTHONPATH=src python -m benchmarks.run --check
 
 compares the freshly-written BENCH_decode.json / BENCH_estimators.json /
-BENCH_serving.json against the committed ``benchmarks/baseline.json`` and
-fails on a >25% wall-clock regression (us_per_step up or tokens_per_s down)
-for any tracked method, AND enforces the wall-clock acceptance invariants:
-speedup_xla > 1, mimps faster than exact, mince within 1.5x of mimps (PR 3);
-continuous batching beats sequential generate() on goodput, steady-state
-slot occupancy > 0.5, batched-vs-solo token parity, zero recompiles after
-warmup (PR 4). Refresh the baseline after a *deliberate* perf change with:
+BENCH_serving.json / BENCH_train.json against the committed
+``benchmarks/baseline.json`` and fails on a >25% wall-clock regression
+(us_per_step up or tokens_per_s down) for any tracked method, AND enforces
+the acceptance invariants: speedup_xla > 1, mimps faster than exact, mince
+within 1.5x of mimps (PR 3); continuous batching beats sequential
+generate() on goodput, steady-state slot occupancy > 0.5, batched-vs-solo
+token parity, zero recompiles after warmup (PR 4); estimator-backed
+training writes < 0.35x the embedding-grad floats of fused_ce with grad
+cosine >= 0.99, final loss within 5%, and zero recompiles across index
+refreshes (PR 5). Refresh the baseline after a *deliberate* perf change
+with:
 
   PYTHONPATH=src python -m benchmarks.run --update-baseline
 """
@@ -53,10 +57,11 @@ def _load(path):
 
 
 def _snapshot():
-    """The tracked perf surface of the three serving artifacts."""
+    """The tracked perf surface of the four serving/training artifacts."""
     dec = _load("BENCH_decode.json")
     est = _load("BENCH_estimators.json")
     srv = _load("BENCH_serving.json")
+    trn = _load("BENCH_train.json")
     snap = {"decode": {m: {"us_per_step": dec[m]["us_per_step"],
                            "tokens_per_s": dec[m]["tokens_per_s"]}
                        for m in ("exact", "mimps")},
@@ -65,12 +70,15 @@ def _snapshot():
                                "tokens_per_s": r["tokens_per_s"]}
                            for m, r in est["methods"].items()},
             "serving": {"goodput_tok_s": srv["goodput_tok_s"],
-                        "p95_token_ms": srv["p95_token_ms"]}}
-    return snap, dec, est, srv
+                        "p95_token_ms": srv["p95_token_ms"]},
+            "train": {m: {"tokens_per_s": r["tokens_per_s"],
+                          "us_per_step": r["us_per_step"]}
+                      for m, r in trn["methods"].items()}}
+    return snap, dec, est, srv, trn
 
 
 def update_baseline() -> None:
-    snap, _, _, _ = _snapshot()
+    snap, *_ = _snapshot()
     snap["host"] = _machine()
     with open(BASELINE_PATH, "w") as f:
         json.dump(snap, f, indent=2)
@@ -80,7 +88,7 @@ def update_baseline() -> None:
 def check() -> int:
     """Compare fresh artifacts against the committed baseline. Returns the
     number of failures (0 = green)."""
-    snap, dec, est, srv = _snapshot()
+    snap, dec, est, srv, trn = _snapshot()
     base = _load(BASELINE_PATH)
     failures = []
     same_host = base.get("host") == _machine()
@@ -109,6 +117,7 @@ def check() -> int:
         cmp_section("decode", snap["decode"], base.get("decode", {}))
         cmp_section("estimators", snap["estimators"],
                     base.get("estimators", {}))
+        cmp_section("train", snap["train"], base.get("train", {}))
         ref_srv = base.get("serving")
         if ref_srv:
             # goodput only: p95 is stored for trend-watching but is a
@@ -140,6 +149,34 @@ def check() -> int:
             failures.append(
                 f"estimators: {m} rel_err {em[m]['rel_err_vs_exact']:.3g} "
                 f">= {cap} (accuracy regression)")
+
+    # training acceptance invariants (exact ratios, PR 5): the estimator in
+    # the gradient must write sublinear embedding-grad floats, match the
+    # full-CE gradient direction, learn what fused_ce learns, and refresh
+    # the index without a single recompile.
+    tm = trn["methods"]["mimps_ce"]
+    if trn["grad_float_ratio"] >= 0.35:
+        failures.append(
+            f"train: embedding-grad float ratio "
+            f"{trn['grad_float_ratio']:.3f} >= 0.35 vs fused_ce — the "
+            f"sparse backward is not sublinear at bench scale")
+    if tm["grad_cosine_vs_full"] < 0.99:
+        failures.append(
+            f"train: mimps_ce grad cosine {tm['grad_cosine_vs_full']:.4f} "
+            f"< 0.99 vs full-CE embedding gradient")
+    if not (0.95 <= trn["loss_ratio_vs_fused"] <= 1.05):
+        failures.append(
+            f"train: mimps_ce final loss is {trn['loss_ratio_vs_fused']:.3f}"
+            f"x fused_ce (must be within 5% after the step budget)")
+    rf = tm["refresh"]
+    if rf["step_retraces"] != 1 or rf["refresh_retraces"] != 1:
+        failures.append(
+            f"train: {rf['step_retraces'] - 1} step + "
+            f"{rf['refresh_retraces'] - 1} refresh recompiles across index "
+            f"refreshes (the static-capacity repack must reuse one "
+            f"executable)")
+    if rf["count"] < 1:
+        failures.append("train: the bench never exercised an index refresh")
 
     # serving acceptance invariants (machine-relative / exact, PR 4):
     # continuous batching must beat sequential generate() on goodput at
@@ -183,6 +220,10 @@ def check() -> int:
               f"({srv['speedup_vs_sequential']:.2f}x sequential), "
               f"occupancy {srv['occupancy_steady']:.2f}, p95 "
               f"{srv['p95_token_ms']:.2f}ms")
+        print(f"  train: grad floats {trn['grad_float_ratio']:.3f}x fused, "
+              f"grad cosine {tm['grad_cosine_vs_full']:.4f}, loss "
+              f"{trn['loss_ratio_vs_fused']:.3f}x, refreshes "
+              f"{tm['refresh']['count']} (0 recompiles)")
     return len(failures)
 
 
@@ -192,7 +233,7 @@ def main() -> None:
                     help="paper-scale sizes (slower)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,t1,t2,t3,t4,kernels,roofline,"
-                         "decode,estimators,serving")
+                         "decode,estimators,serving,train")
     ap.add_argument("--check", action="store_true",
                     help="compare BENCH_*.json against benchmarks/"
                          "baseline.json; exit 1 on >25%% regression or "
@@ -211,7 +252,7 @@ def main() -> None:
 
     from . import (decode_bench, estimator_bench, fig1_cdf, kernels_bench,
                    roofline, serving_bench, table1_grid, table2_noise,
-                   table3_retrieval, table4_lbl)
+                   table3_retrieval, table4_lbl, train_bench)
 
     csv = ["name,us_per_call,derived"]
 
@@ -258,6 +299,15 @@ def main() -> None:
                    f"occupancy={rep['occupancy_steady']:.2f};"
                    f"parity={rep['token_parity_vs_solo']};"
                    f"recompiles={rep['recompiles_after_warmup']}")
+    if sel("train"):
+        rep, us = train_bench.run(quick=quick)
+        tm = rep["methods"]["mimps_ce"]
+        csv.append(f"train,{us:.1f},"
+                   f"grad_floats={rep['grad_float_ratio']:.3f}x;"
+                   f"grad_cos={tm['grad_cosine_vs_full']:.4f};"
+                   f"loss_ratio={rep['loss_ratio_vs_fused']:.3f};"
+                   f"refresh_recompiles="
+                   f"{tm['refresh']['refresh_retraces'] - 1}")
 
     print("\n== CSV ==")
     print("\n".join(csv))

@@ -1,0 +1,270 @@
+"""Training-path benchmark: estimator-backed CE vs the fused full-vocab CE,
+tracked in ``BENCH_train.json`` from PR 5 onward.
+
+Trains the SAME reduced model from the SAME init on the synthetic corpus
+twice — once with ``fused_ce`` (streaming full-vocab softmax) and once with
+``mimps_ce`` (Eq. 5 estimator in the gradient, device-resident IVF index
+refreshed every K steps) — and records the two claims the PR-5 acceptance
+gates (``benchmarks/run.py --check``):
+
+  * **Sublinear embedding-grad floats.** ``mimps_ce``'s backward scatter-
+    adds into the scored head/tail/label rows only. ``grad_scored_ratio``
+    is the static ceiling (min(T*n_probe, nb)*br + l + T) / V — every row
+    the backward can possibly touch, counted against the full V rows
+    ``fused_ce`` writes; ``grad_unique_ratio`` is the measured unique-row
+    fraction on a real batch. Gate: scored ratio < 0.35.
+
+  * **Zero recompiles across refreshes.** Both the train step and the
+    refresh are shape-static (``mips.pack_ivf`` fixed capacity): after
+    warmup, N refreshes retrace NOTHING. The churn/drift trajectory is
+    recorded so an index that silently stops adapting shows up in review.
+
+  * **Gradient fidelity.** cosine(full-CE embedding grad, mimps_ce grad)
+    on the touched rows >= 0.99 at quick scale, and the final loss within
+    5% of ``fused_ce`` after the step budget — estimating Z in the
+    gradient must not change what the model learns. The loss comparison
+    uses an EXACT full-vocab CE on held-out batches (the per-step metric
+    mimps_ce reports is itself an estimate; gating on it would conflate
+    estimator noise with learning). The 5% parity is a quick-scale gate:
+    at ``--full`` scale (64k vocab, 60 steps) sparse negatives push the
+    partition down more slowly early in training, so parity needs a larger
+    step budget than a CI bench affords — the full artifact records the
+    gap rather than gating it.
+
+Wall-clock (tokens/s) is recorded for trend-tracking; on this CPU container
+the fused scan and the sparse gather have very different XLA lowerings, so
+the byte/float ratios — which are exact — carry the acceptance, like the
+decode bench's byte accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.configs.base import TrainConfig
+from repro.core import ivf_capacity_blocks
+from repro.core.decode import make_plan
+from repro.data import DataIterator, SyntheticCorpus
+from repro.models import Model
+from repro.train import init_train_state, make_train_step
+from repro.train.losses import _flatten_head, estimator_ce
+
+
+def _cfg(quick: bool):
+    # sized so the scored-support ceiling (min(T*n_probe, nb)*br + l + T)/V
+    # stays < 0.35 at the bench's OWN token batch in both modes — the gate
+    # this artifact must satisfy (quick: 0.267 at T=32; full: 0.267 at
+    # T=64 with twice the vocab and tail)
+    vocab, br, n_probe, l = (32768, 64, 4, 512) if quick else \
+        (65536, 64, 4, 1024)
+    cfg = reduced_config("qwen1.5-4b")
+    return dataclasses.replace(
+        cfg, vocab=vocab,
+        partition=dataclasses.replace(
+            cfg.partition, block_rows=br, n_probe=n_probe, l=l,
+            n_clusters=0))          # 0 -> derived V/(4*br)
+
+
+def _counted(fn):
+    """jit wrapper whose python body counts (re)traces."""
+    count = {"n": 0}
+
+    def inner(*args):
+        count["n"] += 1
+        return fn(*args)
+
+    return jax.jit(inner), count
+
+
+def _train_run(cfg, loss, steps, batch, seq, refresh_every=0, seed=0):
+    model = Model(cfg)
+    tc = TrainConfig(lr=1e-3, loss=loss, total_steps=steps, seed=seed,
+                     warmup_steps=max(1, steps // 10))
+    state = init_train_state(model, tc, jax.random.PRNGKey(seed))
+    step_fn, step_traces = _counted(make_train_step(model, tc))
+    refresh_fn = None
+    churn, drift = [], []
+    refresh_traces = {"n": 0}
+    if refresh_every:
+        # same body make_index_refresh jits, wrapped so retraces are counted
+        from repro.core import refresh_ivf
+        from repro.train.train_loop import _resolve_n_clusters
+        n_clusters = _resolve_n_clusters(cfg)
+
+        def refresh_body(index, params):
+            return refresh_ivf(index, model.head_matrix(params),
+                               n_clusters=n_clusters)
+
+        _refresh_jit, refresh_traces = _counted(refresh_body)
+
+        def refresh_fn(state):
+            new_index, m = _refresh_jit(state.index, state.params)
+            return state._replace(index=new_index), m
+
+    it = DataIterator(SyntheticCorpus(vocab=cfg.vocab, seed=seed),
+                      batch, seq)
+    losses, t_measure = [], None
+    warm = 2
+    for i in range(steps):
+        toks, labels = next(it)
+        b = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+        if refresh_fn is not None and i and i % refresh_every == 0:
+            state, rm = refresh_fn(state)
+            jax.block_until_ready(rm["churn"])
+            churn.append(float(rm["churn"]))
+            drift.append(float(rm["drift"]))
+        if i == warm:
+            t_measure = time.perf_counter()
+        state, met = step_fn(state, b)
+        jax.block_until_ready(met["loss_total"])
+        losses.append(float(met["loss_total"]))
+    elapsed = time.perf_counter() - t_measure
+    tokens = batch * seq * (steps - warm)
+    return {
+        "model": model, "tc": tc, "state": state, "losses": losses,
+        "final_loss": float(np.mean(losses[-5:])),
+        "tokens_per_s": tokens / elapsed,
+        "us_per_step": 1e6 * elapsed / (steps - warm),
+        "churn": churn, "drift": drift,
+        "step_retraces": step_traces["n"],
+        "refresh_retraces": refresh_traces["n"],
+    }
+
+
+def _exact_eval_loss(cfg, run, n_batches=4, seed=99):
+    """Full-vocab CE of a trained run on held-out synthetic batches — the
+    estimator-free yardstick both methods are compared on."""
+    model, state = run["model"], run["state"]
+    it = DataIterator(SyntheticCorpus(vocab=cfg.vocab, seed=seed), 4, 8)
+    tot = []
+    for _ in range(n_batches):
+        toks, labels = next(it)
+        hidden, _ = model.forward(state.params, jnp.asarray(toks))
+        h2, w, lab = _flatten_head(model, state.params, hidden,
+                                   jnp.asarray(labels))
+        logits = (h2 @ w.T).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, -1)
+        s = jnp.take_along_axis(logits, lab[:, None], -1)[:, 0]
+        tot.append(float((lse - s).mean()))
+    return float(np.mean(tot))
+
+
+def _grad_fidelity(cfg, batch, seq, seed=0):
+    """cosine(full-CE dw, mimps_ce dw) on touched rows + measured unique-row
+    ratio, on a real (model-forward) batch at the shared init — SAME
+    (batch, seq) as the timed runs, so the reported ratios describe the
+    benchmarked step."""
+    model = Model(cfg)
+    tc = TrainConfig(lr=1e-3, loss="mimps_ce", seed=seed)
+    state = init_train_state(model, tc, jax.random.PRNGKey(seed))
+    index = state.index
+    it = DataIterator(SyntheticCorpus(vocab=cfg.vocab, seed=seed), batch,
+                      seq)
+    toks, labels = next(it)
+    hidden, _ = model.forward(state.params, jnp.asarray(toks))
+    h2, w, lab = _flatten_head(model, state.params, hidden,
+                               jnp.asarray(labels))
+    key = jax.random.PRNGKey(seed + 7)
+    pc = cfg.partition
+
+    def full(h, w):
+        logits = (h @ w.T).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, -1)
+        s = jnp.take_along_axis(logits, lab[:, None], -1)[:, 0]
+        return (lse - s).mean()
+
+    def est(h, w):
+        nll, _, _ = estimator_ce(index, h, w, lab, key,
+                                 n_probe=pc.n_probe, l=pc.l)
+        return nll.mean()
+
+    gw0 = np.asarray(jax.grad(full, argnums=1)(h2, w))
+    gw1 = np.asarray(jax.grad(est, argnums=1)(h2, w))
+    touched = np.abs(gw1).sum(-1) > 0
+    a, b = gw0[touched].ravel(), gw1[touched].ravel()
+    cos = float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b)))
+
+    plan = make_plan(index, h2, key, pc.n_probe, pc.l)
+    t = h2.shape[0]
+    br = index.v_blocks.shape[1]
+    u = int(plan.head_live)
+    v = w.shape[0]
+    unique_ratio = (u * br + pc.l + t) / v
+    scored_blocks = min(t * pc.n_probe, index.n_blocks)
+    scored_ratio = (scored_blocks * br + pc.l + t) / v
+    return {"grad_cosine_vs_full": cos,
+            "grad_unique_ratio": float(unique_ratio),
+            "grad_scored_ratio": float(scored_ratio),
+            "rows_touched": int(touched.sum()), "vocab": v,
+            "head_live_blocks": u}
+
+
+def run(quick=True, out_path="BENCH_train.json"):
+    cfg = _cfg(quick)
+    steps, batch, seq = (30, 4, 8) if quick else (60, 8, 8)
+    refresh_every = 8 if quick else 16
+    t0 = time.perf_counter()
+
+    fused = _train_run(cfg, "fused_ce", steps, batch, seq)
+    mimps = _train_run(cfg, "mimps_ce", steps, batch, seq,
+                       refresh_every=refresh_every)
+    fidelity = _grad_fidelity(cfg, batch, seq)
+
+    eval_fused = _exact_eval_loss(cfg, fused)
+    eval_mimps = _exact_eval_loss(cfg, mimps)
+    loss_ratio = eval_mimps / eval_fused
+    pc = cfg.partition
+    report = {
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "block_rows": pc.block_rows, "n_probe": pc.n_probe, "l": pc.l,
+            "n_blocks": ivf_capacity_blocks(
+                cfg.vocab, pc.block_rows,
+                max(1, cfg.vocab // (4 * pc.block_rows))),
+            "steps": steps, "tokens_per_step": batch * seq,
+            "refresh_every": refresh_every,
+        },
+        "methods": {
+            "fused_ce": {**{k: fused[k] for k in
+                            ("tokens_per_s", "us_per_step", "final_loss")},
+                         "exact_eval_loss": eval_fused},
+            "mimps_ce": {
+                **{k: mimps[k] for k in
+                   ("tokens_per_s", "us_per_step", "final_loss")},
+                "exact_eval_loss": eval_mimps,
+                **fidelity,
+                "refresh": {
+                    "churn": mimps["churn"], "drift": mimps["drift"],
+                    "count": len(mimps["churn"]),
+                    "step_retraces": mimps["step_retraces"],
+                    "refresh_retraces": mimps["refresh_retraces"]},
+            },
+        },
+        "loss_ratio_vs_fused": loss_ratio,
+        "grad_float_ratio": fidelity["grad_scored_ratio"],
+        "zero_refresh_recompiles":
+            mimps["step_retraces"] == 1 and mimps["refresh_retraces"] == 1,
+        "loss_curves": {"fused_ce": fused["losses"],
+                        "mimps_ce": mimps["losses"]},
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    us = 1e6 * (time.perf_counter() - t0)
+    print(f"train bench: grad_float_ratio "
+          f"{report['grad_float_ratio']:.3f} (unique "
+          f"{fidelity['grad_unique_ratio']:.3f}), grad_cosine "
+          f"{fidelity['grad_cosine_vs_full']:.4f}, loss ratio "
+          f"{loss_ratio:.3f}, refresh churn {mimps['churn']}, "
+          f"recompiles step={mimps['step_retraces'] - 1} "
+          f"refresh={mimps['refresh_retraces'] - 1}")
+    return report, us
+
+
+if __name__ == "__main__":
+    run()

@@ -198,8 +198,14 @@ class TrainConfig:
     beta2: float = 0.95
     grad_clip: float = 1.0
     microbatches: int = 1         # gradient accumulation
-    loss: str = "fused_ce"        # fused_ce | ce | nce | selfnorm | sampled
+    loss: str = "fused_ce"        # any key of train.losses.LOSSES (fused_ce,
+                                  # ce, nce, selfnorm, sampled, mimps_ce,
+                                  # mince_ce)
     nce_noise: int = 64
+    # estimator-backed losses: IVF index maintenance cadence (steps between
+    # recluster/repack refreshes, and Lloyd iterations per refresh)
+    index_refresh_every: int = 100
+    index_refresh_kmeans_iters: int = 1
     selfnorm_alpha: float = 0.1
     seed: int = 0
     checkpoint_every: int = 100

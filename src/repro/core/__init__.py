@@ -2,8 +2,9 @@
 from .backends import (BACKENDS, BackendState, EstimatorBackend, get_backend,
                        register_backend)
 from .decode import (DecodeOut, DecodePlan, exact_topk_decode, fmbe_decode,
-                     make_plan, mimps_decode, mince_decode, plan_heads,
-                     plan_tail, selfnorm_decode, union_head_scores)
+                     head_row_table, make_plan, mimps_decode, mince_decode,
+                     plan_heads, plan_tail, selfnorm_decode, tail_row_ids,
+                     union_head_scores)
 from .estimators import (exact_log_z, mimps_log_z, uniform_log_z,
                          nmimps_log_z, mince_log_z, fmbe_log_z, fmbe_z,
                          mimps_ivf, estimate_log_z, relative_error,
@@ -11,13 +12,14 @@ from .estimators import (exact_log_z, mimps_log_z, uniform_log_z,
 from .feature_maps import (FeatureMap, FMBEState, make_feature_map,
                            apply_feature_map, build_fmbe, build_fmbe_blocks,
                            fmbe_estimate_z, fmbe_tail_z, fmbe_z_batch)
-from .kmeans import kmeans
+from .kmeans import centroids_from_assign, kmeans, kmeans_step
 from .mince import (MinceStats, anchored_atoms, derivative_sums,
                     halley_step, mince_stats, nce_objective,
                     solve_from_stats, solve_log_z, solve_shared_atoms,
                     solver_convergence_trace, stats_derivative_sums)
-from .mips import (IVFIndex, build_ivf, probe, probe_batch, gather_scores,
-                   head_count, exact_top_k)
+from .mips import (IVFIndex, build_ivf, build_ivf_device, ivf_capacity_blocks,
+                   pack_ivf, probe, probe_batch, gather_scores, head_count,
+                   exact_top_k, refresh_ivf)
 from .partition_layer import PartitionLayer
 
 __all__ = [
@@ -35,6 +37,8 @@ __all__ = [
     "nce_objective", "solver_convergence_trace", "MinceStats",
     "anchored_atoms", "mince_stats", "solve_from_stats",
     "solve_shared_atoms", "stats_derivative_sums",
-    "IVFIndex", "build_ivf", "probe", "probe_batch", "gather_scores",
-    "head_count", "exact_top_k", "PartitionLayer",
+    "IVFIndex", "build_ivf", "build_ivf_device", "ivf_capacity_blocks",
+    "pack_ivf", "refresh_ivf", "probe", "probe_batch", "gather_scores",
+    "head_count", "exact_top_k", "PartitionLayer", "head_row_table",
+    "tail_row_ids", "kmeans_step", "centroids_from_assign",
 ]

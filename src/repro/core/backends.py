@@ -37,21 +37,31 @@ from .feature_maps import (FMBEState, build_fmbe, build_fmbe_blocks,
                            make_feature_map)
 
 
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class BackendState:
-    """Retrieval state built once per engine ("index build time")."""
+    """Retrieval state built once per engine ("index build time").
+
+    Registered as a pytree so it can be a traced ARGUMENT of compiled
+    serving steps (the slot scheduler) instead of a baked-in constant —
+    that is what lets ``Engine.swap_index`` hot-swap a freshly trained
+    checkpoint into a live server without invalidating any executable."""
     w: jax.Array
     index: Optional[_mips.IVFIndex] = None
     fmbe: Optional[FMBEState] = None
 
 
-def _build_index(cfg: PartitionConfig, w: jax.Array,
-                 key: jax.Array) -> Optional[_mips.IVFIndex]:
+def _build_index(cfg: PartitionConfig, w: jax.Array, key: jax.Array,
+                 device: bool = False) -> Optional[_mips.IVFIndex]:
     """Block-IVF over the output embedding; skipped for tiny vocabularies
-    (the exact pass is already cheaper than a probe there)."""
+    (the exact pass is already cheaper than a probe there). ``device=True``
+    uses the jittable fixed-capacity build (``mips.build_ivf_device``) whose
+    shapes depend only on (V, block_rows, n_clusters) — the prerequisite
+    for rebuilding the index under a live server without recompiling."""
     if w.shape[0] >= 4 * cfg.block_rows:
-        return _mips.build_ivf(key, w, block_rows=cfg.block_rows,
-                               n_clusters=cfg.n_clusters)
+        build = _mips.build_ivf_device if device else _mips.build_ivf
+        return build(key, w, block_rows=cfg.block_rows,
+                     n_clusters=cfg.n_clusters)
     return None
 
 
@@ -60,11 +70,27 @@ class EstimatorBackend:
     sublinear: bool = False       # True -> decode cost independent of V*d
 
     def build(self, cfg: PartitionConfig, w: jax.Array, key: jax.Array,
-              *, with_index: bool = True) -> BackendState:
+              *, with_index: bool = True,
+              device: bool = False) -> BackendState:
         """with_index=False skips the kmeans IVF build for callers that only
         need the estimate (the per-query accuracy studies); serving always
-        builds it — it supplies the sampling candidates."""
+        builds it — it supplies the sampling candidates. ``device=True``
+        selects the fixed-capacity jittable index build (shape-stable
+        across rebuilds — required for ``Engine.swap_index``)."""
         return BackendState(w=w)
+
+    def refresh(self, state: BackendState, cfg: PartitionConfig,
+                w: jax.Array, key: jax.Array, *,
+                device: bool = True) -> BackendState:
+        """Rebuild the retrieval state from a NEW embedding — the
+        ``Engine.swap_index`` entry point. With ``device=True`` (the
+        fixed-capacity index build) the result has an IDENTICAL pytree
+        structure/shapes to a same-config ``build``, so compiled steps
+        that take the state as an argument keep their executables; that is
+        the hot-swap contract. ``device`` mirrors how the engine was
+        built."""
+        del state
+        return self.build(cfg, w, key, device=device)
 
     def decode(self, state: BackendState, h: jax.Array, key: jax.Array,
                cfg: PartitionConfig, *, k: int = 1,
@@ -166,9 +192,10 @@ class MimpsBackend(EstimatorBackend):
     method = "mimps"
     sublinear = True
 
-    def build(self, cfg, w, key, *, with_index=True):
+    def build(self, cfg, w, key, *, with_index=True, device=False):
         return BackendState(
-            w=w, index=_build_index(cfg, w, key) if with_index else None)
+            w=w, index=_build_index(cfg, w, key, device=device)
+            if with_index else None)
 
     def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
                active=None, **kernel_cfg):
@@ -203,9 +230,10 @@ class MinceBackend(EstimatorBackend):
     method = "mince"
     sublinear = True
 
-    def build(self, cfg, w, key, *, with_index=True):
+    def build(self, cfg, w, key, *, with_index=True, device=False):
         return BackendState(
-            w=w, index=_build_index(cfg, w, key) if with_index else None)
+            w=w, index=_build_index(cfg, w, key, device=device)
+            if with_index else None)
 
     def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
                active=None, **kernel_cfg):
@@ -235,11 +263,12 @@ class FmbeBackend(EstimatorBackend):
     method = "fmbe"
     sublinear = True
 
-    def build(self, cfg, w, key, *, with_index=True):
+    def build(self, cfg, w, key, *, with_index=True, device=False):
         kf, ki = jax.random.split(key)
         fm = make_feature_map(kf, w.shape[-1], cfg.fmbe_features,
                               max_degree=cfg.fmbe_max_degree, p=cfg.fmbe_p)
-        index = _build_index(cfg, w, ki) if with_index else None
+        index = _build_index(cfg, w, ki, device=device) \
+            if with_index else None
         if index is not None:
             # block-partitioned lambdas (the exact-head/sketch-tail hybrid);
             # lambda_tilde is their sum — one O(V P M d) phi pass, not two

@@ -152,6 +152,33 @@ def make_plan(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
                       n_accept=accept.sum(axis=-1))
 
 
+def head_row_table(index: _mips.IVFIndex, head_ids: jax.Array,
+                   member: jax.Array):
+    """Original-row view of a (possibly head_cap-trimmed) union slice:
+    (head_rows (U*br,) pad-clamped row ids, head_mask (Q, U*br) =
+    membership AND slot validity). The one place the pad-handling
+    invariant (clamp + rid>=0 masking) lives.
+
+    With ``tail_row_ids`` below, this is how the training losses score a
+    plan against a LIVE weight matrix: the (possibly stale) index supplies
+    routing only — probe centroids, block layout, tail map — and
+    ``w[head_rows]`` / ``w[tail_ids]`` replace its embedded copies, so the
+    gradient is exact at the current parameters; everything else (k_eff,
+    rejection masks) is layout-only and stays valid as ``w`` drifts
+    between refreshes."""
+    rid = index.row_id[head_ids]                           # (U, br), -1 pad
+    head_rows = jnp.maximum(rid, 0).reshape(-1)
+    head_mask = (member[:, :, None] & (rid >= 0)[None]
+                 ).reshape(member.shape[0], -1)
+    return head_rows, head_mask
+
+
+def tail_row_ids(index: _mips.IVFIndex, plan: DecodePlan) -> jax.Array:
+    """Original row id of every shared tail sample, (l,)."""
+    br = index.v_blocks.shape[1]
+    return index.row_id.reshape(-1)[plan.tail_blocks * br + plan.tail_rows]
+
+
 def _resolve_head_cap(head_cap: int, n_probe: int, capacity: int) -> int:
     """0 = auto: the probe width plus headroom for partial overlap (dedup on
     a shared-context batch drives U -> n_probe; the fallback trace covers

@@ -1,8 +1,18 @@
 """Jittable Lloyd's k-means — substrate for the TPU-native IVF MIPS index.
 
 Euclidean k-means over the (unnormalized) class-vector matrix, exactly the
-coarse quantizer geometry ScaNN-style retrieval uses. Empty clusters retain
-their previous centroid.
+coarse quantizer geometry ScaNN-style retrieval uses. The single Lloyd
+iteration is exposed as ``kmeans_step`` so the index-refresh path
+(``mips.refresh_ivf``) can reuse the exact same jitted update under
+embedding drift, and ``centroids_from_assign`` recovers cluster centroids
+from a stored assignment (the refresh warm start).
+
+Empty clusters are reseeded to the farthest-assigned points (the standard
+k-means repair move): under drift a centroid can lose every member, and
+silently retaining the stale centroid would leave a dead probe target that
+never wins a coarse-probe again while its old rows crowd other blocks.
+Reseeding keeps every cluster live with static shapes (top-k of the
+per-point distance to its own centroid).
 """
 from __future__ import annotations
 
@@ -20,6 +30,42 @@ def _assign(x: jax.Array, c: jax.Array) -> jax.Array:
     return jnp.argmin(d2, axis=-1).astype(jnp.int32)
 
 
+def centroids_from_assign(x: jax.Array, assign: jax.Array,
+                          n_clusters: int) -> Tuple[jax.Array, jax.Array]:
+    """(centroids (C, d) f32, counts (C,) f32) of an existing assignment.
+    Empty clusters get a zero centroid — callers that iterate go through
+    ``kmeans_step`` which repairs them."""
+    sums = jax.ops.segment_sum(x.astype(jnp.float32), assign,
+                               num_segments=n_clusters)
+    counts = jax.ops.segment_sum(jnp.ones(x.shape[:1], jnp.float32), assign,
+                                 num_segments=n_clusters)
+    return sums / jnp.maximum(counts, 1.0)[:, None], counts
+
+
+def kmeans_step(x: jax.Array, c: jax.Array) -> jax.Array:
+    """One Lloyd iteration with empty-cluster repair; c (C, d) -> (C, d).
+
+    Clusters that end the assignment empty are reseeded to the points
+    farthest from their currently-assigned centroid (distinct point per
+    empty cluster, taken from the global farthest-point ranking), instead of
+    silently retaining the stale centroid. A reseeded centroid sits exactly
+    on a data point, so the next assignment is guaranteed to repopulate it.
+    """
+    n_clusters = c.shape[0]
+    assign = _assign(x, c)
+    mean_c, counts = centroids_from_assign(x, assign, n_clusters)
+    # distance of every point to its own centroid — the repair candidates
+    xf = x.astype(jnp.float32)
+    d2 = jnp.sum(jnp.square(xf - c.astype(jnp.float32)[assign]), axis=-1)
+    _, far_idx = jax.lax.top_k(d2, n_clusters)        # C farthest points
+    empty = counts == 0
+    # empty cluster #j (in cluster order) takes the j-th farthest point
+    rank = jnp.clip(jnp.cumsum(empty.astype(jnp.int32)) - 1, 0,
+                    n_clusters - 1)
+    reseed = xf[far_idx[rank]]
+    return jnp.where(empty[:, None], reseed, mean_c)
+
+
 @partial(jax.jit, static_argnames=("n_clusters", "iters"))
 def kmeans(key: jax.Array, x: jax.Array, n_clusters: int,
            iters: int = 15) -> Tuple[jax.Array, jax.Array]:
@@ -29,13 +75,7 @@ def kmeans(key: jax.Array, x: jax.Array, n_clusters: int,
     c0 = x[init_idx].astype(jnp.float32)
 
     def step(c, _):
-        assign = _assign(x, c)
-        sums = jax.ops.segment_sum(x.astype(jnp.float32), assign,
-                                   num_segments=n_clusters)
-        counts = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), assign,
-                                     num_segments=n_clusters)
-        c_new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], c)
-        return c_new, None
+        return kmeans_step(x, c), None
 
     c, _ = jax.lax.scan(step, c0, None, length=iters)
     return c, _assign(x, c)

@@ -14,12 +14,12 @@ vs brute force O(N * d) — sublinear once n_blocks << N.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .kmeans import kmeans
+from .kmeans import _assign, centroids_from_assign, kmeans, kmeans_step
 
 
 class IVFIndex(NamedTuple):
@@ -31,6 +31,8 @@ class IVFIndex(NamedTuple):
     block_radius: jax.Array     # (n_blocks,) max ||v - centroid|| over block
     n: int                      # true N
     block_rows: int
+    assign: Optional[jax.Array] = None  # (N,) k-means cluster of each row —
+                                        # the refresh warm start (refresh_ivf)
 
     @property
     def n_blocks(self) -> int:
@@ -88,7 +90,127 @@ def build_ivf(key: jax.Array, v: jax.Array, block_rows: int = 512,
                     slot_of_row=jnp.asarray(slot_of_row),
                     block_centroids=jnp.asarray(block_centroids, v.dtype),
                     block_radius=jnp.asarray(block_radius, jnp.float32),
-                    n=n, block_rows=block_rows)
+                    n=n, block_rows=block_rows, assign=assign_j)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident index lifecycle (train-time: the index lives INSIDE the
+# compiled train state and is refreshed as the embedding drifts)
+# ---------------------------------------------------------------------------
+
+def ivf_capacity_blocks(n: int, block_rows: int, n_clusters: int) -> int:
+    """Static block capacity that fits ANY assignment of n rows into
+    n_clusters cluster-pure padded blocks: each cluster wastes < 1 block of
+    padding (empty clusters cost exactly one), so
+    ceil(n / block_rows) + n_clusters blocks always suffice. Fixing the
+    capacity to this bound is what makes repacking shape-static — refresh
+    after refresh reuses ONE compiled executable."""
+    return -(-n // block_rows) + n_clusters
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "block_rows"))
+def pack_ivf(v: jax.Array, assign: jax.Array, n_clusters: int,
+             block_rows: int) -> IVFIndex:
+    """Jittable segment-sort packing: (v, assignment) -> block-IVF index.
+
+    The device-side replacement for the host build's numpy packing loop.
+    Rows are stably sorted by cluster, each cluster's segment is placed at a
+    block-aligned offset (cumsum of per-cluster padded sizes), and the pad
+    slots are masked — one argsort + two scatters, no host round-trip. The
+    output always has ``ivf_capacity_blocks`` blocks regardless of the
+    assignment, so every repack of the same (N, block_rows, n_clusters)
+    triple has identical shapes. Blocks past the packed frontier (and the
+    one block an empty cluster reserves) are all-pad; ``probe``/
+    ``probe_batch`` rank dead blocks at -inf so they never spend a probe.
+    """
+    n, d = v.shape
+    br = block_rows
+    nb = ivf_capacity_blocks(n, br, n_clusters)
+    n_total = nb * br
+    ones = jnp.ones((n,), jnp.int32)
+    sizes = jax.ops.segment_sum(ones, assign, num_segments=n_clusters)
+    padded = jnp.maximum(br, -(-sizes // br) * br)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(padded)[:-1]])
+    cluster_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes)[:-1]])
+    order = jnp.argsort(assign, stable=True).astype(jnp.int32)
+    sorted_assign = assign[order]
+    rank = jnp.arange(n, dtype=jnp.int32) - cluster_start[sorted_assign]
+    slots = offsets[sorted_assign] + rank                    # (n,) unique
+    row_id_flat = jnp.full((n_total,), -1, jnp.int32).at[slots].set(order)
+    v_flat = jnp.zeros((n_total, d), v.dtype).at[slots].set(v[order])
+    slot_of_row = jnp.zeros((n,), jnp.int32).at[order].set(slots)
+
+    v_blocks = v_flat.reshape(nb, br, d)
+    valid = (row_id_flat >= 0).reshape(nb, br)
+    row_id = row_id_flat.reshape(nb, br)
+    counts = jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+    centroids = (v_blocks.astype(jnp.float32) * valid[..., None]
+                 ).sum(axis=1) / counts
+    dist = jnp.linalg.norm(v_blocks.astype(jnp.float32) -
+                           centroids[:, None, :], axis=-1)
+    radius = jnp.max(jnp.where(valid, dist, 0.0), axis=1)
+    return IVFIndex(v_blocks=v_blocks, valid=valid, row_id=row_id,
+                    slot_of_row=slot_of_row,
+                    block_centroids=centroids.astype(v.dtype),
+                    block_radius=radius.astype(jnp.float32),
+                    n=n, block_rows=br, assign=assign.astype(jnp.int32))
+
+
+def build_ivf_device(key: jax.Array, v: jax.Array, block_rows: int = 512,
+                     n_clusters: int = 0,
+                     kmeans_iters: int = 20) -> IVFIndex:
+    """Device-resident build: jitted k-means + ``pack_ivf``, no numpy.
+
+    Same coarse-quantizer geometry as ``build_ivf`` (identical k-means, so
+    identical cluster contents and packing order); the only difference is
+    the static block capacity — ``ivf_capacity_blocks`` headroom instead of
+    the host build's data-dependent total — which is what lets the index be
+    rebuilt/refreshed inside a compiled training loop with zero recompiles,
+    and hot-swapped into a serving engine whose executables were traced on
+    the same shapes (``serve.engine.Engine.swap_index``).
+    """
+    n = v.shape[0]
+    if n_clusters <= 0:
+        n_clusters = max(1, n // (4 * block_rows))
+    _, assign = kmeans(key, v, n_clusters=n_clusters, iters=kmeans_iters)
+    return pack_ivf(v, assign, n_clusters, block_rows)
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "kmeans_iters"))
+def refresh_ivf(index: IVFIndex, w: jax.Array, *, n_clusters: int,
+                kmeans_iters: int = 1):
+    """Incremental index maintenance under embedding drift: recompute the
+    cluster geometry from the CURRENT ``w``, reassign drifted rows, repack.
+
+    Warm-starts from the stored assignment (``index.assign``), runs
+    ``kmeans_iters`` of the jitted Lloyd step (``kmeans.kmeans_step`` — the
+    same update the build uses, including empty-cluster reseeding, which is
+    what keeps clusters live as rows migrate), reassigns every row to its
+    nearest refreshed centroid, and repacks with ``pack_ivf``. All shapes
+    are functions of (N, block_rows, n_clusters) only, so refresh-every-K-
+    steps reuses one executable — zero recompiles across refreshes.
+
+    Returns ``(new_index, metrics)`` with the maintenance observables:
+      churn  — fraction of rows whose cluster changed this refresh
+      drift  — mean ||w_row - stored_row|| / mean ||w_row|| staleness of the
+               index's embedded copies at call time (what the refresh fixed)
+    """
+    n, d = w.shape
+    assign_old = index.assign
+    c, _ = centroids_from_assign(w, assign_old, n_clusters)
+    for _ in range(kmeans_iters):
+        c = kmeans_step(w, c)
+    assign_new = _assign(w, c)
+    churn = jnp.mean((assign_new != assign_old).astype(jnp.float32))
+    stale = index.v_blocks.reshape(-1, d)[index.slot_of_row]
+    wf = w.astype(jnp.float32)
+    drift = jnp.mean(jnp.linalg.norm(wf - stale.astype(jnp.float32), axis=-1)
+                     ) / jnp.maximum(
+        jnp.mean(jnp.linalg.norm(wf, axis=-1)), 1e-9)
+    new_index = pack_ivf(w, assign_new, n_clusters, index.v_blocks.shape[1])
+    return new_index, {"churn": churn, "drift": drift}
 
 
 def probe(index: IVFIndex, q: jax.Array, n_probe: int,
@@ -105,6 +227,7 @@ def probe(index: IVFIndex, q: jax.Array, n_probe: int,
     if bound:
         c_scores = c_scores + index.block_radius * \
             jnp.linalg.norm(q.astype(jnp.float32))
+    c_scores = jnp.where(index.valid.any(-1), c_scores, -jnp.inf)
     _, ids = jax.lax.top_k(c_scores, n_probe)
     return ids.astype(jnp.int32)
 
@@ -122,6 +245,7 @@ def probe_batch(index: IVFIndex, q: jax.Array, n_probe: int,
     if bound:
         qn = jnp.linalg.norm(q.astype(jnp.float32), axis=-1, keepdims=True)
         c_scores = c_scores + index.block_radius[None, :] * qn
+    c_scores = jnp.where(index.valid.any(-1)[None, :], c_scores, -jnp.inf)
     _, ids = jax.lax.top_k(c_scores, n_probe)
     return ids.astype(jnp.int32)
 

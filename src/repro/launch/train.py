@@ -23,7 +23,8 @@ from ..configs.base import TrainConfig
 from ..data import DataIterator, SyntheticCorpus
 from ..models import Model
 from ..train import (CheckpointManager, StragglerWatchdog, init_train_state,
-                     make_elastic_mesh, make_train_step)
+                     make_elastic_mesh, make_index_refresh, make_train_step)
+from ..train.losses import ESTIMATOR_LOSSES, LOSSES
 
 
 def main():
@@ -34,11 +35,18 @@ def main():
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--loss", default="fused_ce")
+    # choices from the registry so a typo (or a loss added without wiring)
+    # fails at parse time — the same stale-list bug class launch/serve.py
+    # --method had before it read the backend registry
+    ap.add_argument("--loss", default="fused_ce", choices=sorted(LOSSES))
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--index-refresh-every", type=int, default=100,
+                    help="steps between IVF index refreshes (estimator-"
+                         "backed losses only; shapes are static so the "
+                         "refresh never recompiles; 0 disables refreshes)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -47,7 +55,8 @@ def main():
     model = Model(cfg)
     tc = TrainConfig(lr=args.lr, total_steps=args.steps, loss=args.loss,
                      microbatches=args.microbatches, seed=args.seed,
-                     warmup_steps=max(1, args.steps // 10))
+                     warmup_steps=max(1, args.steps // 10),
+                     index_refresh_every=args.index_refresh_every)
     mesh = make_elastic_mesh(model_parallel=args.model_parallel)
     print(f"mesh: {dict(mesh.shape)}  arch: {cfg.name}  "
           f"params: {cfg.param_count()/1e6:.1f}M")
@@ -69,6 +78,9 @@ def main():
             print(f"resumed from step {start_step}")
 
     step_fn = jax.jit(make_train_step(model, tc))
+    refresh_fn = make_index_refresh(model, tc) \
+        if tc.loss in ESTIMATOR_LOSSES and tc.index_refresh_every > 0 \
+        else None
     wd = StragglerWatchdog()
     with mesh:
         for step in range(start_step, args.steps):
@@ -80,14 +92,23 @@ def main():
                     (args.batch, cfg.n_image_tokens, cfg.d_model),
                     jnp.dtype(cfg.dtype))
             wd.start_step()
+            # cadence keyed on the GLOBAL step (not the resume offset) so a
+            # resumed run refreshes at exactly the same steps as an
+            # uninterrupted one — resume determinism includes the index
+            refreshed = ""
+            if refresh_fn is not None and step > 0 and \
+                    step % tc.index_refresh_every == 0:
+                state, rm = refresh_fn(state)
+                refreshed = (f" [refresh churn {float(rm['churn']):.3f}"
+                             f" drift {float(rm['drift']):.3f}]")
             state, metrics = step_fn(state, batch)
             jax.block_until_ready(metrics["loss_total"])
             slow = wd.end_step(step)
-            if step % 10 == 0 or step == args.steps - 1:
+            if step % 10 == 0 or step == args.steps - 1 or refreshed:
                 print(f"step {step:5d} loss {float(metrics['loss_total']):.4f} "
                       f"gnorm {float(metrics['grad_norm']):.3f} "
                       f"lr {float(metrics['lr']):.2e}"
-                      + (" [straggler]" if slow else ""))
+                      + (" [straggler]" if slow else "") + refreshed)
             if mgr and (step + 1) % args.ckpt_every == 0:
                 mgr.save(step + 1, state,
                          extra={"data_step": it.state.step})

@@ -45,14 +45,17 @@ class Engine:
 
     def __init__(self, model: Model, params, max_len: int,
                  key: Optional[jax.Array] = None, use_pallas: bool = False,
-                 autotune: bool = False, autotune_batch: int = 64):
+                 autotune: bool = False, autotune_batch: int = 64,
+                 device_index: bool = False):
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.max_len = max_len
         self.use_pallas = use_pallas
+        self.device_index = device_index
         pc = self.cfg.partition
         key = key if key is not None else jax.random.PRNGKey(0)
+        self._build_key = key
         # oracle-only study estimators have no batched serving path; they
         # serve exact Z rather than failing (documented fallthrough).
         method = pc.method if pc.method in BACKENDS else "exact"
@@ -62,7 +65,7 @@ class Engine:
             self.state = None
         else:
             self.state = self.backend.build(pc, model.head_matrix(params),
-                                            key)
+                                            key, device=device_index)
         self.index = self.state.index if self.state is not None else None
         # measured Pallas tile sizes, swept once at engine build on a
         # representative decode batch and cached on disk (kernels.autotune);
@@ -74,6 +77,52 @@ class Engine:
                 jax.random.fold_in(key, 0xA07),
                 (autotune_batch, self.cfg.d_model)).astype(self.cfg.dtype)
             self.kernel_cfg = self.backend.tune(self.state, pc, h_rep, key)
+
+    # -- train -> serve handoff ----------------------------------------------
+
+    def swap_index(self, params, key: Optional[jax.Array] = None) -> None:
+        """Hot-swap a freshly trained checkpoint into this live engine:
+        replace ``params`` and rebuild the retrieval state (IVF index /
+        FMBE sketch) from the new output embedding.
+
+        Zero-recompile contract: when the engine was constructed with
+        ``device_index=True``, the rebuilt state has bit-identical pytree
+        structure and shapes (``mips.build_ivf_device`` fixed capacity), so
+        compiled steps that take (params, backend state) as ARGUMENTS — the
+        slot-table scheduler's mixed step — keep serving from their existing
+        executables; the swap is one host pointer update plus the jitted
+        rebuild. ``generate()``'s cached scans bake params in as constants
+        and are dropped instead (they recompile lazily on next use — the
+        traffic path is the scheduler, not generate()).
+
+        ``key`` defaults to the engine's build key, so two engines built
+        and swapped with the same keys hold identical state (the parity
+        tests' oracle).
+        """
+        key = key if key is not None else self._build_key
+        if self.cfg.n_codebooks:
+            self.params = params
+            self._scan_runners = {}
+            return
+        w = self.model.head_matrix(params)
+        new_state = self.backend.refresh(self.state, self.cfg.partition, w,
+                                         key, device=self.device_index)
+        if self.state is not None and self.device_index:
+            old = jax.tree.map(lambda x: (x.shape, x.dtype)
+                               if hasattr(x, "shape") else x, self.state)
+            new = jax.tree.map(lambda x: (x.shape, x.dtype)
+                               if hasattr(x, "shape") else x, new_state)
+            if jax.tree_util.tree_structure(old) != \
+                    jax.tree_util.tree_structure(new) or \
+                    jax.tree.leaves(old) != jax.tree.leaves(new):
+                raise ValueError(
+                    "swap_index produced a retrieval state with different "
+                    "shapes — the new checkpoint's head does not match the "
+                    "engine's (vocab/d_model/partition config changed?)")
+        self.params = params
+        self.state = new_state
+        self.index = new_state.index if new_state is not None else None
+        self._scan_runners = {}
 
     # -- steps (jit-compiled by callers / launch scripts) ---------------------
 

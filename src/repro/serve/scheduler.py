@@ -183,9 +183,9 @@ class Scheduler:
 
     def _build_step(self):
         eng = self.engine
-        model, params = eng.model, eng.params
+        model = eng.model
         pc = eng.cfg.partition
-        backend, bstate = eng.backend, eng.state
+        backend = eng.backend
         kernel_cfg = dict(eng.kernel_cfg)
         use_pallas = eng.use_pallas
         max_len = eng.max_len
@@ -195,8 +195,12 @@ class Scheduler:
         # no donation support and would warn on every compile, so gate it)
         donate = (0,) if jax.default_backend() != "cpu" else ()
 
+        # params and the retrieval state are traced ARGUMENTS, not closure
+        # constants: Engine.swap_index can hand a freshly trained checkpoint
+        # to a live server and the very next step serves it from the same
+        # executable (shapes are identical under device_index=True)
         @partial(jax.jit, donate_argnums=donate)
-        def step(table: SlotTable):
+        def step(table: SlotTable, params, bstate):
             self.step_traces += 1   # python side effect: counts (re)traces
             # -- input token: next prompt token while replaying, else the
             #    lane's own previous sample
@@ -329,7 +333,8 @@ class Scheduler:
         (``on_complete`` + listed under ``"completions"``), occupancy and
         probe-dedup metrics for this step."""
         t0 = time.perf_counter()
-        self.table, out = self._step_fn(self.table)
+        self.table, out = self._step_fn(self.table, self.engine.params,
+                                        self.engine.state)
         out = jax.device_get(out)
         now = time.perf_counter()
         completions = []

@@ -1,5 +1,7 @@
-from .train_loop import TrainState, init_train_state, make_train_step
+from .train_loop import (TrainState, init_train_state, make_index_refresh,
+                         make_train_step)
 from .optimizer import init_opt_state, adamw_update, lr_schedule
 from .checkpoint import CheckpointManager
 from .elastic import make_elastic_mesh, best_mesh_shape, StragglerWatchdog
-from .losses import get_loss, streaming_ce, LOSSES
+from .losses import (get_loss, streaming_ce, estimator_ce, ESTIMATOR_LOSSES,
+                     LOSSES)

@@ -26,8 +26,10 @@ import numpy as np
 
 def _flatten(tree, prefix=""):
     out = {}
-    if isinstance(tree, dict):
-        for k, v in tree.items():
+    if tree is None:                                    # absent optional
+        return out                                      # state (e.g. the
+    if isinstance(tree, dict):                          # non-estimator
+        for k, v in tree.items():                       # TrainState.index)
             out.update(_flatten(v, f"{prefix}{k}/"))
     elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
         for i, v in enumerate(tree):
@@ -129,7 +131,15 @@ class CheckpointManager:
         vals = {}
         for k, ref in flat_like.items():
             arr = data[k.replace("/", "__")]
-            vals[k] = arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr
+            if hasattr(ref, "dtype"):
+                vals[k] = arr.astype(ref.dtype)
+            elif isinstance(ref, (bool, int, float)):
+                # static pytree scalars (e.g. IVFIndex.n / block_rows) come
+                # back as their python type so the restored state's treedef
+                # — and therefore every jit cache — matches `like` exactly
+                vals[k] = type(ref)(arr)
+            else:
+                vals[k] = arr
         restored = _unflatten_like(like, vals)
         if shardings is not None:
             restored = jax.tree.map(
@@ -138,6 +148,8 @@ class CheckpointManager:
 
 
 def _unflatten_like(like, vals, prefix=""):
+    if like is None:
+        return None
     if isinstance(like, dict):
         return {k: _unflatten_like(v, vals, f"{prefix}{k}/")
                 for k, v in like.items()}

@@ -1,4 +1,4 @@
-"""Training losses, all partition-aware (DESIGN.md SS2).
+"""Training losses, all partition-aware (DESIGN.md SS2, SS13).
 
  * fused_ce : streaming softmax CE. `backend='pallas'` uses the Pallas kernel
    (TPU); `backend='xla'` uses an equivalent custom-VJP lax.scan formulation
@@ -10,6 +10,19 @@
  * selfnorm  : full CE + alpha * log(Z)^2 penalty (Devlin et al.).
  * sampled   : importance-sampled softmax (uniform proposal — the paper's
    UNIFORM baseline used as a training objective).
+ * mimps_ce  : estimator-backed CE (Spring & Shrivastava 2017 applied to the
+   paper's Eq. 5): log Ẑ from the IVF probe-union head (scored EXACTLY
+   against the live ``w``) plus the Rao-Blackwellized uniform tail, and a
+   custom VJP whose backward scatter-adds embedding gradients ONLY into the
+   probed/tail/label rows — both the forward floats and the embedding-grad
+   floats are sublinear in V. Requires an ``IVFIndex`` threaded through
+   ``TrainState`` (train_loop) and refreshed as ``w`` drifts
+   (``mips.refresh_ivf``).
+ * mince_ce  : same sparse machinery with the log Ẑ taken as the anchored
+   MINCE root — which by the PR-3 collapse identity coincides exactly with
+   the Eq. 5 anchor, so the two losses share one implementation (the name
+   exists so ``--loss`` mirrors serving's ``--method``; Barber & Botev 2016
+   frame both as points on the same trade-off).
 """
 from __future__ import annotations
 
@@ -19,6 +32,9 @@ from typing import Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core.decode import (_with_trimmed_head, head_row_table, make_plan,
+                           tail_row_ids)
+from ..core.estimators import NEG_INF, combine_head_tail_lse
 from ..kernels.ops import fused_cross_entropy
 
 Array = jax.Array
@@ -117,6 +133,156 @@ def streaming_ce(h, w, labels, *, backend: str = "xla",
     if backend == "pallas":
         return fused_cross_entropy(h, w, labels)
     return _xla_fused_ce(h, w, labels, chunk)
+
+
+# ---------------------------------------------------------------------------
+# Sparse estimator-backed CE (custom VJP; DESIGN.md SS13)
+# ---------------------------------------------------------------------------
+
+def _float0(x):
+    import numpy as np
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+@jax.custom_vjp
+def _sparse_ce(h: Array, w: Array, labels: Array, head_rows: Array,
+               head_mask: Array, tail_ids: Array, tail_accept: Array,
+               n_tail_total: Array, label_in_head: Array
+               ) -> Tuple[Array, Array]:
+    """(nll, log Ẑ) per token from a sparse row table.
+
+    Forward: one (T, d) x (d, Hc + l) gather+matmul scores the probe-union
+    head rows EXACTLY and the shared tail rows, combined per Eq. 5
+    (Rao-Blackwellized (N - k_eff)/n_accept scale). When the label's block
+    was not probed, its exact score is added to Ẑ explicitly (the
+    sampled-softmax "target always in the support" guarantee: p̂ <= 1 and
+    the gradient never pushes through a Ẑ that is missing the label's own
+    mass); accidental label hits in the tail are pre-masked by the caller
+    so that mass is never double-counted.
+
+    Backward: d nll/d s_i = p̂_i over the same sparse support, so ``dw``
+    is three scatter-adds — head rows, tail rows, label rows — touching
+    (U*br + l + T) rows instead of V. That makes the embedding-GRADIENT
+    floats sublinear too, which is the whole point of estimator-backed
+    training (forward-only sublinearity leaves the V*d backward untouched).
+    """
+    nll, log_z, _ = _sparse_ce_impl(h, w, labels, head_rows, head_mask,
+                                    tail_ids, tail_accept, n_tail_total,
+                                    label_in_head)
+    return nll, log_z
+
+
+def _sparse_ce_impl(h, w, labels, head_rows, head_mask, tail_ids,
+                    tail_accept, n_tail_total, label_in_head):
+    scores = jax.lax.dot_general(
+        h, w[head_rows], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (T, Hc)
+    head_lse = jax.nn.logsumexp(jnp.where(head_mask, scores, NEG_INF), -1)
+    ts = jax.lax.dot_general(
+        h, w[tail_ids], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (T, l)
+    n_acc = tail_accept.sum(-1).astype(jnp.float32)
+    tail_lse = jax.nn.logsumexp(jnp.where(tail_accept, ts, NEG_INF), -1)
+    tail_lse = jnp.where(jnp.any(tail_accept, -1), tail_lse, -jnp.inf)
+    log_z0 = combine_head_tail_lse(head_lse, tail_lse, n_tail_total, n_acc)
+    s_lab = jnp.einsum("td,td->t", h.astype(jnp.float32),
+                       w[labels].astype(jnp.float32))
+    log_z = jnp.where(label_in_head, log_z0, jnp.logaddexp(log_z0, s_lab))
+    return log_z - s_lab, log_z, (scores, ts, s_lab, n_acc)
+
+
+def _sparse_ce_fwd(h, w, labels, head_rows, head_mask, tail_ids,
+                   tail_accept, n_tail_total, label_in_head):
+    nll, log_z, (scores, ts, s_lab, n_acc) = _sparse_ce_impl(
+        h, w, labels, head_rows, head_mask, tail_ids, tail_accept,
+        n_tail_total, label_in_head)
+    res = (h, w, labels, head_rows, head_mask, tail_ids, tail_accept,
+           n_tail_total, label_in_head, scores, ts, s_lab, n_acc, log_z)
+    return (nll, log_z), res
+
+
+def _sparse_ce_bwd(res, cts):
+    (h, w, labels, head_rows, head_mask, tail_ids, tail_accept,
+     n_tail_total, label_in_head, scores, ts, s_lab, n_acc, log_z) = res
+    g_nll, g_lz = cts
+    g1 = (g_nll + g_lz).astype(jnp.float32)                  # logẐ path
+    # p̂ over the sparse support (masked slots exp-underflow to exactly 0)
+    p = jnp.where(head_mask, jnp.exp(scores - log_z[:, None]), 0.0) \
+        * g1[:, None]                                        # (T, Hc)
+    ok = (n_tail_total > 0) & (n_acc > 0)
+    sigma = jnp.where(ok, n_tail_total / jnp.maximum(n_acc, 1.0), 0.0)
+    qc = jnp.where(tail_accept, jnp.exp(ts - log_z[:, None]), 0.0) \
+        * (sigma * g1)[:, None]                              # (T, l)
+    r = jnp.where(label_in_head, 0.0, jnp.exp(s_lab - log_z))
+    lab_coef = g1 * r - g_nll.astype(jnp.float32)            # (T,)
+    hf = h.astype(jnp.float32)
+    dh = (p @ w[head_rows].astype(jnp.float32)
+          + qc @ w[tail_ids].astype(jnp.float32)
+          + lab_coef[:, None] * w[labels].astype(jnp.float32))
+    # the sublinear scatter: (U*br + l + T) rows of w, not V
+    dw = jnp.zeros(w.shape, jnp.float32)
+    dw = dw.at[head_rows].add(p.T @ hf)
+    dw = dw.at[tail_ids].add(qc.T @ hf)
+    dw = dw.at[labels].add(lab_coef[:, None] * hf)
+    return (dh.astype(h.dtype), dw.astype(w.dtype), _float0(labels),
+            _float0(head_rows), _float0(head_mask), _float0(tail_ids),
+            _float0(tail_accept), jnp.zeros_like(n_tail_total),
+            _float0(label_in_head))
+
+
+_sparse_ce.defvjp(_sparse_ce_fwd, _sparse_ce_bwd)
+
+
+def estimator_ce(index, h: Array, w: Array, labels: Array, key: Array, *,
+                 n_probe: int, l: int, head_cap: int = 0
+                 ) -> Tuple[Array, Array, Dict[str, Array]]:
+    """Estimator-backed CE over a token batch: plan once, score sparsely.
+
+    The index supplies ROUTING only (probe centroids, block layout, tail
+    map); all scores come from the live ``w`` via ``head_row_table`` /
+    ``tail_row_ids``, so the loss is exact at the current parameters even
+    when the index is a few refreshes stale — staleness degrades retrieval
+    quality (which rows are in the head), never gradient correctness on
+    the retrieved support.
+    (This is also why the head matmul gathers ``w`` rows instead of running
+    the ``ivf_score`` kernel over ``index.v_blocks``: the kernel scores the
+    index's embedded COPIES, which are exactly what drifts between
+    refreshes. Serving — where w IS the indexed snapshot — keeps the
+    kernel path.)
+
+    ``head_cap`` (blocks) statically trims the scored union exactly like
+    the serving decodes: when the measured unique count fits, only
+    head_cap*br head rows are gathered/scored/scatter-added; a
+    ``lax.cond`` falls back to the full min(T*n_probe, nb) capacity so
+    overflow costs wall-clock, never correctness. 0 = no trim (training
+    batches don't share context, so the serving auto-cap would always
+    overflow — callers size T*n_probe*block_rows << V instead).
+
+    Returns (nll (T,), log Ẑ (T,), aux metrics).
+    """
+    plan = make_plan(index, h, key, n_probe, l)
+    br = index.v_blocks.shape[1]
+    lab_block = index.slot_of_row[labels] // br
+    label_in_head = jnp.any(plan.block_ids == lab_block[:, None], -1)
+    tail_ids = tail_row_ids(index, plan)
+    # a tail sample that IS the label is dropped: its mass enters Ẑ exactly
+    # (head or explicit term), so the tail must estimate the complement
+    accept = plan.tail_accept & (tail_ids[None, :] != labels[:, None])
+    n_tail_total = (index.n - plan.k_eff).astype(jnp.float32) \
+        - (~label_in_head).astype(jnp.float32)
+
+    def run(head_ids, member):
+        head_rows, head_mask = head_row_table(index, head_ids, member)
+        return _sparse_ce(h, w, labels, head_rows, head_mask, tail_ids,
+                          accept, n_tail_total, label_in_head)
+
+    capacity = plan.head_ids.shape[0]
+    nll, log_z = _with_trimmed_head(
+        plan, head_cap if head_cap > 0 else capacity, run)
+    aux = {"head_hit_rate": jnp.mean(label_in_head.astype(jnp.float32)),
+           "k_eff": jnp.mean(plan.k_eff.astype(jnp.float32)),
+           "head_live": plan.head_live}
+    return nll, log_z, aux
 
 
 # ---------------------------------------------------------------------------
@@ -243,13 +409,68 @@ def loss_sampled(model, params, batch, key, train_cfg) -> Tuple[Array, Dict]:
                                                 "mean_log_z": log_z.mean()}
 
 
+def _loss_estimator_ce(model, params, batch, key, train_cfg, *, index,
+                       constrain_fn=None) -> Tuple[Array, Dict]:
+    """Shared body of mimps_ce / mince_ce (see module docstring: by the
+    collapse identity the anchored MINCE root IS the Eq. 5 anchor, so the
+    two names share one estimate and one sparse VJP)."""
+    if index is None:
+        raise ValueError(
+            "estimator-backed losses need an IVF index threaded through "
+            "TrainState (init_train_state builds it; launch/train.py "
+            "refreshes it every --index-refresh-every steps)")
+    cfg = model.cfg
+    if cfg.n_codebooks:
+        raise NotImplementedError(
+            "estimator-backed CE serves single-stream heads; audio "
+            "codebook training uses the per-codebook exact losses")
+    pc = cfg.partition
+    tokens, labels = batch["tokens"], batch["labels"]
+    hidden, aux = model.forward(params, tokens, img=batch.get("img"))
+    h2, w, lab = _flatten_head(model, params, hidden, labels, constrain_fn)
+    nll, lse, est_aux = estimator_ce(index, h2, w, lab, key,
+                                     n_probe=pc.n_probe, l=pc.l,
+                                     head_cap=pc.head_cap)
+    loss = nll.mean()
+    metrics = {"loss": loss, "ppl_proxy": loss, "mean_log_z": lse.mean(),
+               **est_aux,
+               **{k: v for k, v in aux.items() if "moe" in k}}
+    total = loss + aux.get("moe_balance", 0.0) + aux.get("moe_zloss", 0.0)
+    return total, metrics
+
+
+def loss_mimps_ce(model, params, batch, key, train_cfg, *, index,
+                  constrain_fn=None) -> Tuple[Array, Dict]:
+    """Eq. 5-backed CE: exact probe-union head + Rao-Blackwellized uniform
+    tail, sparse embedding gradients (DESIGN.md SS13)."""
+    return _loss_estimator_ce(model, params, batch, key, train_cfg,
+                              index=index, constrain_fn=constrain_fn)
+
+
+def loss_mince_ce(model, params, batch, key, train_cfg, *, index,
+                  constrain_fn=None) -> Tuple[Array, Dict]:
+    """Anchored-MINCE CE. The anchored estimating equation's root coincides
+    with the Eq. 5 anchor (the PR-3 collapse identity, proved in
+    ``core.mince.anchored_solve``), so the estimate — and therefore the
+    gradient — is identical to ``mimps_ce``; registered separately so
+    ``--loss`` names mirror serving's ``--method`` registry."""
+    return _loss_estimator_ce(model, params, batch, key, train_cfg,
+                              index=index, constrain_fn=constrain_fn)
+
+
 LOSSES: Dict[str, Callable] = {
     "fused_ce": loss_fused_ce,
     "ce": loss_ce,
     "selfnorm": loss_selfnorm,
     "nce": loss_nce,
     "sampled": loss_sampled,
+    "mimps_ce": loss_mimps_ce,
+    "mince_ce": loss_mince_ce,
 }
+
+# losses whose forward/backward go through the device-resident IVF index
+# (train_loop threads TrainState.index into these)
+ESTIMATOR_LOSSES = ("mimps_ce", "mince_ce")
 
 
 def get_loss(name: str) -> Callable:

@@ -1,5 +1,15 @@
 """Train-step factory: grad-accumulation microbatching, loss registry,
-metrics; the function lowered by the dry run and driven by launch/train.py."""
+metrics; the function lowered by the dry run and driven by launch/train.py.
+
+Estimator-backed losses (``losses.ESTIMATOR_LOSSES``) thread a
+device-resident IVF index through the step: ``TrainState.index`` carries
+the block-IVF arrays (built by ``init_train_state`` from the initial output
+embedding), every loss call routes its probe/tail plan through it, and
+``make_index_refresh`` returns ONE jitted function that re-clusters/repacks
+the index from the current embedding — shapes are static (``mips.pack_ivf``
+capacity), so calling it every K steps never recompiles either it or the
+train step.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,8 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, TrainConfig
+from ..core import mips as _mips
 from ..models import Model
-from .losses import get_loss
+from .losses import ESTIMATOR_LOSSES, get_loss
 from .optimizer import OptState, adamw_update, init_opt_state
 from .compression import compress_psum
 
@@ -19,13 +30,58 @@ class TrainState(NamedTuple):
     params: Any
     opt: OptState
     rng: jax.Array
+    index: Any = None       # IVFIndex for estimator-backed losses, else None
+                            # (checkpointed with the rest of the state so
+                            # resume is bit-identical — see checkpoint.py)
+
+
+def _resolve_n_clusters(cfg: ModelConfig) -> int:
+    pc = cfg.partition
+    if pc.n_clusters > 0:
+        return pc.n_clusters
+    return max(1, cfg.vocab // (4 * pc.block_rows))
 
 
 def init_train_state(model: Model, train_cfg: TrainConfig,
                      key: jax.Array) -> TrainState:
     kp, kr = jax.random.split(key)
     params = model.init(kp)
-    return TrainState(params=params, opt=init_opt_state(params), rng=kr)
+    index = None
+    if train_cfg.loss in ESTIMATOR_LOSSES:
+        if model.cfg.n_codebooks:
+            raise NotImplementedError(
+                "estimator-backed losses serve single-stream heads")
+        index = _mips.build_ivf_device(
+            jax.random.fold_in(key, 0x1DF), model.head_matrix(params),
+            block_rows=model.cfg.partition.block_rows,
+            n_clusters=_resolve_n_clusters(model.cfg))
+    return TrainState(params=params, opt=init_opt_state(params), rng=kr,
+                      index=index)
+
+
+def make_index_refresh(model: Model, train_cfg: TrainConfig):
+    """One jitted ``refresh(state) -> (state, metrics)`` — recluster/repack
+    the index from the CURRENT embedding (metrics: churn / drift, the
+    maintenance observables launch/train.py logs). Static shapes: the
+    executable is traced once and reused for every refresh."""
+    n_clusters = _resolve_n_clusters(model.cfg)
+    iters = train_cfg.index_refresh_kmeans_iters
+
+    # compiled over (index, params) -> (index, metrics) ONLY: returning the
+    # whole TrainState would make XLA materialize fresh buffers for every
+    # untouched params/opt leaf on each refresh (a full state copy + ~2x
+    # transient memory at real model scale); the _replace happens on host
+    @jax.jit
+    def _refresh(index, params):
+        w = model.head_matrix(params)
+        return _mips.refresh_ivf(index, w, n_clusters=n_clusters,
+                                 kmeans_iters=iters)
+
+    def refresh(state: TrainState):
+        new_index, metrics = _refresh(state.index, state.params)
+        return state._replace(index=new_index), metrics
+
+    return refresh
 
 
 def make_train_step(model: Model, train_cfg: TrainConfig, *,
@@ -39,14 +95,19 @@ def make_train_step(model: Model, train_cfg: TrainConfig, *,
     """
     loss_name = train_cfg.loss
     loss_fn = get_loss(loss_name)
+    est_loss = loss_name in ESTIMATOR_LOSSES
     kwargs = {}
     if loss_name in ("fused_ce", "selfnorm"):
         kwargs["backend"] = backend
+    if loss_name in ("fused_ce", "selfnorm") or est_loss:
         if mesh is not None:
             from .losses import make_token_constraint
             kwargs["constrain_fn"] = make_token_constraint(mesh)
 
-    def compute_loss(params, batch, key):
+    def compute_loss(params, batch, key, index):
+        if est_loss:
+            return loss_fn(model, params, batch, key, train_cfg,
+                           index=index, **kwargs)
         return loss_fn(model, params, batch, key, train_cfg, **kwargs)
 
     grad_fn = jax.value_and_grad(compute_loss, has_aux=True)
@@ -54,9 +115,10 @@ def make_train_step(model: Model, train_cfg: TrainConfig, *,
     def train_step(state: TrainState, batch: Dict[str, jax.Array]
                    ) -> Tuple[TrainState, Dict[str, jax.Array]]:
         key, new_rng = jax.random.split(state.rng)
+        index = state.index
         mb = train_cfg.microbatches
         if mb <= 1:
-            (loss, metrics), grads = grad_fn(state.params, batch, key)
+            (loss, metrics), grads = grad_fn(state.params, batch, key, index)
         else:
             def split_mb(x):
                 # (B, ...) -> (mb, B/mb, ...) via (B/mb, mb) + swap so the
@@ -73,7 +135,7 @@ def make_train_step(model: Model, train_cfg: TrainConfig, *,
             def acc(carry, xs):
                 g_acc, l_acc = carry
                 b_i, k_i = xs
-                (l, m), g = grad_fn(state.params, b_i, k_i)
+                (l, m), g = grad_fn(state.params, b_i, k_i, index)
                 g_acc = jax.tree.map(jnp.add, g_acc, g)
                 return (g_acc, l_acc + l), m
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
@@ -90,6 +152,7 @@ def make_train_step(model: Model, train_cfg: TrainConfig, *,
         metrics = dict(metrics)
         metrics.update(opt_metrics)
         metrics["loss_total"] = loss
-        return TrainState(params=params, opt=opt, rng=new_rng), metrics
+        return TrainState(params=params, opt=opt, rng=new_rng,
+                          index=index), metrics
 
     return train_step

@@ -40,6 +40,44 @@ class TestCheckpoint:
         np.testing.assert_allclose(float(m1["loss_total"]),
                                    float(m2["loss_total"]), rtol=1e-6)
 
+    def test_index_state_roundtrip_bit_identical(self, rng, tmp_path):
+        """Estimator-backed training: save -> restore -> one step is
+        BIT-identical to the uninterrupted run, including the IVF index
+        arrays carried in TrainState (resume determinism extends to the
+        retrieval state, not just params/opt/rng)."""
+        import dataclasses as dc
+        cfg = reduced_config("qwen1.5-4b")
+        cfg = dc.replace(cfg, vocab=2048, partition=dc.replace(
+            cfg.partition, block_rows=64, n_probe=4, l=64, n_clusters=8))
+        m = Model(cfg)
+        tc = TrainConfig(lr=1e-3, loss="mimps_ce")
+        state = init_train_state(m, tc, rng)
+        assert state.index is not None
+        step = jax.jit(make_train_step(m, tc))
+        batch = {"tokens": jax.random.randint(rng, (2, 17), 0,
+                                              cfg.vocab)[:, :-1],
+                 "labels": jax.random.randint(rng, (2, 17), 0,
+                                              cfg.vocab)[:, 1:]}
+        for _ in range(2):
+            state, _ = step(state, batch)
+        # refresh so the saved index is NOT the init-time one
+        from repro.train import make_index_refresh
+        state, _ = make_index_refresh(m, tc)(state)
+        mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+        mgr.save(2, state)
+        restored, _ = mgr.restore(None, like=state)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # static pytree scalars come back as python ints (same treedef)
+        assert jax.tree_util.tree_structure(state) == \
+            jax.tree_util.tree_structure(restored)
+        s1, m1 = step(state, batch)
+        s2, m2 = step(restored, batch)
+        for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(
+            np.asarray(m1["loss_total"]), np.asarray(m2["loss_total"]))
+
     def test_atomicity_torn_write_ignored(self, rng, tmp_path):
         mgr = CheckpointManager(str(tmp_path), async_write=False)
         state = {"w": jnp.ones((3,))}
@@ -130,6 +168,43 @@ class TestServe:
         exact = jax.nn.logsumexp((h @ w.T).astype(jnp.float32), -1)
         err = np.abs(1 - np.exp(np.asarray(out["log_z"]) - np.asarray(exact)))
         assert err.mean() < 0.15, err
+
+    def test_swap_index_zero_recompile_parity(self, rng):
+        """Train->serve handoff: swapping a new checkpoint into a live
+        slot-table server (a) never recompiles the mixed step and (b) serves
+        tokens bit-identical to a fresh engine built from the new params."""
+        import dataclasses as dc
+        from repro.serve.scheduler import Request, Scheduler
+        cfg = reduced_config("qwen1.5-4b")
+        cfg = dc.replace(cfg, vocab=2048, partition=dc.replace(
+            cfg.partition, method="mimps", block_rows=64, n_probe=4, l=64,
+            n_clusters=8))
+        m = Model(cfg)
+        p0 = m.init(rng)
+        p1 = m.init(jax.random.fold_in(rng, 1))   # "freshly trained"
+        eng = Engine(m, p0, max_len=32, key=rng, device_index=True)
+        sch = Scheduler(eng, n_slots=2, key=rng)
+
+        def serve_one():
+            sch.admit(Request(prompt=[3, 5, 7], max_new_tokens=4,
+                              key=jax.random.PRNGKey(9)))
+            toks = []
+            for _ in range(10):
+                toks += [c.tokens for c in sch.step()["completions"]]
+                if toks:
+                    break
+            return toks[0]
+
+        before = serve_one()
+        traces = sch.step_traces
+        eng.swap_index(p1)
+        after = serve_one()
+        assert sch.step_traces == traces, "swap_index recompiled the step"
+        assert after != before
+        eng2 = Engine(m, p1, max_len=32, key=rng, device_index=True)
+        solo = generate(eng2, jnp.asarray([[3, 5, 7]]), 4,
+                        jax.random.PRNGKey(9))
+        assert solo[0].tolist() == after
 
     def test_generate_loop(self, rng):
         cfg = reduced_config("musicgen-medium")

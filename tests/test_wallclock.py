@@ -174,7 +174,8 @@ class TestHeadCapTrim:
 
 
 class TestRegressionGate:
-    def _write(self, tmp_path, dec_mimps_us=1000.0, est=None, srv=None):
+    def _write(self, tmp_path, dec_mimps_us=1000.0, est=None, srv=None,
+               trn=None):
         est = est or {}
         dec = {"exact": {"us_per_step": 2000.0, "tokens_per_s": 16000.0},
                "mimps": {"us_per_step": dec_mimps_us,
@@ -199,6 +200,19 @@ class TestRegressionGate:
                    "token_parity_vs_solo": True,
                    "recompiles_after_warmup": 0, **(srv or {})}
         (tmp_path / "BENCH_serving.json").write_text(json.dumps(serving))
+        train = {"methods": {
+            "fused_ce": {"tokens_per_s": 300.0, "us_per_step": 3000.0,
+                         "final_loss": 8.0},
+            "mimps_ce": {"tokens_per_s": 500.0, "us_per_step": 1800.0,
+                         "final_loss": 8.1, "grad_cosine_vs_full": 0.997,
+                         "grad_unique_ratio": 0.09,
+                         "grad_scored_ratio": 0.27,
+                         "refresh": {"churn": [0.2], "drift": [0.05],
+                                     "count": 3, "step_retraces": 1,
+                                     "refresh_retraces": 1}}},
+            "loss_ratio_vs_fused": 1.01, "grad_float_ratio": 0.27,
+            "zero_refresh_recompiles": True, **(trn or {})}
+        (tmp_path / "BENCH_train.json").write_text(json.dumps(train))
 
     def _check(self, tmp_path, monkeypatch):
         import benchmarks.run as run
@@ -252,3 +266,31 @@ class TestRegressionGate:
                     {"recompiles_after_warmup": 2}):
             self._write(tmp_path, srv=bad)
             assert self._check(tmp_path, monkeypatch) >= 1, bad
+
+    def test_fails_on_broken_train_invariants(self, tmp_path, monkeypatch):
+        """The PR-5 gate: dense-ish embedding-grad floats, a gradient that
+        diverges from full CE, a loss that drifts past 5%, or a recompiling
+        refresh each fail --check on their own."""
+        import json as _json
+        import benchmarks.run as run
+        self._write(tmp_path)
+        monkeypatch.chdir(tmp_path)
+        monkeypatch.setattr(run, "BASELINE_PATH",
+                            str(tmp_path / "baseline.json"))
+        run.update_baseline()
+        assert self._check(tmp_path, monkeypatch) == 0
+        for top, nested in (({"grad_float_ratio": 0.6}, {}),
+                            (({}, {"grad_cosine_vs_full": 0.9})),
+                            (({"loss_ratio_vs_fused": 1.2}, {})),
+                            (({}, {"refresh": {"churn": [0.2],
+                                               "drift": [0.05], "count": 3,
+                                               "step_retraces": 1,
+                                               "refresh_retraces": 3}}))):
+            self._write(tmp_path, trn=top)
+            if nested:
+                rep = _json.loads(
+                    (tmp_path / "BENCH_train.json").read_text())
+                rep["methods"]["mimps_ce"].update(nested)
+                (tmp_path / "BENCH_train.json").write_text(
+                    _json.dumps(rep))
+            assert self._check(tmp_path, monkeypatch) >= 1, (top, nested)
