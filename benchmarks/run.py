@@ -17,8 +17,10 @@ generate() on goodput, steady-state slot occupancy > 0.5, batched-vs-solo
 token parity, zero recompiles after warmup (PR 4); estimator-backed
 training writes < 0.35x the embedding-grad floats of fused_ce with grad
 cosine >= 0.99, final loss within 5%, and zero recompiles across index
-refreshes (PR 5). Refresh the baseline after a *deliberate* perf change
-with:
+refreshes (PR 5); under 2x sustained overload the server sheds (0 <
+shed_rate < 1), keeps a finite p95, engages the degradation ladder
+(degraded_token_frac > 0), respects the queue bound, and never recompiles
+(PR 6). Refresh the baseline after a *deliberate* perf change with:
 
   PYTHONPATH=src python -m benchmarks.run --update-baseline
 """
@@ -26,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import platform
 import sys
@@ -205,6 +208,44 @@ def check() -> int:
             f"warmup (the mixed step must serve every admission/replay/"
             f"decode mix with one executable)")
 
+    # overload acceptance invariants (exact, PR 6): at 2x sustained demand
+    # through a bounded queue + degradation ladder, the server must shed
+    # (not hang), keep serving the admitted work with a finite tail, walk
+    # the ladder deterministically, respect the queue bound, and do all of
+    # it without a single recompile.
+    ov = srv.get("overload")
+    if not ov:
+        failures.append("serving: overload scenario missing from artifact")
+    else:
+        if not ov["shed_rate"] > 0.0:
+            failures.append(
+                "serving.overload: shed_rate == 0 at 2x demand with a "
+                "bounded queue — backpressure never engaged")
+        if not ov["shed_rate"] < 1.0:
+            failures.append(
+                "serving.overload: shed_rate == 1 — the server shed "
+                "everything instead of serving what fit")
+        if not math.isfinite(ov["p95_under_overload"]) or \
+                ov["p95_under_overload"] <= 0:
+            failures.append(
+                f"serving.overload: p95_under_overload "
+                f"{ov['p95_under_overload']} is not a finite positive "
+                f"latency — admitted requests starved under overload")
+        if not ov["degraded_token_frac"] > 0.0:
+            failures.append(
+                "serving.overload: degraded_token_frac == 0 — sustained "
+                "queue pressure never engaged the estimator-tier ladder")
+        if ov["queue_depth_peak"] > ov["max_queue"]:
+            failures.append(
+                f"serving.overload: queue_depth_peak "
+                f"{ov['queue_depth_peak']} > max_queue {ov['max_queue']} "
+                f"(the bounded queue leaked)")
+        if ov["recompiles_after_warmup"] != 0:
+            failures.append(
+                f"serving.overload: {ov['recompiles_after_warmup']} "
+                f"recompiles under overload (tier switches must reuse the "
+                f"per-tier executables compiled at warmup)")
+
     if failures:
         print("== bench regression check: FAIL ==")
         for f in failures:
@@ -220,6 +261,13 @@ def check() -> int:
               f"({srv['speedup_vs_sequential']:.2f}x sequential), "
               f"occupancy {srv['occupancy_steady']:.2f}, p95 "
               f"{srv['p95_token_ms']:.2f}ms")
+        ov = srv.get("overload", {})
+        if ov:
+            print(f"  serving.overload: shed {ov['shed_rate']:.2f}, p95 "
+                  f"{ov['p95_under_overload']:.2f}ms, degraded "
+                  f"{ov['degraded_token_frac']:.2f}, queue peak "
+                  f"{ov['queue_depth_peak']}/{ov['max_queue']}, "
+                  f"recompiles {ov['recompiles_after_warmup']}")
         print(f"  train: grad floats {trn['grad_float_ratio']:.3f}x fused, "
               f"grad cosine {tm['grad_cosine_vs_full']:.4f}, loss "
               f"{trn['loss_ratio_vs_fused']:.3f}x, refreshes "
@@ -298,7 +346,9 @@ def main() -> None:
                    f"speedup={rep['speedup_vs_sequential']:.2f}x;"
                    f"occupancy={rep['occupancy_steady']:.2f};"
                    f"parity={rep['token_parity_vs_solo']};"
-                   f"recompiles={rep['recompiles_after_warmup']}")
+                   f"recompiles={rep['recompiles_after_warmup']};"
+                   f"shed={rep['overload']['shed_rate']:.2f};"
+                   f"degraded={rep['overload']['degraded_token_frac']:.2f}")
     if sel("train"):
         rep, us = train_bench.run(quick=quick)
         tm = rep["methods"]["mimps_ce"]

@@ -13,7 +13,12 @@ a traffic-serving deployment cares about:
  * probe-union dedup ratio U/(Q*n_probe) vs batch fill — the amortization
    argument for retrieval-based estimators under load,
  * recompiles after warmup (must be ZERO: one compiled mixed step serves
-   every admission/replay/decode mix).
+   every admission/replay/decode mix),
+ * an OVERLOAD scenario (2x sustained demand vs slot capacity, deterministic
+   trace on the virtual clock) through the bounded queue + degradation
+   ladder: shed rate, p95 under overload, fraction of tokens served from a
+   degraded tier, peak queue depth — still with zero recompiles, since
+   every ladder tier is compiled once during warmup.
 
 Writes BENCH_serving.json; gated by ``benchmarks/run.py --check``.
 """
@@ -77,6 +82,55 @@ def _sequential(eng, reqs, time_it: bool):
     return outs, (dt if time_it else float("nan"))
 
 
+def _overload(sched, cfg, n_slots: int, n_req: int, gen: int, p_lens):
+    """2x sustained demand vs slot capacity through the overload policy.
+
+    Demand is a deterministic trace on the virtual step clock (capacity
+    digests ~n_slots/gen requests per step; arrivals come at twice that),
+    so the shed/degrade/restore path replays identically run to run. Every
+    ladder tier is warmed (compiled) on a throwaway workload FIRST, so the
+    measured section must not trace anything new.
+    """
+    from repro.configs import ServingConfig
+    from repro.serve import Server, default_ladder, trace_arrivals
+
+    base_tier = sched.tier
+    for tier in default_ladder(base_tier):
+        sched.set_tier(tier)
+        warm = Server(sched)
+        for r in _workload(cfg, 2, 2, [3, 5], seed=98):
+            warm.submit(r)
+        warm.run()
+    sched.set_tier(base_tier)
+    traces0 = (sched.step_traces, sched.admit_traces)
+
+    ov_reqs = _workload(cfg, 2 * n_req, gen, p_lens, seed=7)
+    rate = 2.0 * n_slots / gen      # requests per virtual step = 2x capacity
+    arrivals = trace_arrivals(ov_reqs, [i / rate for i in range(len(ov_reqs))])
+    ov_cfg = ServingConfig(max_queue=n_slots,
+                           degrade_high=max(2, n_slots // 2),
+                           degrade_low=1, degrade_after=2, restore_after=6)
+    rep = Server(sched, ov_cfg).run(arrivals=arrivals)
+    recompiles = (sched.step_traces - traces0[0]) + \
+        (sched.admit_traces - traces0[1])
+    assert len(rep.completions) == len(ov_reqs), "overload accounting leak"
+    return {
+        "n_req": len(ov_reqs),
+        "demand_x_capacity": 2.0,
+        "max_queue": ov_cfg.max_queue,
+        "ladder": list(default_ladder(base_tier)),
+        "shed_rate": rep.shed_rate,
+        "rejects_by_reason": dict(rep.rejects_by_reason),
+        "p95_under_overload": rep.p95_token_ms,
+        "degraded_token_frac": rep.degraded_token_frac,
+        "tokens_by_tier": dict(rep.tokens_by_tier),
+        "tier_transitions": [[int(s), t] for s, t in rep.tier_transitions],
+        "queue_depth_peak": int(rep.queue_depth_peak),
+        "goodput_tok_s": rep.goodput_tok_s,
+        "recompiles_after_warmup": int(recompiles),
+    }
+
+
 def run(quick: bool = True):
     from repro.serve import Scheduler, Server, poisson_arrivals
 
@@ -133,6 +187,7 @@ def run(quick: bool = True):
         "token_parity_vs_solo": bool(parity),
         "recompiles_after_warmup": int(recompiles),
     }
+    report["overload"] = _overload(sched, cfg, n_slots, n_req, gen, p_lens)
     with open("BENCH_serving.json", "w") as f:
         json.dump(report, f, indent=2)
     total_tokens = sum(len(t) for t in seq_tokens)
@@ -141,6 +196,12 @@ def run(quick: bool = True):
           f"{seq_goodput:.0f} ({report['speedup_vs_sequential']:.2f}x), "
           f"occupancy {rep.occupancy_steady:.2f}, parity {parity}, "
           f"recompiles {recompiles}")
+    ov = report["overload"]
+    print(f"overload (2x demand): shed_rate {ov['shed_rate']:.2f}, "
+          f"p95 {ov['p95_under_overload']:.2f}ms, degraded_token_frac "
+          f"{ov['degraded_token_frac']:.2f}, queue_depth_peak "
+          f"{ov['queue_depth_peak']}, recompiles "
+          f"{ov['recompiles_after_warmup']}")
     return report, us_per_token
 
 

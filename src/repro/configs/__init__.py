@@ -6,7 +6,8 @@ from typing import Callable, Dict, List
 
 from . import archs
 from .base import (ModelConfig, MoEConfig, PartitionConfig, SSMConfig,
-                   ShapeConfig, TrainConfig, SHAPES, get_shape)
+                   ServingConfig, ShapeConfig, TrainConfig, SHAPES,
+                   get_shape)
 
 _REGISTRY: Dict[str, Callable[[], ModelConfig]] = {
     "mistral-nemo-12b": archs.mistral_nemo_12b,
@@ -73,5 +74,5 @@ def reduced_config(arch: str) -> ModelConfig:
 
 
 __all__ = ["get_config", "reduced_config", "ASSIGNED_ARCHS", "ModelConfig",
-           "MoEConfig", "PartitionConfig", "SSMConfig", "ShapeConfig",
-           "TrainConfig", "SHAPES", "get_shape"]
+           "MoEConfig", "PartitionConfig", "ServingConfig", "SSMConfig",
+           "ShapeConfig", "TrainConfig", "SHAPES", "get_shape"]

@@ -22,6 +22,12 @@ class PartitionConfig:
       mince    - Eq.6/7: NCE-for-Z with Halley's method
       fmbe     - Eq.8/10: Kar-Karnick random feature maps
       selfnorm - assume Z == 1 (Devlin/NCE-clamped heuristic, paper SS5.2)
+      topk     - Eq.4 head-only (nmimps at the output layer): cheapest
+                 retrieval tier — no tail sampling, log Ẑ from the probed
+                 head alone. Biased low (the paper shows Eq.4 inadequate as
+                 an *estimator*), kept as the last rung of the serving
+                 degradation ladder where finishing requests beats
+                 calibrated log Ẑ.
     """
     method: str = "exact"
     k: int = 100                  # head size |S_k(q)|
@@ -58,9 +64,57 @@ class PartitionConfig:
 
     def validate(self) -> None:
         assert self.method in (
-            "exact", "mimps", "nmimps", "uniform", "mince", "fmbe", "selfnorm")
+            "exact", "mimps", "nmimps", "uniform", "mince", "fmbe",
+            "selfnorm", "topk")
         assert self.k >= 0 and self.l >= 0
         assert self.sample_k >= 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Overload policy for ``serve.Server`` (DESIGN.md SS14).
+
+    Every knob is in **virtual steps** (the server's deterministic clock),
+    so the same trace degrades/sheds identically on any machine. Defaults
+    keep every mechanism off — a Server without a ServingConfig behaves
+    exactly like the PR-4 unbounded-queue loop.
+    """
+    max_queue: int = 0            # admission-queue bound; arrivals past it
+                                  # are shed as errored completions with
+                                  # reason 'queue_full' (0 = unbounded)
+    default_deadline: int = 0     # deadline (virtual steps from submission)
+                                  # stamped on requests that carry none
+                                  # (0 = no default; requests may still set
+                                  # their own Request.deadline)
+    # estimator-tier graceful degradation: under sustained queue pressure
+    # the server walks DOWN the ladder (cheaper tiers keep lanes moving),
+    # and restores UP with hysteresis once pressure drops. () = the
+    # method's default ladder (serve.server.default_ladder).
+    degrade_ladder: Tuple[str, ...] = ()
+    degrade_high: int = 0         # queue depth that counts as pressure
+                                  # (0 = degradation disabled)
+    degrade_low: int = 0          # queue depth that counts as calm
+    degrade_after: int = 3        # consecutive pressured steps -> step down
+    restore_after: int = 8        # consecutive calm steps -> step up
+                                  # (> degrade_after: the hysteresis band)
+    # estimator health: when True the compiled step routes queries whose
+    # estimate is unhealthy (non-finite log Ẑ / empty probe union /
+    # non-finite candidate scores) through the exact fused fallback under
+    # lax.cond — no NaN ever reaches sampling.
+    health_guard: bool = True
+    # retrieval-state integrity: every N scheduler steps the engine's
+    # current-tier state is checksummed against the digest recorded at
+    # build/swap time; a mismatch (bit-rotted or bad-swap index) rebuilds
+    # the state from params BEFORE the step consumes it. The digest pass
+    # reads the whole index (O(V d)), so this is a chaos-test / low-cadence
+    # production knob, not a per-step default (0 = off).
+    verify_index_every: int = 0
+
+    def validate(self) -> None:
+        assert self.max_queue >= 0 and self.default_deadline >= 0
+        assert self.degrade_high >= self.degrade_low >= 0
+        assert self.degrade_after >= 1 and self.restore_after >= 1
+        assert self.verify_index_every >= 0
 
 
 @dataclasses.dataclass(frozen=True)

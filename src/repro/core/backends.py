@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from ..configs.base import PartitionConfig
 from . import mips as _mips
 from .decode import (DecodeOut, exact_topk_decode, fmbe_decode, mimps_decode,
-                     mince_decode, selfnorm_decode)
+                     mince_decode, selfnorm_decode, topk_head_decode)
 from .feature_maps import (FMBEState, build_fmbe, build_fmbe_blocks,
                            make_feature_map)
 
@@ -256,6 +256,35 @@ class MinceBackend(EstimatorBackend):
 
     # same traffic shape as MIMPS: union head blocks + shared tail rows
     embedding_floats = MimpsBackend.embedding_floats
+
+
+@register_backend
+class TopkBackend(EstimatorBackend):
+    """Head-only retrieval (Eq. 4 at the output layer): the bottom rung of
+    the serving degradation ladder. Candidates and sampling are identical to
+    MIMPS; log Ẑ is the probed head's LSE (deterministic underestimate — no
+    tail traffic, no tail plan). Not an accuracy-study estimator: it exists
+    so an overloaded server can keep emitting tokens at the lowest possible
+    per-step cost instead of stalling."""
+    method = "topk"
+    sublinear = True
+
+    build = MimpsBackend.build
+
+    def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
+               active=None, **kernel_cfg):
+        if state.index is None:
+            return exact_topk_decode(state.w, h, k=k, use_pallas=use_pallas)
+        kernel_cfg.pop("tail_tile", None)    # tuned-for-mimps cfgs carry it
+        return topk_head_decode(state.index, h, key, n_probe=cfg.n_probe,
+                                k=k, head_cap=cfg.head_cap,
+                                use_pallas=use_pallas, active=active,
+                                **kernel_cfg)
+
+    tune = MinceBackend.tune                 # same union-score kernel
+
+    def embedding_floats(self, state, cfg, q, u=None):
+        return _head_floats(state, cfg, q, u)
 
 
 @register_backend

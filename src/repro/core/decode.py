@@ -490,6 +490,113 @@ def fmbe_decode(state: FMBEState, index: _mips.IVFIndex, h: jax.Array,
                      k_eff=plan.k_eff, head_live=plan.head_live)
 
 
+@partial(jax.jit, static_argnames=("n_probe", "k", "use_pallas", "head_cap",
+                                   "block_q", "interpret"))
+def topk_head_decode(index: _mips.IVFIndex, h: jax.Array, key: jax.Array,
+                     *, n_probe: int, k: int = 1, use_pallas: bool = True,
+                     head_cap: int = 0, block_q: int = 128,
+                     active: Optional[jax.Array] = None,
+                     interpret=None) -> DecodeOut:
+    """Head-only decode (Eq. 4 / nmimps at the output layer): the cheapest
+    retrieval tier of the serving degradation ladder.
+
+    Same probe plan and candidate retrieval as MIMPS, but no tail sampling
+    and no complement estimate at all — log Ẑ is the probed head's LSE, a
+    deterministic underestimate of log Z (the paper's SS3 shows how far Eq. 4
+    falls short as an *estimator*). Serving keeps it anyway: under overload
+    the sampling distribution over retrieved candidates is unchanged
+    (Gumbel-max renormalizes over the head), only the reported log-prob
+    calibration degrades, and the step drops the l·d tail traffic plus the
+    tail plan entirely. ``key`` feeds only the (empty) tail plan.
+    """
+    plan = make_plan(index, h, key, n_probe, l=0, active=active)
+    cap = _resolve_head_cap(head_cap, n_probe, plan.head_ids.shape[0])
+
+    if use_pallas:
+        scores3, mask3 = union_head_scores(index, h, plan, True, interpret,
+                                           block_q=block_q)
+        q = h.shape[0]
+        head_lse, topv, topi = _head_topk(
+            index, plan.head_ids, scores3.reshape(q, -1),
+            mask3.reshape(q, -1), k)
+    else:
+        def branch(ids, member):
+            scores, mask = _head_scores_xla(index, h, ids, member)
+            return _head_topk(index, ids, scores, mask, k)
+
+        head_lse, topv, topi = _with_trimmed_head(plan, cap, branch)
+
+    top_id = index.row_id.reshape(-1)[topi]
+    return DecodeOut(log_z=head_lse, top_score=topv, top_id=top_id,
+                     head_lse=head_lse,
+                     tail_lse=jnp.full_like(head_lse, -jnp.inf),
+                     k_eff=plan.k_eff, head_live=plan.head_live)
+
+
+# ---------------------------------------------------------------------------
+# Estimator health guard (DESIGN.md SS14): no NaN ever reaches sampling
+# ---------------------------------------------------------------------------
+
+HEALTH_NONFINITE_Z = 1      # log Ẑ is NaN/Inf (solver blow-up, corrupt data)
+HEALTH_EMPTY_HEAD = 2       # probe union covered zero real rows
+HEALTH_NONFINITE_SCORE = 4  # a retrieved candidate score is NaN/Inf
+
+
+def health_flags(out: DecodeOut) -> jax.Array:
+    """Per-query health bitmask (Q,) int32 over a ``DecodeOut``.
+
+    Flags the conditions that must never reach the sampler: a non-finite
+    log Ẑ (MINCE solver non-convergence, corrupted embeddings, fault
+    injection), an empty probe union (every probed block dead — k_eff == 0),
+    or non-finite candidate scores. ``tail_lse == -inf`` is NOT flagged —
+    that is the documented no-survivor value and the Eq. 5 combine already
+    guards it."""
+    bad_z = ~jnp.isfinite(out.log_z)
+    empty = out.k_eff == 0
+    bad_s = jnp.any(~jnp.isfinite(out.top_score), axis=-1)
+    return (bad_z.astype(jnp.int32) * HEALTH_NONFINITE_Z
+            + empty.astype(jnp.int32) * HEALTH_EMPTY_HEAD
+            + bad_s.astype(jnp.int32) * HEALTH_NONFINITE_SCORE)
+
+
+def apply_health_guard(out: DecodeOut, w: jax.Array, h: jax.Array,
+                       k: int, active: Optional[jax.Array] = None):
+    """Route unhealthy queries through the exact dense path (Eq. 2 fallback).
+
+    Returns ``(guarded DecodeOut, flags (Q,) int32)``. Healthy batches pay
+    one ``jnp.any`` reduction and take the identity branch of a ``lax.cond``
+    — outputs are BIT-IDENTICAL to the unguarded decode (an all-false
+    ``where`` preserves its operand), so the guard can sit unconditionally
+    inside the compiled serving step. When any query is flagged, the cond's
+    fallback branch scores the full embedding once (V·d — the price of
+    correctness on a degenerate step) and splices exact log Z / candidates
+    into the flagged rows only; unflagged rows keep their estimator outputs
+    untouched. ``active`` masks rows out of the check entirely (a padded
+    scheduler lane carries garbage by design and must not trigger — or pay
+    for — the fallback).
+    """
+    flags = health_flags(out)
+    if active is not None:
+        flags = jnp.where(active, flags, 0)
+    bad = flags > 0
+
+    def fallback():
+        ex = exact_topk_decode(w, h, k=k, use_pallas=False)
+        row = bad[:, None]
+        return DecodeOut(
+            log_z=jnp.where(bad, ex.log_z, out.log_z),
+            top_score=jnp.where(row, ex.top_score, out.top_score),
+            top_id=jnp.where(row, ex.top_id, out.top_id),
+            head_lse=jnp.where(bad, ex.head_lse, out.head_lse),
+            tail_lse=jnp.where(bad, ex.tail_lse, out.tail_lse),
+            k_eff=out.k_eff, head_live=out.head_live)
+
+    def keep():
+        return out
+
+    return jax.lax.cond(jnp.any(bad), fallback, keep), flags
+
+
 # ---------------------------------------------------------------------------
 # Dense-output decodes (exact / selfnorm) behind the same DecodeOut contract
 # ---------------------------------------------------------------------------

@@ -250,6 +250,21 @@ def stats_derivative_sums(theta, stats: MinceStats):
     return f1, f2, f3
 
 
+def solver_residual(theta, stats: MinceStats) -> jax.Array:
+    """|f'(theta)| — the non-convergence diagnostic for a finished solve.
+
+    A solve that converged sits at |f'| ~ round-off; a residual that stayed
+    large marks a non-converged (or corrupted-input) problem. Serving's
+    health layer does not need this for the anchored closed form (whose
+    failure mode is a non-finite anchor, caught by
+    ``decode.health_flags``) — it exists for the iterative paths
+    (cold-start / sharded stats), where theta can be finite yet wrong.
+    Non-finite stats propagate to a non-finite residual, so
+    ``~isfinite(residual) | (residual > tol)`` is the complete check."""
+    f1, _, _ = stats_derivative_sums(theta, stats)
+    return jnp.abs(f1)
+
+
 @partial(jax.jit, static_argnames=("iters", "solver"))
 def solve_from_stats(stats: MinceStats, theta0, iters: int = 25,
                      solver: str = "halley"):

@@ -12,6 +12,14 @@ the traffic report. ``--sequential`` adds a one-request-at-a-time
 ``--method`` choices come from the estimator-backend registry, so every
 servable method (including the PR-2 additions ``mince`` and ``fmbe``) is
 accepted; oracle-only study estimators are not servable and not listed.
+
+Overload policy (DESIGN.md SS14) is driven by the ``ServingConfig`` flags:
+``--max-queue`` bounds the admission queue (arrivals over the bound are
+shed), ``--deadline`` stamps every request with a default deadline in
+virtual steps (expired queue entries are shed, in-flight lanes evicted),
+and ``--degrade-high/--degrade-low/--degrade-after/--restore-after`` (plus
+an optional explicit ``--ladder``) walk the estimator-tier degradation
+ladder under sustained queue pressure. All default off.
 """
 from __future__ import annotations
 
@@ -23,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs import get_config, reduced_config
+from ..configs import ServingConfig, get_config, reduced_config
 from ..core.backends import BACKENDS
 from ..models import Model
 from ..serve import (Engine, Request, Scheduler, Server, generate,
@@ -65,6 +73,37 @@ def main():
                          "request decodes greedily)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the admission queue; arrivals over the "
+                         "bound are shed with reason 'queue_full' "
+                         "(0 = unbounded)")
+    ap.add_argument("--deadline", type=int, default=0,
+                    help="default per-request deadline in virtual steps: "
+                         "expired queue entries are shed, in-flight lanes "
+                         "evicted mid-decode (0 = no deadlines)")
+    ap.add_argument("--degrade-high", type=int, default=0,
+                    help="queue depth at/above which sustained pressure "
+                         "steps the estimator tier DOWN the ladder "
+                         "(0 = degradation off)")
+    ap.add_argument("--degrade-low", type=int, default=0,
+                    help="queue depth at/below which sustained calm "
+                         "restores the tier back UP")
+    ap.add_argument("--degrade-after", type=int, default=3,
+                    help="consecutive over-watermark steps before "
+                         "degrading")
+    ap.add_argument("--restore-after", type=int, default=8,
+                    help="consecutive under-watermark steps before "
+                         "restoring")
+    ap.add_argument("--ladder", default=None,
+                    help="comma list of tiers, most-accurate first (default:"
+                         " the method's built-in ladder, e.g. mimps,topk)")
+    ap.add_argument("--verify-index-every", type=int, default=0,
+                    help="digest-verify (and restore) the serving tier's "
+                         "IVF index every N steps (0 = off)")
+    ap.add_argument("--no-health-guard", action="store_true",
+                    help="disable the in-step estimator health guard "
+                         "(non-finite log-Z / empty probe union -> exact "
+                         "fallback)")
     ap.add_argument("--stream", action="store_true",
                     help="print every completion as it finishes")
     ap.add_argument("--sequential", action="store_true",
@@ -114,16 +153,38 @@ def main():
                 f"{'...' if len(comp.tokens) > 8 else ''}")
 
     sched = Scheduler(eng, n_slots=args.slots, key=key)
-    server = Server(sched)
+    srv_cfg = ServingConfig(
+        max_queue=args.max_queue, default_deadline=args.deadline,
+        degrade_ladder=tuple(args.ladder.split(",")) if args.ladder else (),
+        degrade_high=args.degrade_high, degrade_low=args.degrade_low,
+        degrade_after=args.degrade_after, restore_after=args.restore_after,
+        health_guard=not args.no_health_guard,
+        verify_index_every=args.verify_index_every)
+    server = Server(sched, srv_cfg)
     arrivals = poisson_arrivals(reqs, rate=args.rate, seed=args.seed)
     rep = server.run(arrivals=arrivals)
     print("continuous:", rep.summary())
-    print(f"  recompiles after warmup would be: step={sched.step_traces - 1} "
-          f"admit={sched.admit_traces - 1} (0 expected)")
+    step_extra = sched.step_traces - max(len(sched.traces_by_tier), 1)
+    print(f"  recompiles after warmup would be: step={step_extra} "
+          f"admit={sched.admit_traces - 1} (0 expected; one trace per "
+          f"served tier: {dict(sched.traces_by_tier)})")
     if rep.dedup_by_fill:
         fills = ", ".join(f"{k}:{v:.2f}" for k, v in
                           rep.dedup_by_fill.items())
         print(f"  probe-union dedup by batch fill: {fills}")
+    if rep.rejects_by_reason or rep.tier_transitions or \
+            rep.index_restores or any(rep.health.values()):
+        print(f"  robustness: shed_rate {rep.shed_rate:.2f} "
+              f"(by reason: {dict(rep.rejects_by_reason)}), "
+              f"queue peak {rep.queue_depth_peak}")
+        if rep.tier_transitions:
+            path = " -> ".join(f"{t}@{s}" for s, t in rep.tier_transitions)
+            print(f"  tier transitions: {path}; tokens by tier "
+                  f"{dict(rep.tokens_by_tier)} "
+                  f"(degraded frac {rep.degraded_token_frac:.2f})")
+        if rep.index_restores or any(rep.health.values()):
+            print(f"  guards: health {dict(rep.health)}, index restores "
+                  f"{rep.index_restores}, step faults {rep.step_faults}")
 
     if args.sequential:
         # warm each compile bucket first so the comparison is steady-state

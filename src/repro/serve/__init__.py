@@ -1,8 +1,15 @@
 from .engine import Engine, ServeState, generate
-from .scheduler import Completion, Request, Scheduler, SlotTable
-from .server import (Arrival, Server, ServerReport, poisson_arrivals,
-                     trace_arrivals)
+from .faults import (AdmissionFault, CompositeFault, CorruptIndexFault,
+                     FaultError, FaultInjector, InfLogitsFault,
+                     NanLogitsFault, StepFault)
+from .scheduler import (NO_DEADLINE, Completion, Request, Scheduler,
+                        SlotTable)
+from .server import (Arrival, Server, ServerReport, default_ladder,
+                     poisson_arrivals, trace_arrivals)
 
 __all__ = ["Engine", "ServeState", "generate", "Scheduler", "SlotTable",
-           "Request", "Completion", "Server", "ServerReport", "Arrival",
-           "poisson_arrivals", "trace_arrivals"]
+           "Request", "Completion", "NO_DEADLINE", "Server", "ServerReport",
+           "Arrival", "poisson_arrivals", "trace_arrivals", "default_ladder",
+           "FaultError", "FaultInjector", "CompositeFault", "NanLogitsFault",
+           "InfLogitsFault", "CorruptIndexFault", "AdmissionFault",
+           "StepFault"]

@@ -25,8 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from ..core.backends import BACKENDS, get_backend
-from ..core.decode import DecodeOut
+from ..core.backends import BACKENDS, BackendState, get_backend
+from ..core.decode import DecodeOut, apply_health_guard
 from ..models import Model
 
 
@@ -38,6 +38,24 @@ class ServeState:
     last_token: jax.Array    # (B,) or (B, C)
 
 
+@jax.jit
+def _index_digest(v_blocks: jax.Array):
+    """Two-scalar integrity checksum of an IVF block tensor. The
+    position-weighted sum catches row/block *permutations* (a plain sum
+    would not); the sum of squares catches zeroing and drift. Deterministic:
+    the same jitted reduction over the same data yields bit-equal scalars,
+    so digests compare with ==."""
+    x = v_blocks.astype(jnp.float32)
+    nb, br, _ = x.shape
+    wts = (1.0 + jnp.arange(nb * br, dtype=jnp.float32)).reshape(nb, br, 1)
+    return jnp.sum(x * wts), jnp.sum(x * x)
+
+
+def _digest(v_blocks) -> tuple:
+    a, b = _index_digest(v_blocks)
+    return (float(a), float(b))
+
+
 class Engine:
     """Batched serving for one model. Retrieval state (IVF index, FMBE
     sketch) is built once from the output embedding at engine construction
@@ -46,13 +64,14 @@ class Engine:
     def __init__(self, model: Model, params, max_len: int,
                  key: Optional[jax.Array] = None, use_pallas: bool = False,
                  autotune: bool = False, autotune_batch: int = 64,
-                 device_index: bool = False):
+                 device_index: bool = False, health_guard: bool = False):
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.max_len = max_len
         self.use_pallas = use_pallas
         self.device_index = device_index
+        self.health_guard = health_guard
         pc = self.cfg.partition
         key = key if key is not None else jax.random.PRNGKey(0)
         self._build_key = key
@@ -67,6 +86,13 @@ class Engine:
             self.state = self.backend.build(pc, model.head_matrix(params),
                                             key, device=device_index)
         self.index = self.state.index if self.state is not None else None
+        # degradation-tier states (serve.server tier ladder) + integrity
+        # digests, recorded at every build/swap/restore
+        self._tier_states: Dict[str, Any] = {}
+        self._digests: Dict[str, tuple] = {}
+        self.index_restores = 0
+        if self.index is not None:
+            self._digests[method] = _digest(self.index.v_blocks)
         # measured Pallas tile sizes, swept once at engine build on a
         # representative decode batch and cached on disk (kernels.autotune);
         # the per-query tiles clamp to the live batch, so one sweep covers
@@ -123,6 +149,92 @@ class Engine:
         self.state = new_state
         self.index = new_state.index if new_state is not None else None
         self._scan_runners = {}
+        # tier states / digests derive from the old embedding: drop and
+        # re-record (tiers rebuild lazily on next use)
+        self._tier_states = {}
+        self._digests = {}
+        if self.index is not None:
+            self._digests[self.backend.method] = _digest(self.index.v_blocks)
+
+    # -- degradation tiers + retrieval-state integrity ------------------------
+
+    def tier_state(self, method: str):
+        """The retrieval state that serves ``method`` as a degradation tier.
+
+        Index-routed tiers (mimps / mince / topk) REUSE the engine's IVF
+        index — stepping down the ladder swaps which compiled step consumes
+        the same device-resident state, no rebuild. Anything else the tier
+        needs beyond that (the FMBE sketch; a fresh index when the base
+        method built none) is built once on first use and cached."""
+        if method == self.backend.method or self.state is None:
+            return self.state
+        st = self._tier_states.get(method)
+        if st is None:
+            st = self._build_tier_state(method)
+            self._tier_states[method] = st
+            if st is not None and st.index is not None \
+                    and method not in self._digests:
+                self._digests[method] = _digest(st.index.v_blocks)
+        return st
+
+    def _build_tier_state(self, method: str):
+        backend = get_backend(method)
+        if method in ("exact", "selfnorm"):
+            return BackendState(w=self.state.w)
+        if method in ("mimps", "mince", "topk") and self.state.index is not None:
+            return BackendState(w=self.state.w, index=self.state.index)
+        return backend.build(self.cfg.partition,
+                             self.model.head_matrix(self.params),
+                             self._build_key, device=self.device_index)
+
+    def verify_and_restore(self, method: Optional[str] = None) -> bool:
+        """Checksum ``method``'s retrieval state against the digest recorded
+        when it was built/swapped; on mismatch (bit-rot, bad swap, stale
+        drift) rebuild every retrieval state from params BEFORE any step
+        consumes the corruption. Returns True iff a restore happened."""
+        method = method or self.backend.method
+        st = self.tier_state(method)
+        if st is None or st.index is None:
+            return False
+        ref = self._digests.get(method)
+        d = _digest(st.index.v_blocks)
+        if ref is None:
+            self._digests[method] = d
+            return False
+        if d == ref:
+            return False
+        self.restore_index()
+        return True
+
+    def restore_index(self, key: Optional[jax.Array] = None) -> None:
+        """Rebuild the retrieval state from the CURRENT params with the
+        engine's build key. ``backend.build`` is deterministic given (params,
+        key, device), so the restored state is bit-identical to the original
+        build — the chaos tests' token-parity guarantee rests on this."""
+        if self.cfg.n_codebooks:
+            return
+        key = key if key is not None else self._build_key
+        w = self.model.head_matrix(self.params)
+        self.state = self.backend.build(self.cfg.partition, w, key,
+                                        device=self.device_index)
+        self.index = self.state.index
+        self._tier_states = {}
+        self._digests = {}
+        self.index_restores += 1
+        if self.index is not None:
+            self._digests[self.backend.method] = _digest(self.index.v_blocks)
+
+    def _install_state(self, state, method: Optional[str] = None) -> None:
+        """Fault-injection hook: install a (possibly corrupted) retrieval
+        state WITHOUT updating its recorded digest — simulates a bad
+        ``swap_index`` / in-place bit-rot that ``verify_and_restore`` must
+        catch. Not a public serving API."""
+        method = method or self.backend.method
+        if method == self.backend.method:
+            self.state = state
+            self.index = state.index if state is not None else None
+        else:
+            self._tier_states[method] = state
 
     # -- steps (jit-compiled by callers / launch scripts) ---------------------
 
@@ -206,6 +318,11 @@ class Engine:
         out = self.backend.decode(self.state, h, k_est, pc, k=pc.sample_k,
                                   use_pallas=self.use_pallas,
                                   **self.kernel_cfg)
+        if self.health_guard and self.state is not None:
+            # identity when every lane is healthy (the lax.cond keep branch
+            # returns the estimate bit-unchanged), exact fused fallback for
+            # any lane whose estimate went non-finite/empty
+            out, _ = apply_health_guard(out, self.state.w, h, pc.sample_k)
         return _sample_candidates(out, k_samp, temperature)
 
 

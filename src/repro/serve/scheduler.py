@@ -32,6 +32,27 @@ together with a single jitted step:
 Both jitted entry points (``_step``, ``_admit``) carry trace counters:
 after one step and one admission, NOTHING recompiles — asserted by tests
 and by ``benchmarks/serving_bench.py``.
+
+Robustness layer (DESIGN.md SS14)
+---------------------------------
+ * **Deadlines.** Each lane carries a traced countdown next to its budget;
+   a lane whose deadline lapses mid-decode is *evicted* — folded into the
+   same ``finished`` path as normal completion, so the slot recycles next
+   step with no extra dispatch and no recompile. Neighbors are unaffected
+   bit-for-bit (per-lane keys; masked rows never contribute probes).
+ * **Estimator tiers.** ``set_tier`` switches which backend the NEXT step
+   decodes with (the server's degradation ladder). Each tier's step is
+   compiled once, lazily, against the same SlotTable — stepping down under
+   overload is a host pointer update.
+ * **Health guard.** The compiled step routes any lane whose estimate went
+   non-finite / empty through the exact dense fallback under ``lax.cond``
+   (``core.decode.apply_health_guard``): no NaN ever reaches sampling, and
+   healthy steps take a bit-identical identity branch.
+ * **Fault injection.** An attached ``serve.faults`` injector can raise
+   before the compiled step runs, corrupt engine retrieval state (caught by
+   the digest verify/restore cadence), or flip per-lane fault masks — the
+   masks are traced arguments (all-False in normal service), so injection
+   never recompiles and an injected lane's blast radius is itself.
 """
 from __future__ import annotations
 
@@ -39,13 +60,21 @@ import dataclasses
 import itertools
 import time
 from functools import partial
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.backends import get_backend
+from ..core.decode import (HEALTH_EMPTY_HEAD, HEALTH_NONFINITE_SCORE,
+                           HEALTH_NONFINITE_Z, apply_health_guard)
+
 _REQ_IDS = itertools.count()
+
+# deadline sentinel: far above any real step count, small enough that the
+# int32 countdown never wraps
+NO_DEADLINE = 1 << 30
 
 
 @dataclasses.dataclass
@@ -60,6 +89,9 @@ class Request:
     key: Any = 0
     temperature: float = 0.0
     sample_k: int = 0
+    deadline: int = 0                 # virtual steps from submission before
+                                      # the request is shed/evicted (0 = none;
+                                      # the server may stamp its default)
     on_token: Optional[Callable] = None     # fn(request, token, wall_time)
     on_complete: Optional[Callable] = None  # fn(request, completion)
     req_id: int = dataclasses.field(default_factory=lambda: next(_REQ_IDS))
@@ -82,8 +114,19 @@ class Completion:
     first_token_time: Optional[float]
     done_time: float
     overflowed: bool = False
-    error: Optional[str] = None    # set when admission rejected the request
-                                   # (tokens stay empty)
+    error: Optional[str] = None    # set when the request did not complete
+                                   # normally (admission rejected: tokens
+                                   # empty; evicted mid-decode: tokens
+                                   # partial)
+    reason: Optional[str] = None   # machine-readable code for error
+                                   # completions: 'queue_full',
+                                   # 'deadline_queue', 'deadline_evicted',
+                                   # 'admit_rejected', 'fault_injected',
+                                   # 'server_stopped'
+    tiers: List[str] = dataclasses.field(default_factory=list)
+                                   # estimator tier(s) this request's tokens
+                                   # were served at, in order (degradation
+                                   # audit trail; normally one entry)
 
 
 @jax.tree_util.register_dataclass
@@ -102,6 +145,8 @@ class SlotTable:
     req_key: jax.Array      # (S, 2) per-request PRNG key
     temperature: jax.Array  # (S,)  per-slot sampling temperature
     sample_k: jax.Array     # (S,)  per-slot candidate restriction
+    deadline: jax.Array     # (S,)  remaining virtual steps before eviction
+                            #       (NO_DEADLINE = none)
     active: jax.Array       # (S,)  lane holds a live request
     step_idx: jax.Array     # ()    global step counter (estimator PRNG)
 
@@ -145,7 +190,8 @@ class Scheduler:
     """
 
     def __init__(self, engine, n_slots: int, prompt_cap: Optional[int] = None,
-                 key: Optional[jax.Array] = None):
+                 key: Optional[jax.Array] = None, injector=None,
+                 health_guard: bool = True):
         if engine.cfg.n_codebooks:
             raise NotImplementedError(
                 "the slot scheduler serves single-stream text heads; "
@@ -154,13 +200,23 @@ class Scheduler:
         self.n_slots = n_slots
         self.prompt_cap = int(prompt_cap or engine.max_len)
         self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.health_guard = health_guard
+        self.injector = injector           # serve.faults.FaultInjector | None
+        self.verify_index_every = 0        # digest-check cadence (0 = off);
+                                           # set by the server from its
+                                           # ServingConfig
+        self.tier = engine.backend.method  # estimator tier the next step
+                                           # decodes with
         self.step_traces = 0
         self.admit_traces = 0
+        self.traces_by_tier: Dict[str, int] = {}
+        self.steps_done = 0
         self._free = list(range(n_slots))
         self._slot_req: List[Optional[Request]] = [None] * n_slots
         self._slot_acc: List[Optional[Completion]] = [None] * n_slots
+        self._no_fault = jnp.zeros((n_slots,), bool)
         self.table = self._init_table()
-        self._step_fn = self._build_step()
+        self._step_fns: Dict[str, Callable] = {}
         self._admit_fn = self._build_admit()
 
     # -- device state --------------------------------------------------------
@@ -178,16 +234,22 @@ class Scheduler:
             req_key=jnp.zeros((s, 2), jnp.uint32),
             temperature=jnp.zeros((s,), jnp.float32),
             sample_k=jnp.ones((s,), jnp.int32),
+            deadline=jnp.full((s,), NO_DEADLINE, jnp.int32),
             active=jnp.zeros((s,), bool),
             step_idx=jnp.zeros((), jnp.int32))
 
-    def _build_step(self):
+    def _build_step(self, method: str):
         eng = self.engine
         model = eng.model
         pc = eng.cfg.partition
-        backend = eng.backend
-        kernel_cfg = dict(eng.kernel_cfg)
+        backend = get_backend(method)
+        # measured kernel tiles were swept for the engine's own backend;
+        # degradation tiers run library defaults (correctness never depends
+        # on the tile choice)
+        kernel_cfg = dict(eng.kernel_cfg) \
+            if method == eng.backend.method else {}
         use_pallas = eng.use_pallas
+        health_guard = self.health_guard
         max_len = eng.max_len
         est_key = jax.random.fold_in(self.key, 0xE57)
         # donate the table: the step updates the KV cache in place instead
@@ -200,8 +262,10 @@ class Scheduler:
         # to a live server and the very next step serves it from the same
         # executable (shapes are identical under device_index=True)
         @partial(jax.jit, donate_argnums=donate)
-        def step(table: SlotTable, params, bstate):
+        def step(table: SlotTable, params, bstate, fault_nan, fault_inf):
             self.step_traces += 1   # python side effect: counts (re)traces
+            self.traces_by_tier[method] = \
+                self.traces_by_tier.get(method, 0) + 1
             # -- input token: next prompt token while replaying, else the
             #    lane's own previous sample
             is_replay = table.t_stream < table.t_replay
@@ -226,6 +290,26 @@ class Scheduler:
             out = backend.decode(bstate, h, k_est, pc, k=pc.sample_k,
                                  use_pallas=use_pallas, active=table.active,
                                  **kernel_cfg)
+            # -- lane-scoped fault injection: the masks are traced arguments
+            #    (all-False arrays in normal service — same executable), and
+            #    every downstream consumer is per-lane, so a corrupted lane's
+            #    blast radius is exactly itself
+            corrupt = fault_nan | fault_inf
+            bad_val = jnp.where(fault_inf, jnp.inf, jnp.nan)
+            out = out._replace(
+                log_z=jnp.where(corrupt, bad_val, out.log_z),
+                top_score=jnp.where(corrupt[:, None], bad_val[:, None],
+                                    out.top_score))
+            # -- health guard: unhealthy lanes (non-finite log Ẑ / empty
+            #    probe union / non-finite scores — whether injected or
+            #    organic) fall back to the exact dense path; healthy steps
+            #    take the bit-identical identity branch
+            if health_guard:
+                out, flags = apply_health_guard(out, bstate.w, h,
+                                                pc.sample_k,
+                                                active=table.active)
+            else:
+                flags = jnp.zeros(table.active.shape, jnp.int32)
             tok, score = sample_slots(out, k_samp, table.temperature,
                                       table.sample_k)
             # -- lifecycle: the lane's first kept sample is emitted by its
@@ -234,14 +318,23 @@ class Scheduler:
             emitted = table.active & (table.t_stream >= table.t_replay - 1) \
                 & ~overflow
             new_budget = table.budget - emitted.astype(jnp.int32)
-            finished = (emitted & (new_budget <= 0)) | overflow
+            done = (emitted & (new_budget <= 0)) | overflow
             act = table.active
+            # -- deadline countdown: one virtual step of service per step; a
+            #    lane that lapses without finishing is evicted through the
+            #    SAME finished path (slot recycles next step, no recompile).
+            #    It still emits this step's token — eviction returns partial
+            #    output, it does not discard work already done.
+            new_ddl = table.deadline - act.astype(jnp.int32)
+            expired = act & ~done & (new_ddl <= 0)
+            finished = done | expired
             new_table = dataclasses.replace(
                 table,
                 cache=new_cache,
                 last_token=jnp.where(act, tok, table.last_token),
                 t_stream=table.t_stream + act.astype(jnp.int32),
                 budget=new_budget,
+                deadline=new_ddl,
                 active=act & ~finished,
                 step_idx=table.step_idx + 1)
             head_live = out.head_live if out.head_live is not None \
@@ -249,18 +342,36 @@ class Scheduler:
             outs = {"token": tok, "log_prob": score - out.log_z,
                     "log_z": out.log_z, "emitted": emitted,
                     "finished": finished, "overflow": overflow,
+                    "expired": expired, "health": flags,
                     "n_active": act.astype(jnp.int32).sum(),
                     "head_live": head_live}
             return new_table, outs
 
         return step
 
+    def _get_step(self, method: str):
+        fn = self._step_fns.get(method)
+        if fn is None:
+            fn = self._step_fns[method] = self._build_step(method)
+        return fn
+
+    def set_tier(self, method: str) -> None:
+        """Switch which estimator tier the NEXT step decodes with (the
+        server walks its degradation ladder through this). Each tier's step
+        compiles once, lazily, and tier states reuse the engine's index
+        (``Engine.tier_state``) — after warmup a tier switch is two host
+        pointer updates, zero device work, zero recompiles."""
+        if method == self.tier:
+            return
+        get_backend(method)   # unknown tiers fail loudly, not at trace time
+        self.tier = method
+
     def _build_admit(self):
         donate = (0,) if jax.default_backend() != "cpu" else ()
 
         @partial(jax.jit, donate_argnums=donate)
         def admit(table: SlotTable, slot, prompt_row, p_len, budget, key,
-                  temp, sample_k):
+                  temp, sample_k, deadline):
             self.admit_traces += 1
             upd = lambda arr, val: arr.at[slot].set(val)
             return dataclasses.replace(
@@ -274,6 +385,7 @@ class Scheduler:
                 req_key=table.req_key.at[slot].set(key),
                 temperature=upd(table.temperature, temp),
                 sample_k=upd(table.sample_k, sample_k),
+                deadline=upd(table.deadline, deadline),
                 active=upd(table.active, True))
 
         return admit
@@ -288,11 +400,21 @@ class Scheduler:
     def n_in_flight(self) -> int:
         return self.n_slots - len(self._free)
 
-    def admit(self, request: Request) -> int:
+    def admit(self, request: Request,
+              deadline_steps: Optional[int] = None) -> int:
         """Place a request in a free lane; returns the slot index. Raises
         when the table is full (callers queue — see serve.server) or when
         the request cannot fit the engine's caches (host-path guard:
-        admission is the last point where a python error is possible)."""
+        admission is the last point where a python error is possible).
+        ``deadline_steps`` is the lane's eviction countdown in scheduler
+        steps (None = no deadline); the server passes the request's
+        *remaining* deadline so queue wait counts against it."""
+        if self.injector is not None:
+            # fault hook BEFORE any state mutates: a rejected admission
+            # leaves the scheduler exactly as it was
+            self.injector.on_admit(request, self)
+        if deadline_steps is not None and deadline_steps < 1:
+            raise ValueError("deadline already expired at admission")
         p_len = int(request.prompt.shape[0])
         if p_len < 1:
             raise ValueError("request needs a non-empty prompt")
@@ -315,11 +437,12 @@ class Scheduler:
         prompt_row[:p_len] = request.prompt
         sk = request.sample_k or self.engine.cfg.partition.sample_k
         sk = max(1, min(sk, self.engine.cfg.partition.sample_k))
+        ddl = NO_DEADLINE if deadline_steps is None else int(deadline_steps)
         self.table = self._admit_fn(
             self.table, jnp.int32(slot), jnp.asarray(prompt_row),
             jnp.int32(p_len), jnp.int32(request.max_new_tokens),
             jnp.asarray(request.key, jnp.uint32), jnp.float32(
-                request.temperature), jnp.int32(sk))
+                request.temperature), jnp.int32(sk), jnp.int32(ddl))
         self._slot_req[slot] = request
         self._slot_acc[slot] = Completion(
             request=request, tokens=[], log_probs=[], log_zs=[],
@@ -330,11 +453,31 @@ class Scheduler:
     def step(self) -> dict:
         """Advance every live lane one token. Returns a host-side record:
         emitted tokens (streamed through ``on_token``), finished requests
-        (``on_complete`` + listed under ``"completions"``), occupancy and
-        probe-dedup metrics for this step."""
+        (``on_complete`` + listed under ``"completions"``), occupancy,
+        probe-dedup, tier and estimator-health metrics for this step.
+
+        Fault-injection order matters: the injector fires FIRST (a raised
+        ``FaultError`` leaves the table unadvanced — the server retries the
+        step), then the digest verify/restore cadence runs so a corrupted
+        retrieval state is repaired BEFORE the compiled step consumes it."""
         t0 = time.perf_counter()
-        self.table, out = self._step_fn(self.table, self.engine.params,
-                                        self.engine.state)
+        if self.injector is not None:
+            self.injector.on_step_begin(self)
+        restored = False
+        if self.verify_index_every and \
+                self.steps_done % self.verify_index_every == 0:
+            restored = self.engine.verify_and_restore(self.tier)
+        fault_nan = fault_inf = self._no_fault
+        if self.injector is not None:
+            lanes = self.injector.lane_faults(self)
+            if lanes is not None:
+                fault_nan = jnp.asarray(np.asarray(lanes[0], bool))
+                fault_inf = jnp.asarray(np.asarray(lanes[1], bool))
+        step_fn = self._get_step(self.tier)
+        bstate = self.engine.tier_state(self.tier)
+        self.table, out = step_fn(self.table, self.engine.params, bstate,
+                                  fault_nan, fault_inf)
+        self.steps_done += 1
         out = jax.device_get(out)
         now = time.perf_counter()
         completions = []
@@ -349,11 +492,16 @@ class Scheduler:
                 acc.tokens.append(int(out["token"][s]))
                 acc.log_probs.append(float(out["log_prob"][s]))
                 acc.log_zs.append(float(out["log_z"][s]))
+                if not acc.tiers or acc.tiers[-1] != self.tier:
+                    acc.tiers.append(self.tier)
                 if req.on_token is not None:
                     req.on_token(req, int(out["token"][s]), now)
             if out["finished"][s]:
                 acc.done_time = now
                 acc.overflowed = bool(out["overflow"][s])
+                if out["expired"][s]:
+                    acc.error = "deadline exceeded (evicted mid-decode)"
+                    acc.reason = "deadline_evicted"
                 self._slot_req[s] = None
                 self._slot_acc[s] = None
                 self._free.append(s)
@@ -361,8 +509,51 @@ class Scheduler:
                 completions.append(acc)
                 if req.on_complete is not None:
                     req.on_complete(req, acc)
+        flags = np.asarray(out["health"])
         return {"wall_s": now - t0,
                 "n_active": int(out["n_active"]),
                 "head_live": int(out["head_live"]),
                 "occupancy": int(out["n_active"]) / self.n_slots,
-                "completions": completions}
+                "completions": completions,
+                "tier": self.tier,
+                "n_emitted": int(np.asarray(out["emitted"]).sum()),
+                "index_restored": restored,
+                "health_flagged": int((flags > 0).sum()),
+                "health_nonfinite_z":
+                    int((flags & HEALTH_NONFINITE_Z > 0).sum()),
+                "health_empty_head":
+                    int((flags & HEALTH_EMPTY_HEAD > 0).sum()),
+                "health_nonfinite_score":
+                    int((flags & HEALTH_NONFINITE_SCORE > 0).sum())}
+
+    def drain(self, reason: str = "server_stopped") -> List[Completion]:
+        """Forcibly close out every in-flight lane host-side: each open
+        request becomes an errored completion carrying whatever tokens it
+        already emitted, its lane returns to the free list, and the device
+        table is deactivated in one update. The server flushes through this
+        at shutdown / ``max_steps`` instead of silently stranding work."""
+        now = time.perf_counter()
+        completions = []
+        for s in range(self.n_slots):
+            req = self._slot_req[s]
+            if req is None:
+                continue
+            acc = self._slot_acc[s]
+            acc.done_time = now
+            acc.error = f"evicted: {reason}"
+            acc.reason = reason
+            self._slot_req[s] = None
+            self._slot_acc[s] = None
+            self._free.append(s)
+            completions.append(acc)
+            if req.on_complete is not None:
+                req.on_complete(req, acc)
+        if completions:
+            self._free.sort()
+            n = self.n_slots
+            self.table = dataclasses.replace(
+                self.table,
+                active=jnp.zeros((n,), bool),
+                budget=jnp.zeros((n,), jnp.int32),
+                deadline=jnp.full((n,), NO_DEADLINE, jnp.int32))
+        return completions

@@ -1,4 +1,4 @@
-"""Traffic-facing serving loop over the slot scheduler (DESIGN.md SS12).
+"""Traffic-facing serving loop over the slot scheduler (DESIGN.md SS12/SS14).
 
 The ``Scheduler`` is mechanism (slot table + one compiled mixed step); the
 ``Server`` is policy: an admission queue, arrival processes (Poisson or a
@@ -13,16 +13,41 @@ machine. Latency metrics are real wall-clock, measured around the compiled
 step. When the table drains and the queue is empty but arrivals remain in
 the future, the clock fast-forwards to the next arrival (idle steps are not
 simulated).
+
+Overload policy (``configs.ServingConfig``, all knobs in virtual steps):
+
+ * **Backpressure.** A bounded admission queue sheds over-watermark
+   arrivals at submit time ('queue_full') and expired entries at the next
+   admission boundary ('deadline_queue') — every shed is an errored,
+   token-less completion with a machine-readable reason, never a silent
+   drop. Queue wait is recorded for shed requests too (they waited; the
+   report should say so).
+ * **Deadlines.** A request's deadline (its own or the config default)
+   counts down from submission; the *remaining* budget at admission becomes
+   the lane's traced eviction countdown, so queue wait spends the same
+   budget service does.
+ * **Graceful degradation.** Under sustained queue pressure the server
+   walks the scheduler DOWN an estimator-tier ladder (e.g. mimps -> topk:
+   cheaper steps drain the backlog) and back UP with hysteresis — separate
+   high/low watermarks plus consecutive-step debounce, so an oscillating
+   queue cannot flap the tier. Tier switches never recompile (each tier's
+   step compiles once; see ``Scheduler.set_tier``).
+ * **Fault containment.** A ``FaultError`` raised at a step boundary (the
+   injection harness, serve.faults) is counted and retried without
+   advancing the virtual clock — the device table was never touched, so
+   non-injected requests stay bit-identical to a fault-free run.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..configs.base import ServingConfig
+from .faults import FaultError
 from .scheduler import Completion, Request, Scheduler
 
 
@@ -55,6 +80,26 @@ def trace_arrivals(requests: Sequence[Request],
                   key=lambda a: a.at_step)
 
 
+_DEFAULT_LADDERS: Dict[str, Tuple[str, ...]] = {
+    # ordered most-accurate -> cheapest; every rung shares the engine's IVF
+    # index (Engine.tier_state), so walking down is free of rebuilds
+    "mimps": ("mimps", "topk"),
+    "mince": ("mince", "mimps", "topk"),
+    "fmbe": ("fmbe", "topk"),
+    "topk": ("topk",),
+    "exact": ("exact",),
+    "selfnorm": ("selfnorm",),
+}
+
+
+def default_ladder(method: str) -> Tuple[str, ...]:
+    """The degradation ladder used when ``ServingConfig.degrade_ladder`` is
+    empty: start at the engine's own method, step down through cheaper
+    index-sharing tiers, end at head-only top-k (Eq. 4) — the rung that
+    keeps lanes moving when everything else is too slow."""
+    return _DEFAULT_LADDERS.get(method, (method,))
+
+
 @dataclasses.dataclass
 class ServerReport:
     completions: List[Completion]
@@ -72,16 +117,41 @@ class ServerReport:
                                    #   start) — the saturation figure
     dedup_ratio_mean: Optional[float]  # mean U / (n_active * n_probe)
     dedup_by_fill: dict            # n_active -> mean dedup ratio
-    queue_wait_steps_mean: float   # admission queueing delay (virtual steps)
+    queue_wait_steps_mean: float   # admission queueing delay (virtual
+                                   #   steps) — includes shed requests
+    # -- overload / robustness accounting (DESIGN.md SS14) -------------------
+    rejects_by_reason: Dict[str, int] = dataclasses.field(
+        default_factory=dict)      # reason code -> count over every errored
+                                   # completion (sheds, evictions, flushes)
+    shed_rate: float = 0.0         # errored completions / all completions
+    queue_depth_peak: int = 0      # max queue depth reached
+    tokens_by_tier: Dict[str, int] = dataclasses.field(default_factory=dict)
+    degraded_token_frac: float = 0.0   # tokens emitted below the top tier
+    tier_transitions: List[Tuple[int, str]] = dataclasses.field(
+        default_factory=list)      # (virtual step, new tier)
+    health: Dict[str, int] = dataclasses.field(default_factory=dict)
+                                   # estimator health-guard counters summed
+                                   # over the run (lane-steps flagged)
+    index_restores: int = 0        # digest-verify mismatches repaired
+    step_faults: int = 0           # FaultErrors caught + retried at step
+                                   # boundaries
 
     def summary(self) -> str:
         ded = f"{self.dedup_ratio_mean:.2f}" \
             if self.dedup_ratio_mean is not None else "n/a"
-        return (f"{len(self.completions)} requests, {self.steps} steps, "
+        base = (f"{len(self.completions)} requests, {self.steps} steps, "
                 f"{self.goodput_tok_s:.1f} tok/s goodput, per-token p50 "
                 f"{self.p50_token_ms:.2f}ms p95 {self.p95_token_ms:.2f}ms, "
                 f"occupancy {self.occupancy_mean:.2f} "
                 f"(steady {self.occupancy_steady:.2f}), probe dedup {ded}")
+        if self.rejects_by_reason or self.tier_transitions or \
+                self.index_restores or self.step_faults:
+            base += (f"; shed {self.shed_rate:.2f} {self.rejects_by_reason}"
+                     f", degraded frac {self.degraded_token_frac:.2f} "
+                     f"({len(self.tier_transitions)} tier moves), "
+                     f"{self.index_restores} index restores, "
+                     f"{self.step_faults} step faults")
+        return base
 
 
 class Server:
@@ -90,49 +160,140 @@ class Server:
     Requests enter via ``submit`` (immediate) or a pre-built arrival list
     (``run(arrivals=...)``); free slots are filled FIFO from the queue at
     every step boundary, so a completion recycles its lane into the next
-    queued request on the very next step.
+    queued request on the very next step. ``cfg`` (``ServingConfig``)
+    activates the overload policy; the default config keeps every mechanism
+    off and reproduces the plain unbounded loop.
     """
 
-    def __init__(self, scheduler: Scheduler):
+    def __init__(self, scheduler: Scheduler,
+                 cfg: Optional[ServingConfig] = None):
         self.scheduler = scheduler
+        self.cfg = cfg or ServingConfig()
+        self.cfg.validate()
+        scheduler.verify_index_every = self.cfg.verify_index_every
+        if not scheduler._step_fns:
+            # policy reaches mechanism only before the first compile: the
+            # guard is baked into each tier's executable
+            scheduler.health_guard = self.cfg.health_guard
+        self.ladder: Tuple[str, ...] = tuple(
+            self.cfg.degrade_ladder or default_ladder(scheduler.tier))
+        for tier in self.ladder:
+            if tier not in _DEFAULT_LADDERS and tier not in (
+                    "mimps", "mince", "fmbe", "topk", "exact", "selfnorm"):
+                raise ValueError(f"unknown degradation tier {tier!r}")
         self.queue: deque = deque()
         self._queued_at: dict = {}      # req_id -> virtual step queued
+        self._deadline_at: dict = {}    # req_id -> absolute deadline step
         # per-run accumulators, reset by run() (entries are dropped from
         # _queued_at at admission so bookkeeping stays bounded)
         self._run_waits: List[float] = []
         self._rejected: List[Completion] = []
+        self._step_faults = 0
+        self._tier_ix = 0
+        self._pressure = 0
+        self._calm = 0
+        self.tier_transitions: List[Tuple[int, str]] = []
         self.step_i = 0
 
     def submit(self, request: Request) -> None:
+        cfg = self.cfg
+        if cfg.max_queue and len(self.queue) >= cfg.max_queue:
+            # backpressure: shed at the door instead of growing an unbounded
+            # backlog every queued request then times out in
+            self._reject(request, "queue_full",
+                         f"admission queue full ({cfg.max_queue})")
+            return
+        ddl = request.deadline or cfg.default_deadline
+        if ddl:
+            self._deadline_at[request.req_id] = self.step_i + int(ddl)
         self._queued_at[request.req_id] = float(self.step_i)
         self.queue.append(request)
+
+    def _reject(self, req: Request, reason: str, error: str,
+                queued_at: Optional[float] = None) -> None:
+        """Close a request out as an errored, token-less completion. The
+        queue wait (if it queued at all) is recorded — shed requests waited
+        too, and hiding them would flatter the wait metric."""
+        now = time.perf_counter()
+        if queued_at is not None:
+            self._run_waits.append(self.step_i - queued_at)
+        self._deadline_at.pop(req.req_id, None)
+        comp = Completion(request=req, tokens=[], log_probs=[], log_zs=[],
+                          admit_time=now, first_token_time=None,
+                          done_time=now, error=error, reason=reason)
+        self._rejected.append(comp)
+        if req.on_complete is not None:
+            req.on_complete(req, comp)
 
     def _admit_ready(self) -> None:
         while self.queue and self.scheduler.n_free:
             req = self.queue.popleft()
             queued = self._queued_at.pop(req.req_id, self.step_i)
+            ddl_at = self._deadline_at.get(req.req_id)
+            if ddl_at is not None and ddl_at - self.step_i < 1:
+                # expired while queued: shed before paying for prefill
+                self._reject(req, "deadline_queue",
+                             f"deadline lapsed after {self.step_i - queued:g}"
+                             " steps in queue", queued_at=queued)
+                continue
+            remaining = None if ddl_at is None else int(ddl_at - self.step_i)
             try:
-                self.scheduler.admit(req)
+                self.scheduler.admit(req, deadline_steps=remaining)
+            except FaultError as e:
+                # injected admission failure: reject cleanly, nothing else
+                # in the batch is touched (admit raises before any mutation)
+                self._reject(req, "fault_injected", str(e), queued_at=queued)
+                continue
             except ValueError as e:
                 # one unadmittable request (over cache capacity, empty
                 # prompt) must not kill the loop for every other request:
                 # reject it with an errored, token-less completion
-                now = time.perf_counter()
-                comp = Completion(request=req, tokens=[], log_probs=[],
-                                  log_zs=[], admit_time=now,
-                                  first_token_time=None, done_time=now,
-                                  error=str(e))
-                self._rejected.append(comp)
-                if req.on_complete is not None:
-                    req.on_complete(req, comp)
+                self._reject(req, "admit_rejected", str(e), queued_at=queued)
                 continue
+            self._deadline_at.pop(req.req_id, None)
             self._run_waits.append(self.step_i - queued)
+
+    def _update_tier(self) -> None:
+        """Hysteresis ladder walk on queue depth. Pressure (depth >= high)
+        must persist ``degrade_after`` consecutive steps to step down; calm
+        (depth <= low) must persist ``restore_after`` steps to step up; the
+        dead band between the watermarks holds the current tier and resets
+        neither direction into flapping."""
+        cfg = self.cfg
+        if not cfg.degrade_high or len(self.ladder) < 2:
+            return
+        depth = len(self.queue)
+        if depth >= cfg.degrade_high:
+            self._pressure += 1
+            self._calm = 0
+        elif depth <= cfg.degrade_low:
+            self._calm += 1
+            self._pressure = 0
+        else:
+            self._pressure = 0
+            self._calm = 0
+        if self._pressure >= cfg.degrade_after and \
+                self._tier_ix < len(self.ladder) - 1:
+            self._tier_ix += 1
+            self._pressure = 0
+            self.scheduler.set_tier(self.ladder[self._tier_ix])
+            self.tier_transitions.append(
+                (self.step_i, self.ladder[self._tier_ix]))
+        elif self._calm >= cfg.restore_after and self._tier_ix > 0:
+            self._tier_ix -= 1
+            self._calm = 0
+            self.scheduler.set_tier(self.ladder[self._tier_ix])
+            self.tier_transitions.append(
+                (self.step_i, self.ladder[self._tier_ix]))
 
     def run(self, arrivals: Optional[Sequence[Arrival]] = None,
             max_steps: int = 100_000,
             on_step: Optional[Callable] = None) -> ServerReport:
         """Drive the loop until every submitted/arriving request completes
-        (or ``max_steps``). Returns the traffic report."""
+        (or ``max_steps``). Returns the traffic report. Hitting
+        ``max_steps`` FLUSHES all queued and in-flight work as errored
+        completions ('server_stopped') — accounting always balances, nothing
+        is silently stranded."""
         pending = deque(sorted(arrivals or [], key=lambda a: a.at_step))
         completions: List[Completion] = []
         token_lat: List[float] = []
@@ -143,11 +304,20 @@ class Server:
         t_start = None
         t_end = None
         steps = 0
-        self._run_waits = []
-        self._rejected = []
+        queue_depth_peak = 0
+        # _run_waits/_rejected are NOT reset here: sheds recorded by
+        # submit() calls made before run() (queue_full backpressure) belong
+        # to this run's report; both reset after the report is assembled
+        self._step_faults = 0
+        self.tier_transitions = []
+        self._tier_ix = 0
+        self._pressure = 0
+        self._calm = 0
+        self.scheduler.set_tier(self.ladder[0])
         while steps < max_steps:
             while pending and pending[0].at_step <= self.step_i:
                 self.submit(pending.popleft().request)
+            queue_depth_peak = max(queue_depth_peak, len(self.queue))
             if not self.queue and self.scheduler.n_in_flight == 0:
                 if not pending:
                     break
@@ -157,13 +327,24 @@ class Server:
                 continue
             demand_backed_up = bool(self.queue)
             self._admit_ready()
+            self._update_tier()
             if self.scheduler.n_in_flight == 0:
                 # everything queued was rejected at admission: nothing to
                 # step (and no occupancy sample to take)
                 continue
             if t_start is None:
                 t_start = time.perf_counter()
-            rec = self.scheduler.step()
+            try:
+                rec = self.scheduler.step()
+            except FaultError:
+                # injected step-boundary fault: the compiled step never ran,
+                # the table is unadvanced — count it, burn one loop
+                # iteration against max_steps (bounding retry storms) and
+                # retry WITHOUT advancing the virtual clock, so arrival
+                # timing and every request's tokens are unchanged
+                self._step_faults += 1
+                steps += 1
+                continue
             run_records.append(rec)
             now = time.perf_counter()
             if demand_backed_up:
@@ -175,6 +356,17 @@ class Server:
             steps += 1
             if on_step is not None:
                 on_step(self, rec)
+        # flush: anything still queued or in-flight at exit (max_steps hit)
+        # becomes an errored completion instead of being silently stranded
+        while self.queue:
+            req = self.queue.popleft()
+            queued = self._queued_at.pop(req.req_id, self.step_i)
+            self._reject(req, "server_stopped",
+                         "server stopped before admission", queued_at=queued)
+        drained = self.scheduler.drain("server_stopped")
+        if drained:
+            completions.extend(drained)
+            t_end = time.perf_counter()
         # latency accounting from completion records: token i's latency is
         # the gap between consecutive emissions; completions record only the
         # first/last stamps, so spread the post-first-token budget evenly —
@@ -191,18 +383,42 @@ class Server:
                 per = (comp.done_time - comp.first_token_time) / (n - 1)
                 token_lat.extend([per] * (n - 1))
         total_tokens = sum(len(c.tokens) for c in completions)
-        wall = (t_end - t_start) if (t_start and t_end) else float("nan")
+        wall = (t_end - t_start) \
+            if (t_start is not None and t_end is not None) else float("nan")
         n_probe = self.scheduler.engine.cfg.partition.n_probe
         live = [r for r in run_records if r["n_active"] > 0]
         occ = [r["occupancy"] for r in live]
         waits = self._run_waits
         completions.extend(self._rejected)
+        self._run_waits = []
+        self._rejected = []
         fills: dict = {}
         for r in live:
             if r["head_live"] > 0:
                 fills.setdefault(r["n_active"], []).append(
                     r["head_live"] / (r["n_active"] * n_probe))
         dedup = [x for v in fills.values() for x in v]
+        rejects: Dict[str, int] = {}
+        for c in completions:
+            if c.error is not None:
+                reason = c.reason or "error"
+                rejects[reason] = rejects.get(reason, 0) + 1
+        tokens_by_tier: Dict[str, int] = {}
+        health = {"flagged": 0, "nonfinite_z": 0, "empty_head": 0,
+                  "nonfinite_score": 0}
+        index_restores = 0
+        for r in run_records:
+            tier = r.get("tier", self.ladder[0])
+            tokens_by_tier[tier] = tokens_by_tier.get(tier, 0) \
+                + r.get("n_emitted", 0)
+            health["flagged"] += r.get("health_flagged", 0)
+            health["nonfinite_z"] += r.get("health_nonfinite_z", 0)
+            health["empty_head"] += r.get("health_empty_head", 0)
+            health["nonfinite_score"] += r.get("health_nonfinite_score", 0)
+            index_restores += int(r.get("index_restored", False))
+        degraded = sum(v for k, v in tokens_by_tier.items()
+                       if k != self.ladder[0])
+        n_errored = sum(1 for c in completions if c.error is not None)
         return ServerReport(
             completions=completions,
             wall_s=wall,
@@ -220,4 +436,13 @@ class Server:
             dedup_ratio_mean=float(np.mean(dedup)) if dedup else None,
             dedup_by_fill={k: float(np.mean(v))
                            for k, v in sorted(fills.items())},
-            queue_wait_steps_mean=float(np.mean(waits)) if waits else 0.0)
+            queue_wait_steps_mean=float(np.mean(waits)) if waits else 0.0,
+            rejects_by_reason=rejects,
+            shed_rate=n_errored / len(completions) if completions else 0.0,
+            queue_depth_peak=queue_depth_peak,
+            tokens_by_tier=tokens_by_tier,
+            degraded_token_frac=degraded / max(1, total_tokens),
+            tier_transitions=list(self.tier_transitions),
+            health=health,
+            index_restores=index_restores,
+            step_faults=self._step_faults)

@@ -1,0 +1,385 @@
+"""Chaos suite: overload policy + fault-injection harness (DESIGN.md SS14).
+
+The blast-radius contract under test: with any single injector active,
+every NON-injected request completes with tokens bit-identical to the
+fault-free run, nothing recompiles after warmup (fault masks are traced
+data; tier steps compile once each), and no NaN/Inf ever reaches an
+emitted log_prob / log_z. Overload policy: bounded queues shed instead of
+stalling, deadlines evict instead of hogging, degradation walks the tier
+ladder with hysteresis instead of flapping.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ServingConfig, reduced_config
+from repro.core.decode import (HEALTH_NONFINITE_Z, apply_health_guard,
+                               exact_topk_decode, mimps_decode)
+from repro.models import Model
+from repro.serve import (AdmissionFault, CorruptIndexFault, Engine,
+                         InfLogitsFault, NanLogitsFault, Request, Scheduler,
+                         Server, StepFault, generate, trace_arrivals)
+
+
+@pytest.fixture(scope="module")
+def served(rng):
+    """One shared engine (mimps, IVF engaged) for the whole module."""
+    cfg = reduced_config("qwen1.5-4b")
+    cfg = dataclasses.replace(
+        cfg, vocab=1024, partition=dataclasses.replace(
+            cfg.partition, method="mimps", block_rows=64, n_probe=4, l=64))
+    m = Model(cfg)
+    eng = Engine(m, m.init(jax.random.fold_in(rng, 42)), max_len=24)
+    return eng, cfg
+
+
+def _requests(cfg, rng, n=3, budget=4):
+    mk = lambda i, ln: np.asarray(
+        jax.random.randint(jax.random.fold_in(rng, 300 + i), (ln,), 0,
+                           cfg.vocab), np.int32)
+    return [Request(prompt=mk(i, 2 + i % 3), max_new_tokens=budget,
+                    key=jax.random.fold_in(rng, 400 + i),
+                    temperature=0.0 if i % 2 else 0.7)
+            for i in range(n)]
+
+
+def _tokens_by_id(rep):
+    return {c.request.req_id: c.tokens for c in rep.completions}
+
+
+def _baseline(eng, rng, reqs, **run_kw):
+    """Fault-free oracle: same requests, same scheduler key, no injector."""
+    server = Server(Scheduler(eng, n_slots=3, key=rng))
+    for r in reqs:
+        server.submit(r)
+    return server.run(**run_kw)
+
+
+def _assert_all_finite(rep):
+    for c in rep.completions:
+        assert np.all(np.isfinite(c.log_probs)), c.request.req_id
+        assert np.all(np.isfinite(c.log_zs)), c.request.req_id
+
+
+class TestHealthGuardUnit:
+    def test_identity_when_healthy_and_exact_when_flagged(self, served,
+                                                          rng):
+        """Healthy rows pass bit-unchanged; flagged rows get the exact
+        decode's outputs (fallback equivalence vs the exact backend)."""
+        eng, cfg = served
+        pc = cfg.partition
+        h = 0.1 * jax.random.normal(rng, (4, cfg.d_model)).astype(cfg.dtype)
+        w = eng.state.w
+        out = mimps_decode(eng.state.index, h, rng, n_probe=pc.n_probe,
+                           l=pc.l, k=pc.sample_k, use_pallas=False)
+        guarded, flags = apply_health_guard(out, w, h, pc.sample_k)
+        assert np.all(np.asarray(flags) == 0)
+        for a, b in zip(guarded, out):
+            if b is not None:
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # poison two rows; the guard must splice in the exact path there
+        bad = out._replace(
+            log_z=out.log_z.at[1].set(jnp.nan).at[3].set(jnp.inf))
+        guarded, flags = apply_health_guard(bad, w, h, pc.sample_k)
+        flags = np.asarray(flags)
+        assert flags[1] & HEALTH_NONFINITE_Z and flags[3] & HEALTH_NONFINITE_Z
+        assert flags[0] == flags[2] == 0
+        ex = exact_topk_decode(w, h, k=pc.sample_k, use_pallas=False)
+        for row in (1, 3):
+            assert np.isfinite(float(guarded.log_z[row]))
+            np.testing.assert_array_equal(np.asarray(guarded.log_z[row]),
+                                          np.asarray(ex.log_z[row]))
+            np.testing.assert_array_equal(np.asarray(guarded.top_id[row]),
+                                          np.asarray(ex.top_id[row]))
+        for row in (0, 2):   # untouched rows keep estimator outputs
+            np.testing.assert_array_equal(np.asarray(guarded.log_z[row]),
+                                          np.asarray(out.log_z[row]))
+
+    def test_active_mask_suppresses_padded_lanes(self, served, rng):
+        eng, cfg = served
+        pc = cfg.partition
+        h = 0.1 * jax.random.normal(rng, (3, cfg.d_model)).astype(cfg.dtype)
+        out = mimps_decode(eng.state.index, h, rng,
+                           n_probe=pc.n_probe, l=pc.l, k=pc.sample_k,
+                           use_pallas=False)
+        bad = out._replace(log_z=out.log_z.at[2].set(jnp.nan))
+        active = jnp.asarray([True, True, False])
+        guarded, flags = apply_health_guard(bad, eng.state.w, h,
+                                            pc.sample_k, active=active)
+        assert np.all(np.asarray(flags) == 0)   # padded lane doesn't count
+        # and the padded lane's garbage passes through untouched (identity)
+        assert not np.isfinite(float(guarded.log_z[2]))
+
+    def test_mince_solver_residual_diagnostic(self):
+        # the non-convergence check for the iterative MINCE paths: ~0 at a
+        # converged root, large away from it, non-finite on corrupted stats
+        from repro.core.mince import (MinceStats, solve_from_stats,
+                                      solver_residual)
+        stats = MinceStats(a_data=jnp.zeros(2),
+                           w_data=jnp.asarray([1.0, 0.0]),
+                           a_noise=jnp.zeros(2),
+                           w_noise=jnp.asarray([1.0, 0.0]),
+                           lo=jnp.float32(-20.0), hi=jnp.float32(20.0))
+        theta = solve_from_stats(stats, jnp.float32(5.0))
+        assert float(solver_residual(theta, stats)) < 1e-5
+        assert float(solver_residual(theta + 3.0, stats)) > 1e-2
+        bad = stats._replace(w_data=jnp.asarray([jnp.nan, 0.0]))
+        assert not bool(jnp.isfinite(solver_residual(theta, bad)))
+
+
+class TestLaneFaultInjection:
+    @pytest.mark.parametrize("fault_cls", [NanLogitsFault, InfLogitsFault])
+    def test_injected_lane_contained_neighbors_bit_identical(
+            self, served, rng, fault_cls):
+        """Acceptance: injector active -> every non-injected request
+        bit-identical to the fault-free run, zero recompiles, all emitted
+        outputs finite (the guard caught the corruption in-step)."""
+        eng, cfg = served
+        reqs = _requests(cfg, rng)
+        base = _tokens_by_id(_baseline(eng, rng, reqs))
+        victim = reqs[1]
+        inj = fault_cls([victim.req_id], steps=range(1, 20))
+        sched = Scheduler(eng, n_slots=3, key=rng, injector=inj)
+        server = Server(sched)
+        for r in reqs:
+            server.submit(r)
+        rep = server.run()
+        got = _tokens_by_id(rep)
+        assert len(got) == len(reqs)
+        for r in reqs:
+            if r.req_id != victim.req_id:
+                assert got[r.req_id] == base[r.req_id], \
+                    "fault leaked into a non-injected lane"
+        assert len(got[victim.req_id]) == victim.max_new_tokens
+        _assert_all_finite(rep)                  # guard caught every NaN/Inf
+        assert rep.health["flagged"] > 0
+        assert rep.health["nonfinite_z"] > 0
+        assert sched.step_traces == 1, "fault masks must be traced data"
+        assert sched.admit_traces == 1
+
+
+class TestIndexCorruption:
+    @pytest.mark.parametrize("mode", ["zero", "permute", "drift"])
+    def test_verify_restore_makes_all_requests_bit_identical(
+            self, served, rng, mode):
+        """A corrupted retrieval state (bad swap / bit-rot) is caught by the
+        digest BEFORE any step consumes it; the deterministic rebuild makes
+        EVERY request — not just neighbors — bit-identical to fault-free.
+        'permute' is the case a position-blind checksum would miss."""
+        eng, cfg = served
+        reqs = _requests(cfg, rng, n=3, budget=5)
+        base = _tokens_by_id(_baseline(eng, rng, reqs))
+        inj = CorruptIndexFault(at_step=3, mode=mode, n_blocks=2, seed=7)
+        sched = Scheduler(eng, n_slots=3, key=rng, injector=inj)
+        server = Server(sched, ServingConfig(verify_index_every=1))
+        for r in reqs:
+            server.submit(r)
+        rep = server.run()
+        assert inj.fired
+        assert rep.index_restores >= 1, "digest failed to catch corruption"
+        got = _tokens_by_id(rep)
+        for r in reqs:
+            assert got[r.req_id] == base[r.req_id], \
+                f"{mode}-corruption survived the restore"
+        _assert_all_finite(rep)
+        assert sched.step_traces == 1, "restore must reuse the executable"
+
+    def test_digest_is_permutation_sensitive(self, served):
+        """Unit pin for the checksum itself: swapping two IVF blocks must
+        change the digest even though every value is preserved."""
+        from repro.serve.engine import _digest
+        eng, _ = served
+        vb = np.array(eng.state.index.v_blocks)
+        ref = _digest(jnp.asarray(vb))
+        swapped = vb.copy()
+        swapped[[0, 1]] = swapped[[1, 0]]
+        assert _digest(jnp.asarray(swapped)) != ref
+        assert _digest(jnp.asarray(vb)) == ref   # deterministic recompute
+
+
+class TestHostFaults:
+    def test_admission_fault_rejects_cleanly(self, served, rng):
+        eng, cfg = served
+        reqs = _requests(cfg, rng)
+        base = _tokens_by_id(_baseline(eng, rng, reqs))
+        victim = reqs[0]
+        sched = Scheduler(eng, n_slots=3, key=rng,
+                          injector=AdmissionFault([victim.req_id]))
+        server = Server(sched)
+        for r in reqs:
+            server.submit(r)
+        rep = server.run()
+        by_id = {c.request.req_id: c for c in rep.completions}
+        assert by_id[victim.req_id].reason == "fault_injected"
+        assert by_id[victim.req_id].tokens == []
+        assert rep.rejects_by_reason == {"fault_injected": 1}
+        for r in reqs[1:]:
+            assert by_id[r.req_id].tokens == base[r.req_id]
+
+    def test_step_fault_retried_without_advancing_clock(self, served, rng):
+        """A transient step-boundary exception is counted + retried; the
+        table never advanced, so every request stays bit-identical."""
+        eng, cfg = served
+        reqs = _requests(cfg, rng)
+        base = _tokens_by_id(_baseline(eng, rng, reqs))
+        sched = Scheduler(eng, n_slots=3, key=rng,
+                          injector=StepFault([1, 3, 4]))
+        server = Server(sched)
+        for r in reqs:
+            server.submit(r)
+        rep = server.run()
+        assert rep.step_faults == 3
+        got = _tokens_by_id(rep)
+        for r in reqs:
+            assert got[r.req_id] == base[r.req_id]
+
+
+class TestDeadlines:
+    def test_queue_expiry_sheds_with_reason(self, served, rng):
+        """One slot, impatient requests: whoever can't be admitted before
+        its deadline is shed at the admission boundary — accounting always
+        balances (every submitted request resolves exactly once)."""
+        eng, cfg = served
+        reqs = _requests(cfg, rng, n=4, budget=6)
+        sched = Scheduler(eng, n_slots=1, key=rng)
+        server = Server(sched, ServingConfig(default_deadline=10))
+        for r in reqs:
+            server.submit(r)
+        rep = server.run()
+        assert len(rep.completions) == len(reqs)
+        shed = [c for c in rep.completions if c.reason == "deadline_queue"]
+        done = [c for c in rep.completions if c.error is None]
+        assert shed and done
+        assert all(c.tokens == [] for c in shed)
+        assert rep.rejects_by_reason["deadline_queue"] == len(shed)
+        # shed requests' queue wait is recorded too (satellite fix)
+        assert rep.queue_wait_steps_mean > 0
+
+    def test_mid_decode_eviction_leaves_neighbors_bit_identical(
+            self, served, rng):
+        """A lane evicted mid-decode recycles through the normal finished
+        path; the surviving lane's tokens are unchanged bit-for-bit and the
+        evicted lane keeps the partial prefix it already emitted."""
+        eng, cfg = served
+        keep = Request(prompt=[5, 9, 2], max_new_tokens=6,
+                       key=jax.random.fold_in(rng, 77), temperature=0.6)
+        evicted = Request(prompt=[8, 1], max_new_tokens=12, deadline=6,
+                          key=jax.random.fold_in(rng, 78), temperature=0.3)
+        solo_keep = [int(t) for t in np.asarray(generate(
+            eng, jnp.asarray(keep.prompt)[None], keep.max_new_tokens,
+            keep.key, temperature=keep.temperature))[0]]
+        solo_evicted = [int(t) for t in np.asarray(generate(
+            eng, jnp.asarray(evicted.prompt)[None],
+            evicted.max_new_tokens, evicted.key,
+            temperature=evicted.temperature))[0]]
+        server = Server(Scheduler(eng, n_slots=2, key=rng))
+        server.submit(keep)
+        server.submit(evicted)
+        rep = server.run()
+        by_id = {c.request.req_id: c for c in rep.completions}
+        assert by_id[keep.req_id].tokens == solo_keep
+        assert by_id[keep.req_id].error is None
+        ev = by_id[evicted.req_id]
+        assert ev.reason == "deadline_evicted"
+        assert 0 < len(ev.tokens) < evicted.max_new_tokens
+        # partial output is a PREFIX of what the request would have said —
+        # eviction truncates, it never rewrites
+        assert ev.tokens == solo_evicted[:len(ev.tokens)]
+        assert rep.rejects_by_reason == {"deadline_evicted": 1}
+
+
+class TestBackpressure:
+    def test_bounded_queue_sheds_at_the_door(self, served, rng):
+        eng, cfg = served
+        reqs = _requests(cfg, rng, n=6, budget=3)
+        sched = Scheduler(eng, n_slots=1, key=rng)
+        server = Server(sched, ServingConfig(max_queue=2))
+        for r in reqs:
+            server.submit(r)
+        rep = server.run()
+        assert len(rep.completions) == len(reqs)
+        # 2 fit the queue at the door (the slot drains them later); the
+        # other 4 shed immediately — bounded backlog, not unbounded wait
+        assert rep.rejects_by_reason.get("queue_full", 0) == 4
+        assert rep.queue_depth_peak <= 2
+        assert 0 < rep.shed_rate < 1
+        served_ok = [c for c in rep.completions if c.error is None]
+        assert len(served_ok) == 2
+
+    def test_max_steps_flushes_stranded_work(self, served, rng):
+        """Satellite fix: hitting max_steps used to strand queued and
+        in-flight requests silently; now everything resolves as an errored
+        'server_stopped' completion and the table is left clean."""
+        eng, cfg = served
+        reqs = _requests(cfg, rng, n=4, budget=6)
+        sched = Scheduler(eng, n_slots=2, key=rng)
+        server = Server(sched)
+        for r in reqs:
+            server.submit(r)
+        rep = server.run(max_steps=3)
+        assert len(rep.completions) == len(reqs)
+        stopped = [c for c in rep.completions
+                   if c.reason == "server_stopped"]
+        assert stopped, "stranded requests must be flushed, not dropped"
+        assert sched.n_in_flight == 0
+        assert sched.n_free == 2
+        # the flushed lanes' partial work is kept
+        assert rep.rejects_by_reason["server_stopped"] == len(stopped)
+
+
+class TestDegradation:
+    def test_ladder_walks_down_under_pressure_and_back_with_hysteresis(
+            self, served, rng):
+        """Sustained queue pressure steps the tier down (mimps -> topk);
+        drained pressure steps back up only after the calm debounce. The
+        monotone drain must produce a unimodal tier path — any down-move
+        after an up-move is flapping, which the hysteresis band forbids.
+        Each tier's step compiles exactly once."""
+        eng, cfg = served
+        long_req = Request(prompt=[3, 4], max_new_tokens=20,
+                           key=jax.random.fold_in(rng, 501))
+        shorts = _requests(cfg, rng, n=6, budget=2)
+        sched = Scheduler(eng, n_slots=2, key=rng)
+        server = Server(sched, ServingConfig(
+            degrade_high=3, degrade_low=1, degrade_after=2,
+            restore_after=4))
+        assert server.ladder == ("mimps", "topk")
+        server.submit(long_req)
+        for r in shorts:
+            server.submit(r)
+        rep = server.run()
+        assert len(rep.completions) == len(shorts) + 1
+        assert rep.tier_transitions, "pressure never engaged the ladder"
+        ladder_ix = [server.ladder.index(t) for _, t in rep.tier_transitions]
+        went_up = False
+        for prev, cur in zip([0] + ladder_ix, ladder_ix):
+            if cur < prev:
+                went_up = True
+            elif went_up:
+                pytest.fail(f"tier flapped: {rep.tier_transitions}")
+        assert rep.tokens_by_tier.get("topk", 0) > 0
+        assert rep.degraded_token_frac > 0
+        # the audit trail: some completion recorded serving below the top
+        # tier
+        assert any("topk" in c.tiers for c in rep.completions
+                   if c.error is None)
+        _assert_all_finite(rep)
+        # zero-recompile across the whole ladder: one compile per tier
+        assert all(v == 1 for v in sched.traces_by_tier.values()), \
+            sched.traces_by_tier
+        assert rep.index_restores == 0
+
+    def test_disabled_by_default(self, served, rng):
+        eng, cfg = served
+        reqs = _requests(cfg, rng, n=5, budget=2)
+        sched = Scheduler(eng, n_slots=1, key=rng)
+        server = Server(sched)   # default config: no watermarks
+        for r in reqs:
+            server.submit(r)
+        rep = server.run()
+        assert rep.tier_transitions == []
+        assert rep.degraded_token_frac == 0.0
+        assert set(rep.tokens_by_tier) == {"mimps"}

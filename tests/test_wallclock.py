@@ -192,13 +192,19 @@ class TestRegressionGate:
              dec["mimps"]["us_per_step"]}))
         (tmp_path / "BENCH_estimators.json").write_text(json.dumps(
             {"methods": methods}))
+        overload = {"shed_rate": 0.4, "p95_under_overload": 20.0,
+                    "degraded_token_frac": 0.5, "queue_depth_peak": 8,
+                    "max_queue": 8, "recompiles_after_warmup": 0}
         serving = {"goodput_tok_s": 600.0,
                    "sequential_goodput_tok_s": 150.0,
                    "speedup_vs_sequential": 4.0,
                    "p50_token_ms": 5.0, "p95_token_ms": 30.0,
                    "occupancy_steady": 0.9, "peak_concurrency": 8,
                    "token_parity_vs_solo": True,
-                   "recompiles_after_warmup": 0, **(srv or {})}
+                   "recompiles_after_warmup": 0,
+                   "overload": overload, **(srv or {})}
+        if srv and "overload" in srv:
+            serving["overload"] = {**overload, **srv["overload"]}
         (tmp_path / "BENCH_serving.json").write_text(json.dumps(serving))
         train = {"methods": {
             "fused_ce": {"tokens_per_s": 300.0, "us_per_step": 3000.0,
@@ -266,6 +272,33 @@ class TestRegressionGate:
                     {"recompiles_after_warmup": 2}):
             self._write(tmp_path, srv=bad)
             assert self._check(tmp_path, monkeypatch) >= 1, bad
+
+    def test_fails_on_broken_overload_invariants(self, tmp_path,
+                                                 monkeypatch):
+        """The PR-6 gate: no shedding at 2x demand, shedding everything, a
+        starved tail, a ladder that never engages, a leaky queue bound, or
+        a recompile under overload each fail --check on their own."""
+        import benchmarks.run as run
+        self._write(tmp_path)
+        monkeypatch.chdir(tmp_path)
+        monkeypatch.setattr(run, "BASELINE_PATH",
+                            str(tmp_path / "baseline.json"))
+        run.update_baseline()
+        assert self._check(tmp_path, monkeypatch) == 0
+        for bad in ({"shed_rate": 0.0},
+                    {"shed_rate": 1.0},
+                    {"p95_under_overload": float("inf")},
+                    {"degraded_token_frac": 0.0},
+                    {"queue_depth_peak": 9},
+                    {"recompiles_after_warmup": 1}):
+            self._write(tmp_path, srv={"overload": bad})
+            assert self._check(tmp_path, monkeypatch) >= 1, bad
+        # and a missing section entirely is itself a failure
+        self._write(tmp_path)
+        rep = json.loads((tmp_path / "BENCH_serving.json").read_text())
+        del rep["overload"]
+        (tmp_path / "BENCH_serving.json").write_text(json.dumps(rep))
+        assert self._check(tmp_path, monkeypatch) >= 1
 
     def test_fails_on_broken_train_invariants(self, tmp_path, monkeypatch):
         """The PR-5 gate: dense-ish embedding-grad floats, a gradient that
