@@ -20,7 +20,10 @@ cosine >= 0.99, final loss within 5%, and zero recompiles across index
 refreshes (PR 5); under 2x sustained overload the server sheds (0 <
 shed_rate < 1), keeps a finite p95, engages the degradation ladder
 (degraded_token_frac > 0), respects the queue bound, and never recompiles
-(PR 6). Refresh the baseline after a *deliberate* perf change with:
+(PR 6); the mesh-sharded scheduler step keeps token parity and zero
+recompiles at every (data, model) mesh shape with tokens-per-step goodput
+monotone along the 1/2/4/8-device chain (PR 7). Refresh the baseline after
+a *deliberate* perf change with:
 
   PYTHONPATH=src python -m benchmarks.run --update-baseline
 """
@@ -74,6 +77,11 @@ def _snapshot():
                            for m, r in est["methods"].items()},
             "serving": {"goodput_tok_s": srv["goodput_tok_s"],
                         "p95_token_ms": srv["p95_token_ms"]},
+            "serving_scaling": {
+                f"{r['data']}x{r['model']}": {
+                    "tok_per_step": r["tok_per_step"],
+                    "goodput_tok_s": r["goodput_tok_s"]}
+                for r in srv.get("scaling", {}).get("rows", [])},
             "train": {m: {"tokens_per_s": r["tokens_per_s"],
                           "us_per_step": r["us_per_step"]}
                       for m, r in trn["methods"].items()}}
@@ -246,6 +254,52 @@ def check() -> int:
                 f"recompiles under overload (tier switches must reuse the "
                 f"per-tier executables compiled at warmup)")
 
+    # mesh-scaling acceptance invariants (exact, PR 7): the sharded
+    # scheduler step must keep tokens bit-identical to solo generate() and
+    # recompile nothing at EVERY mesh shape, and goodput on the virtual
+    # step clock (tokens per compiled step — the hardware-independent
+    # scaling quantity; wall clock on forced host devices measures core
+    # contention, see serving_bench._scaling) must be monotone
+    # non-decreasing along the data chain with 8 devices beating 1.
+    sc = srv.get("scaling")
+    if not sc or not sc.get("rows"):
+        failures.append("serving: scaling curve missing from artifact")
+    else:
+        rows = sc["rows"]
+        devices = {r["devices"] for r in rows}
+        if not {1, 2, 4, 8} <= devices:
+            failures.append(
+                f"serving.scaling: curve covers devices {sorted(devices)}, "
+                f"needs {{1, 2, 4, 8}}")
+        for r in rows:
+            shape = f"data={r['data']},model={r['model']}"
+            if not r["token_parity"]:
+                failures.append(
+                    f"serving.scaling[{shape}]: tokens differ from solo "
+                    f"generate() — sharding broke per-request sampling")
+            if r["recompiles_after_warmup"] != 0:
+                failures.append(
+                    f"serving.scaling[{shape}]: "
+                    f"{r['recompiles_after_warmup']} recompiles after "
+                    f"warmup (one executable must serve every mesh shape's "
+                    f"traffic)")
+            if r["occupancy_steady"] <= 0.5:
+                failures.append(
+                    f"serving.scaling[{shape}]: steady occupancy "
+                    f"{r['occupancy_steady']:.2f} <= 0.5 — replica routing "
+                    f"is starving lanes")
+        chain = sorted((r["devices"], r["tok_per_step"]) for r in rows
+                       if r["model"] == 1)
+        if any(b[1] < a[1] for a, b in zip(chain, chain[1:])):
+            failures.append(
+                f"serving.scaling: tok_per_step not monotone along the "
+                f"data chain: {[(d, round(t, 1)) for d, t in chain]}")
+        if chain and not chain[-1][1] > chain[0][1]:
+            failures.append(
+                f"serving.scaling: goodput at 8 devices "
+                f"({chain[-1][1]:.1f} tok/step) must beat 1 device "
+                f"({chain[0][1]:.1f} tok/step)")
+
     if failures:
         print("== bench regression check: FAIL ==")
         for f in failures:
@@ -268,6 +322,14 @@ def check() -> int:
                   f"{ov['degraded_token_frac']:.2f}, queue peak "
                   f"{ov['queue_depth_peak']}/{ov['max_queue']}, "
                   f"recompiles {ov['recompiles_after_warmup']}")
+        sc = srv.get("scaling", {})
+        if sc.get("rows"):
+            curve = ", ".join(
+                f"{r['devices']}dev:{r['tok_per_step']:.1f}"
+                for r in sc["rows"] if r["model"] == 1)
+            print(f"  serving.scaling: tok/step {curve} "
+                  f"({sc['goodput_scaling_8v1']:.2f}x at 8 devices, "
+                  f"parity+0 recompiles at every shape)")
         print(f"  train: grad floats {trn['grad_float_ratio']:.3f}x fused, "
               f"grad cosine {tm['grad_cosine_vs_full']:.4f}, loss "
               f"{trn['loss_ratio_vs_fused']:.3f}x, refreshes "
@@ -348,7 +410,8 @@ def main() -> None:
                    f"parity={rep['token_parity_vs_solo']};"
                    f"recompiles={rep['recompiles_after_warmup']};"
                    f"shed={rep['overload']['shed_rate']:.2f};"
-                   f"degraded={rep['overload']['degraded_token_frac']:.2f}")
+                   f"degraded={rep['overload']['degraded_token_frac']:.2f};"
+                   f"scale8v1={rep['scaling']['goodput_scaling_8v1']:.2f}x")
     if sel("train"):
         rep, us = train_bench.run(quick=quick)
         tm = rep["methods"]["mimps_ce"]

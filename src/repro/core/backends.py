@@ -52,16 +52,26 @@ class BackendState:
 
 
 def _build_index(cfg: PartitionConfig, w: jax.Array, key: jax.Array,
-                 device: bool = False) -> Optional[_mips.IVFIndex]:
+                 device: bool = False,
+                 block_multiple: int = 1) -> Optional[_mips.IVFIndex]:
     """Block-IVF over the output embedding; skipped for tiny vocabularies
     (the exact pass is already cheaper than a probe there). ``device=True``
     uses the jittable fixed-capacity build (``mips.build_ivf_device``) whose
     shapes depend only on (V, block_rows, n_clusters) — the prerequisite
-    for rebuilding the index under a live server without recompiling."""
+    for rebuilding the index under a live server without recompiling.
+
+    ``block_multiple`` pads the block axis with dead blocks so it divides
+    the serving mesh's model-parallel degree (``mips.pad_ivf_blocks``) —
+    applied HERE, before any state derived from the blocks (FMBE's
+    per-block lambdas index by block id), so every downstream shape is
+    consistently padded."""
     if w.shape[0] >= 4 * cfg.block_rows:
         build = _mips.build_ivf_device if device else _mips.build_ivf
-        return build(key, w, block_rows=cfg.block_rows,
-                     n_clusters=cfg.n_clusters)
+        index = build(key, w, block_rows=cfg.block_rows,
+                      n_clusters=cfg.n_clusters)
+        if block_multiple > 1:
+            index = _mips.pad_ivf_blocks(index, block_multiple)
+        return index
     return None
 
 
@@ -70,27 +80,30 @@ class EstimatorBackend:
     sublinear: bool = False       # True -> decode cost independent of V*d
 
     def build(self, cfg: PartitionConfig, w: jax.Array, key: jax.Array,
-              *, with_index: bool = True,
-              device: bool = False) -> BackendState:
+              *, with_index: bool = True, device: bool = False,
+              block_multiple: int = 1) -> BackendState:
         """with_index=False skips the kmeans IVF build for callers that only
         need the estimate (the per-query accuracy studies); serving always
         builds it — it supplies the sampling candidates. ``device=True``
         selects the fixed-capacity jittable index build (shape-stable
-        across rebuilds — required for ``Engine.swap_index``)."""
+        across rebuilds — required for ``Engine.swap_index``).
+        ``block_multiple`` pads the index block axis to a multiple (mesh
+        serving: the model-parallel degree, so v_blocks shards evenly)."""
         return BackendState(w=w)
 
     def refresh(self, state: BackendState, cfg: PartitionConfig,
-                w: jax.Array, key: jax.Array, *,
-                device: bool = True) -> BackendState:
+                w: jax.Array, key: jax.Array, *, device: bool = True,
+                block_multiple: int = 1) -> BackendState:
         """Rebuild the retrieval state from a NEW embedding — the
         ``Engine.swap_index`` entry point. With ``device=True`` (the
         fixed-capacity index build) the result has an IDENTICAL pytree
         structure/shapes to a same-config ``build``, so compiled steps
         that take the state as an argument keep their executables; that is
-        the hot-swap contract. ``device`` mirrors how the engine was
-        built."""
+        the hot-swap contract. ``device``/``block_multiple`` mirror how the
+        engine was built."""
         del state
-        return self.build(cfg, w, key, device=device)
+        return self.build(cfg, w, key, device=device,
+                          block_multiple=block_multiple)
 
     def decode(self, state: BackendState, h: jax.Array, key: jax.Array,
                cfg: PartitionConfig, *, k: int = 1,
@@ -103,6 +116,20 @@ class EstimatorBackend:
         batching): probe paths keep masked rows out of the dedup'd union
         (core.decode.make_plan), dense paths ignore it."""
         raise NotImplementedError
+
+    def shard_decode(self, state: BackendState, h: jax.Array,
+                     key: jax.Array, cfg: PartitionConfig, *, k: int = 1,
+                     active: Optional[jax.Array] = None,
+                     axis_name: str = "model") -> DecodeOut:
+        """Mesh-serving twin of ``decode``: runs INSIDE the scheduler's
+        shard_map step, with ``state`` partitioned per
+        ``state_partition_specs`` (w rows / index v_blocks local to the
+        ``axis_name`` shard, all metadata replicated). Same DecodeOut
+        contract; the IVF paths are bit-identical to their single-device
+        ``decode`` (serve.output_layer mesh bodies). XLA-only — the mesh
+        step never takes the Pallas kernels, so no ``kernel_cfg``."""
+        raise NotImplementedError(
+            f"backend {self.method!r} has no mesh serving path")
 
     def tune(self, state: BackendState, cfg: PartitionConfig, h: jax.Array,
              key: jax.Array, *, path=None) -> dict:
@@ -149,6 +176,28 @@ def get_backend(method: str) -> EstimatorBackend:
         ) from None
 
 
+def state_partition_specs(state: BackendState, n_model: int):
+    """PartitionSpec tree for a BackendState entering the mesh serving step.
+
+    Only the O(V d) payloads shard over 'model': the embedding rows ``w``
+    and the IVF ``v_blocks`` block axis. Every per-block metadata leaf
+    (centroids, radius, valid, row_id, slot_of_row) and the FMBE sketch is
+    replicated — that is what lets the shard_map bodies run the verbatim
+    single-device plan (probe/dedup/trim/tail) and fetch rows with one
+    psum (``serve.output_layer``). Falls back to full replication when a
+    payload doesn't divide ``n_model`` (the engine enforces divisibility
+    up front for real meshes)."""
+    from jax.sharding import PartitionSpec as P
+    specs = jax.tree.map(lambda _: P(), state)
+    repl = {}
+    if state.w.shape[0] % n_model == 0:
+        repl["w"] = P("model", None)
+    if (state.index is not None
+            and state.index.v_blocks.shape[0] % n_model == 0):
+        repl["index"] = specs.index._replace(v_blocks=P("model", None, None))
+    return dataclasses.replace(specs, **repl)
+
+
 def _head_floats(state: BackendState, cfg: PartitionConfig, q: int,
                  u: Optional[int]) -> int:
     """Centroid scan + deduplicated head blocks + query rows."""
@@ -170,6 +219,15 @@ class ExactBackend(EstimatorBackend):
         return exact_topk_decode(state.w, h, k=k, use_pallas=use_pallas,
                                  active=active, **kernel_cfg)
 
+    def shard_decode(self, state, h, key, cfg, *, k=1, active=None,
+                     axis_name="model"):
+        # serve.output_layer imported lazily at trace time: serve is already
+        # loaded whenever a mesh step exists, and core must not import serve
+        # at module scope
+        from ..serve.output_layer import mesh_exact_decode
+        return mesh_exact_decode(state.w, h, k=k, active=active,
+                                 axis_name=axis_name)
+
     def tune(self, state, cfg, h, key, *, path=None):
         from ..kernels.autotune import tune_topk_z
         return tune_topk_z(h, state.w, 1, path=path)
@@ -184,6 +242,12 @@ class SelfnormBackend(EstimatorBackend):
         return selfnorm_decode(state.w, h, k=k, use_pallas=use_pallas,
                                active=active, **kernel_cfg)
 
+    def shard_decode(self, state, h, key, cfg, *, k=1, active=None,
+                     axis_name="model"):
+        from ..serve.output_layer import mesh_selfnorm_decode
+        return mesh_selfnorm_decode(state.w, h, k=k, active=active,
+                                    axis_name=axis_name)
+
     tune = ExactBackend.tune
 
 
@@ -192,9 +256,11 @@ class MimpsBackend(EstimatorBackend):
     method = "mimps"
     sublinear = True
 
-    def build(self, cfg, w, key, *, with_index=True, device=False):
+    def build(self, cfg, w, key, *, with_index=True, device=False,
+              block_multiple=1):
         return BackendState(
-            w=w, index=_build_index(cfg, w, key, device=device)
+            w=w, index=_build_index(cfg, w, key, device=device,
+                                    block_multiple=block_multiple)
             if with_index else None)
 
     def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
@@ -205,6 +271,16 @@ class MimpsBackend(EstimatorBackend):
                             l=cfg.l, k=k, head_cap=cfg.head_cap,
                             use_pallas=use_pallas, active=active,
                             **kernel_cfg)
+
+    def shard_decode(self, state, h, key, cfg, *, k=1, active=None,
+                     axis_name="model"):
+        from ..serve.output_layer import (mesh_exact_decode,
+                                          mesh_mimps_decode)
+        if state.index is None:
+            return mesh_exact_decode(state.w, h, k=k, axis_name=axis_name)
+        return mesh_mimps_decode(state.index, h, key, n_probe=cfg.n_probe,
+                                 l=cfg.l, k=k, head_cap=cfg.head_cap,
+                                 active=active, axis_name=axis_name)
 
     def tune(self, state, cfg, h, key, *, path=None):
         if state.index is None:
@@ -230,9 +306,11 @@ class MinceBackend(EstimatorBackend):
     method = "mince"
     sublinear = True
 
-    def build(self, cfg, w, key, *, with_index=True, device=False):
+    def build(self, cfg, w, key, *, with_index=True, device=False,
+              block_multiple=1):
         return BackendState(
-            w=w, index=_build_index(cfg, w, key, device=device)
+            w=w, index=_build_index(cfg, w, key, device=device,
+                                    block_multiple=block_multiple)
             if with_index else None)
 
     def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
@@ -244,6 +322,18 @@ class MinceBackend(EstimatorBackend):
                             solver=cfg.mince_solver, head_cap=cfg.head_cap,
                             use_pallas=use_pallas, active=active,
                             **kernel_cfg)
+
+    def shard_decode(self, state, h, key, cfg, *, k=1, active=None,
+                     axis_name="model"):
+        from ..serve.output_layer import (mesh_exact_decode,
+                                          mesh_mince_decode)
+        if state.index is None:
+            return mesh_exact_decode(state.w, h, k=k, axis_name=axis_name)
+        return mesh_mince_decode(state.index, h, key, n_probe=cfg.n_probe,
+                                 l=cfg.l, k=k, iters=cfg.mince_iters,
+                                 solver=cfg.mince_solver,
+                                 head_cap=cfg.head_cap, active=active,
+                                 axis_name=axis_name)
 
     def tune(self, state, cfg, h, key, *, path=None):
         if state.index is None:
@@ -281,6 +371,16 @@ class TopkBackend(EstimatorBackend):
                                 use_pallas=use_pallas, active=active,
                                 **kernel_cfg)
 
+    def shard_decode(self, state, h, key, cfg, *, k=1, active=None,
+                     axis_name="model"):
+        from ..serve.output_layer import (mesh_exact_decode,
+                                          mesh_topk_decode)
+        if state.index is None:
+            return mesh_exact_decode(state.w, h, k=k, axis_name=axis_name)
+        return mesh_topk_decode(state.index, h, key, n_probe=cfg.n_probe,
+                                k=k, head_cap=cfg.head_cap, active=active,
+                                axis_name=axis_name)
+
     tune = MinceBackend.tune                 # same union-score kernel
 
     def embedding_floats(self, state, cfg, q, u=None):
@@ -292,11 +392,16 @@ class FmbeBackend(EstimatorBackend):
     method = "fmbe"
     sublinear = True
 
-    def build(self, cfg, w, key, *, with_index=True, device=False):
+    def build(self, cfg, w, key, *, with_index=True, device=False,
+              block_multiple=1):
         kf, ki = jax.random.split(key)
         fm = make_feature_map(kf, w.shape[-1], cfg.fmbe_features,
                               max_degree=cfg.fmbe_max_degree, p=cfg.fmbe_p)
-        index = _build_index(cfg, w, ki, device=device) \
+        # index already padded to block_multiple here, so the per-block
+        # lambda table below lines up with padded block ids (pad blocks are
+        # all-invalid -> zero lambda rows, lambda_tilde unchanged)
+        index = _build_index(cfg, w, ki, device=device,
+                             block_multiple=block_multiple) \
             if with_index else None
         if index is not None:
             # block-partitioned lambdas (the exact-head/sketch-tail hybrid);
@@ -319,6 +424,20 @@ class FmbeBackend(EstimatorBackend):
                            n_probe=cfg.n_probe, k=k, head_cap=cfg.head_cap,
                            use_pallas=use_pallas, active=active,
                            **kernel_cfg)
+
+    def shard_decode(self, state, h, key, cfg, *, k=1, active=None,
+                     axis_name="model"):
+        from ..serve.output_layer import (mesh_exact_decode,
+                                          mesh_fmbe_decode)
+        if state.index is None:
+            from .feature_maps import fmbe_z_batch
+            out = mesh_exact_decode(state.w, h, k=k, axis_name=axis_name)
+            z = fmbe_z_batch(state.fmbe, h)       # sketch is replicated
+            return out._replace(log_z=jnp.log(jnp.maximum(z, 1e-30)))
+        return mesh_fmbe_decode(state.fmbe, state.index, h, key,
+                                n_probe=cfg.n_probe, k=k,
+                                head_cap=cfg.head_cap, active=active,
+                                axis_name=axis_name)
 
     def tune(self, state, cfg, h, key, *, path=None):
         from ..kernels.autotune import tune_fmbe_z

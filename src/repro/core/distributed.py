@@ -36,11 +36,20 @@ def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
                       check_rep=check_vma)
 
 
+def logspace_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """psum of exp(x) carried in log domain, -inf-safe.
+
+    The one cross-shard combine every sharded estimator body uses for
+    partial log-Z terms (head LSEs, tail LSEs, anchored sums)."""
+    m = lax.pmax(x, axis_name)
+    safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    s = lax.psum(jnp.exp(x - safe), axis_name)
+    return jnp.where(jnp.isfinite(m), safe + jnp.log(s), m)
+
+
 def _dist_lse(local_lse: jax.Array, axis_name: str) -> jax.Array:
     """logsumexp across shards from per-shard logsumexps."""
-    m = lax.pmax(local_lse, axis_name)
-    s = lax.psum(jnp.exp(local_lse - m), axis_name)
-    return m + jnp.log(s)
+    return logspace_psum(local_lse, axis_name)
 
 
 def sharded_exact_log_z(v_local: jax.Array, q: jax.Array,

@@ -279,3 +279,32 @@ def exact_top_k(v: jax.Array, q: jax.Array, k: int):
     s = v @ q
     vals, ids = jax.lax.top_k(s, k)
     return vals, ids
+
+
+def pad_ivf_blocks(index: IVFIndex, multiple: int) -> IVFIndex:
+    """Pad the block axis with dead (all-pad) blocks so n_blocks % multiple
+    == 0 — required before sharding the block dim over a model axis of that
+    extent. Dead blocks are invisible to every consumer: ``probe`` ranks
+    them -inf (valid.any() is False), scoring masks them, and the engine's
+    position-weighted digest is unchanged (zero rows x zero valid). Row
+    slots don't move, so ``slot_of_row`` and the packed rows stay bitwise
+    identical — scores over real rows are unaffected.
+    """
+    nb, br, d = index.v_blocks.shape
+    pad = (-nb) % multiple
+    if pad == 0:
+        return index
+    return index._replace(
+        v_blocks=jnp.concatenate(
+            [index.v_blocks,
+             jnp.zeros((pad, br, d), index.v_blocks.dtype)]),
+        valid=jnp.concatenate(
+            [index.valid, jnp.zeros((pad, br), bool)]),
+        row_id=jnp.concatenate(
+            [index.row_id, jnp.full((pad, br), -1, index.row_id.dtype)]),
+        block_centroids=jnp.concatenate(
+            [index.block_centroids,
+             jnp.zeros((pad, d), index.block_centroids.dtype)]),
+        block_radius=jnp.concatenate(
+            [index.block_radius,
+             jnp.zeros((pad,), index.block_radius.dtype)]))

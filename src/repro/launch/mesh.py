@@ -15,19 +15,60 @@ pure-DP 'pod'):
 """
 from __future__ import annotations
 
+import math
 import re
-from typing import Any
+from typing import Any, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 
+def best_mesh_shape(n_devices: int, model_parallel: int) -> Tuple[int, int]:
+    """(data, model) factorization for the devices we actually have.
+
+    THE shared topology rule: train-time elastic rebuilds
+    (``train.elastic.make_elastic_mesh``) and the serving mesh
+    (``make_mesh_2d`` / ``make_serving_mesh``) both factor through here, so
+    both sides agree on axis names and shapes for any device count. Shrinks
+    the model axis only when the device count drops below the requested TP
+    degree."""
+    mp = min(model_parallel, n_devices)
+    while n_devices % mp:
+        mp -= 1
+    return n_devices // mp, mp
+
+
+def make_mesh_2d(shape: Tuple[int, int],
+                 devices: Optional[List] = None) -> Mesh:
+    """The one (data, model) mesh constructor. ``devices=None`` lets
+    ``jax.make_mesh`` pick a performant device order over the whole slice;
+    an explicit list (elastic rebuilds from survivors, serving's
+    ``--mesh data=K,model=M`` on a subset) is reshaped as given."""
+    dp, mp = shape
+    if devices is None:
+        return jax.make_mesh((dp, mp), ("data", "model"))
+    import numpy as np
+    dev_array = np.asarray(devices[:dp * mp]).reshape(dp, mp)
+    return Mesh(dev_array, ("data", "model"))
+
+
+def make_serving_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Serving mesh over the first data*model local devices (launch/serve.py
+    ``--mesh data=K,model=M``)."""
+    need = data * model
+    devs = jax.devices()
+    if need > len(devs):
+        raise ValueError(
+            f"mesh data={data},model={model} needs {need} devices but only "
+            f"{len(devs)} are visible")
+    return make_mesh_2d((data, model), devs[:need])
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    if multi_pod:
+        return jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+    return make_mesh_2d((16, 16))
 
 
 def data_axes(mesh: Mesh):
@@ -35,7 +76,9 @@ def data_axes(mesh: Mesh):
 
 
 def data_size(mesh: Mesh) -> int:
-    return int(jnp.prod(jnp.array([mesh.shape[a] for a in data_axes(mesh)])))
+    # math.prod, not jnp.prod: this runs on host-side python ints and the
+    # module promises import-time (and call-time) device purity
+    return math.prod(mesh.shape[a] for a in data_axes(mesh))
 
 
 def batch_axis_for(mesh: Mesh, batch: int):
@@ -164,6 +207,32 @@ def decode_state_shardings(mesh: Mesh, struct: Any, batch: int) -> Any:
     return jax.tree_util.tree_map_with_path(
         lambda p, x: NamedSharding(mesh, decode_state_spec(p, x, mesh,
                                                            batch)), struct)
+
+
+# ---------------------------------------------------------------------------
+# serving (slot-scheduler) cache specs
+# ---------------------------------------------------------------------------
+
+def serve_cache_spec(path, leaf) -> P:
+    """PartitionSpec for one slot-table KV/state-cache leaf under the
+    serving mesh: the batch (slot-lane) dim shards over 'data', everything
+    else stays replicated. Unlike ``decode_state_spec`` there is no
+    model-axis sharding inside the transformer state — the serving mesh's
+    'model' axis shards only the output layer (embedding rows / IVF
+    blocks), so each model shard holds its data-replica's full cache and
+    the decode_step body needs no collectives. Layouts mirror
+    ``decode_state_spec`` (batch at -4 for k/v/wkv/ssm, -2 for the token
+    shifts, -3 for conv states)."""
+    s = _path_str(path)
+    name = s.split("/")[-1]
+    nd = leaf.ndim
+    if name in ("k", "v", "wkv", "ssm"):
+        return _pad(nd, ["data", None, None, None])
+    if name in ("tm_last", "cm_last"):
+        return _pad(nd, ["data", None])
+    if name in ("conv_x", "conv_bc"):
+        return _pad(nd, ["data", None, None])
+    return _pad(nd, [])
 
 
 # ---------------------------------------------------------------------------

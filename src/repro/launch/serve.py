@@ -73,6 +73,12 @@ def main():
                          "request decodes greedily)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--mesh", default=None, metavar="data=K,model=M",
+                    help="scale out over a (data, model) device mesh: slot "
+                         "lanes split across K replicas, the output "
+                         "embedding + IVF index across M shards, one "
+                         "shard_map step (requires K*M visible devices; "
+                         "tokens stay bit-identical to single-device)")
     ap.add_argument("--max-queue", type=int, default=0,
                     help="bound the admission queue; arrivals over the "
                          "bound are shed with reason 'queue_full' "
@@ -116,14 +122,27 @@ def main():
         cfg = dataclasses.replace(
             cfg, partition=dataclasses.replace(cfg.partition,
                                                method=args.method))
+    mesh = None
+    if args.mesh:
+        from .mesh import make_serving_mesh
+        kv = dict(part.split("=", 1) for part in args.mesh.split(","))
+        unknown = set(kv) - {"data", "model"}
+        if unknown:
+            raise SystemExit(f"--mesh keys must be data/model, got "
+                             f"{sorted(unknown)}")
+        mesh = make_serving_mesh(data=int(kv.get("data", 1)),
+                                 model=int(kv.get("model", 1)))
+
     model = Model(cfg)
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
     max_len = args.prompt_len_max + args.gen + 1
     eng = Engine(model, params, max_len=max_len, key=key,
-                 use_pallas=args.use_pallas)
+                 use_pallas=args.use_pallas, mesh=mesh)
+    mesh_note = "" if mesh is None else \
+        f"  mesh data={mesh.shape['data']},model={mesh.shape['model']}"
     print(f"arch {cfg.name}  Z-method {cfg.partition.method}  "
-          f"vocab {cfg.vocab}  slots {args.slots}")
+          f"vocab {cfg.vocab}  slots {args.slots}{mesh_note}")
 
     if cfg.n_codebooks:
         # audio codebook heads have no slot-table path (multi-stream

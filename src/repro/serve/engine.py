@@ -64,7 +64,8 @@ class Engine:
     def __init__(self, model: Model, params, max_len: int,
                  key: Optional[jax.Array] = None, use_pallas: bool = False,
                  autotune: bool = False, autotune_batch: int = 64,
-                 device_index: bool = False, health_guard: bool = False):
+                 device_index: bool = False, health_guard: bool = False,
+                 mesh=None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -72,6 +73,32 @@ class Engine:
         self.use_pallas = use_pallas
         self.device_index = device_index
         self.health_guard = health_guard
+        # (data, model) serving mesh (launch.mesh.make_serving_mesh) — the
+        # slot scheduler runs its one compiled step under shard_map on it.
+        # The engine's own jitted paths (generate(), prefill) stay
+        # single-device: they are the parity oracle the mesh step is
+        # measured against.
+        self.mesh = mesh
+        if mesh is not None:
+            for ax in ("data", "model"):
+                if ax not in mesh.axis_names:
+                    raise ValueError(
+                        f"serving mesh must have ('data','model') axes, got "
+                        f"{mesh.axis_names}")
+            m = mesh.shape["model"]
+            if use_pallas:
+                raise ValueError(
+                    "mesh serving runs the XLA estimator bodies under "
+                    "shard_map; use_pallas is single-device only")
+            if self.cfg.n_codebooks:
+                raise ValueError("mesh serving does not support audio heads")
+            if m > 1 and self.cfg.vocab % m:
+                raise ValueError(
+                    f"vocab {self.cfg.vocab} must divide the model-parallel "
+                    f"degree {m} to shard the output embedding rows")
+            self._block_multiple = m
+        else:
+            self._block_multiple = 1
         pc = self.cfg.partition
         key = key if key is not None else jax.random.PRNGKey(0)
         self._build_key = key
@@ -83,8 +110,9 @@ class Engine:
             # audio: small per-codebook vocab, exact softmax per codebook
             self.state = None
         else:
-            self.state = self.backend.build(pc, model.head_matrix(params),
-                                            key, device=device_index)
+            self.state = self.backend.build(
+                pc, model.head_matrix(params), key, device=device_index,
+                block_multiple=self._block_multiple)
         self.index = self.state.index if self.state is not None else None
         # degradation-tier states (serve.server tier ladder) + integrity
         # digests, recorded at every build/swap/restore
@@ -131,8 +159,9 @@ class Engine:
             self._scan_runners = {}
             return
         w = self.model.head_matrix(params)
-        new_state = self.backend.refresh(self.state, self.cfg.partition, w,
-                                         key, device=self.device_index)
+        new_state = self.backend.refresh(
+            self.state, self.cfg.partition, w, key, device=self.device_index,
+            block_multiple=self._block_multiple)
         if self.state is not None and self.device_index:
             old = jax.tree.map(lambda x: (x.shape, x.dtype)
                                if hasattr(x, "shape") else x, self.state)
@@ -185,7 +214,8 @@ class Engine:
             return BackendState(w=self.state.w, index=self.state.index)
         return backend.build(self.cfg.partition,
                              self.model.head_matrix(self.params),
-                             self._build_key, device=self.device_index)
+                             self._build_key, device=self.device_index,
+                             block_multiple=self._block_multiple)
 
     def verify_and_restore(self, method: Optional[str] = None) -> bool:
         """Checksum ``method``'s retrieval state against the digest recorded
@@ -215,8 +245,9 @@ class Engine:
             return
         key = key if key is not None else self._build_key
         w = self.model.head_matrix(self.params)
-        self.state = self.backend.build(self.cfg.partition, w, key,
-                                        device=self.device_index)
+        self.state = self.backend.build(
+            self.cfg.partition, w, key, device=self.device_index,
+            block_multiple=self._block_multiple)
         self.index = self.state.index
         self._tier_states = {}
         self._digests = {}

@@ -324,6 +324,278 @@ SHARDED_BACKENDS = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Mesh-serving bodies (DESIGN.md SS15): full DecodeOut inside the scheduler's
+# one shard_map step, bit-identical to the single-device core.decode paths
+# ---------------------------------------------------------------------------
+#
+# The dry-run bodies above shard EVERYTHING per shard (local probe, local
+# tail) and merge top-1 — right for throughput studies, but a serving lane
+# must emit the SAME tokens it would emit solo, and tokens come from the full
+# sorted top-k candidate list. The mesh bodies below get bitwise identity by
+# splitting the index differently:
+#
+#  * ``v_blocks`` (the O(V d) payload) is sharded over 'model'; everything
+#    else — centroids, radius, valid, row_id, slot_of_row — is per-block
+#    METADATA, O(V/br (d + br)) floats, and stays replicated.
+#  * probe / dedup / trim / tail plan / top-k therefore run the *verbatim*
+#    ``core.decode`` code on replicated metadata: every shard derives the
+#    same DecodePlan the single device would.
+#  * only the embedding-row fetch is distributed: each shard contributes its
+#    owned rows of the step's working set (union head + shared tail — the
+#    paper's sublinear set) and ONE psum assembles the (U*br + l, d) staging
+#    buffer; the scoring matmul then runs on identical operands, so every
+#    output — log Ẑ included — is bit-equal to ``mimps_decode`` & friends.
+#
+# Comms per step: one psum of the sublinear working set (+ the health
+# guard's log-domain psum on its exact-fallback branch) — the paper's
+# sublinearity lifted to the collective level, with none of the
+# "distributed estimator" numerics leaking into token identity.
+
+from ..core import decode as _decode
+from ..core import mips as _mips
+from ..core.decode import DecodeOut
+from ..core.distributed import logspace_psum, sharded_top_k
+from ..core.estimators import NEG_INF, combine_head_tail_lse
+
+
+def _gather_rows_psum(flat_local: jax.Array, slots: jax.Array,
+                      axis_name: str) -> jax.Array:
+    """Assemble global embedding rows from the model-sharded flat block
+    table: each shard gathers the slots it owns (zeros elsewhere), one psum
+    of (len(slots), d) makes every shard hold the exact rows — bitwise the
+    single-device ``jnp.take`` (one real addend per element, rest zero)."""
+    n_loc = flat_local.shape[0]
+    me = lax.axis_index(axis_name)
+    loc = slots - me * n_loc
+    own = (loc >= 0) & (loc < n_loc)
+    rows = jnp.where(own[:, None],
+                     flat_local[jnp.clip(loc, 0, n_loc - 1)],
+                     jnp.zeros((), flat_local.dtype))
+    return lax.psum(rows, axis_name)
+
+
+def _mesh_plan(index, h: jax.Array, key: jax.Array, n_probe: int, l: int,
+               active) -> "_decode.DecodePlan":
+    """``core.decode.make_plan`` against an index whose ``v_blocks`` leaf is
+    the LOCAL shard: identical code except capacity comes from the
+    replicated ``valid`` (global block count), since ``index.n_blocks``
+    would report the local shard's."""
+    block_ids = _mips.probe_batch(index, h, n_probe)
+    if active is not None:
+        donor = block_ids[jnp.argmax(active)]
+        block_ids = jnp.where(active[:, None], block_ids, donor[None, :])
+    capacity = min(h.shape[0] * n_probe, index.valid.shape[0])
+    head_ids, member, n_unique = _decode.plan_heads(block_ids, capacity)
+    tb, tr, accept = _decode.plan_tail(index, key, l, block_ids)
+    k_eff = _mips.head_count(index, block_ids)
+    return _decode.DecodePlan(block_ids=block_ids, head_ids=head_ids,
+                              head_live=n_unique.astype(jnp.int32),
+                              head_member=member, tail_blocks=tb,
+                              tail_rows=tr, tail_accept=accept, k_eff=k_eff,
+                              n_accept=accept.sum(axis=-1))
+
+
+def _mesh_head_scores(index, h: jax.Array, head_ids, member, tail_slots,
+                      axis_name: str):
+    """``core.decode._head_scores_xla`` with the row gather distributed:
+    same staging-buffer layout, same fused (Q,d)x(d, U*br [+ l]) dot on
+    psum-assembled operands -> bitwise-identical scores."""
+    _, br, d = index.v_blocks.shape
+    flat = index.v_blocks.reshape(-1, d)
+    slot = (head_ids[:, None] * br +
+            jnp.arange(br, dtype=jnp.int32)[None, :]).reshape(-1)
+    n_head = slot.shape[0]
+    if tail_slots is not None:
+        slot = jnp.concatenate([slot, tail_slots])
+    w = _gather_rows_psum(flat, slot, axis_name)
+    scores = jax.lax.dot_general(
+        h, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    mask = (member[:, :, None] & index.valid[head_ids][None]
+            ).reshape(h.shape[0], -1)
+    if tail_slots is not None:
+        return scores[:, :n_head], mask, scores[:, n_head:]
+    return scores, mask
+
+
+def mesh_mimps_decode(index, h: jax.Array, key: jax.Array, *, n_probe: int,
+                      l: int, k: int = 1, head_cap: int = 0, active=None,
+                      axis_name: str = "model") -> DecodeOut:
+    """MIMPS (Eq. 5) under the serving mesh — bit-equal to
+    ``mimps_decode(..., use_pallas=False)`` at every mesh size."""
+    plan = _mesh_plan(index, h, key, n_probe, l, active)
+    br = index.v_blocks.shape[1]
+    tail_slots = plan.tail_blocks * br + plan.tail_rows
+    cap = _decode._resolve_head_cap(head_cap, n_probe,
+                                    plan.head_ids.shape[0])
+
+    def branch(ids, member):
+        scores, mask, ts = _mesh_head_scores(index, h, ids, member,
+                                             tail_slots, axis_name)
+        tl = _decode._masked_tail_lse(ts, plan.tail_accept)
+        return _decode._head_topk(index, ids, scores, mask, k) + (tl,)
+
+    head_lse, topv, topi, tail_lse = _decode._with_trimmed_head(plan, cap,
+                                                                branch)
+    log_z = combine_head_tail_lse(
+        head_lse, tail_lse,
+        (index.n - plan.k_eff).astype(jnp.float32),
+        plan.n_accept.astype(jnp.float32))
+    top_id = index.row_id.reshape(-1)[topi]
+    return DecodeOut(log_z=log_z, top_score=topv, top_id=top_id,
+                     head_lse=head_lse, tail_lse=tail_lse, k_eff=plan.k_eff,
+                     head_live=plan.head_live)
+
+
+def mesh_mince_decode(index, h: jax.Array, key: jax.Array, *, n_probe: int,
+                      l: int, k: int = 1, iters: int = 2,
+                      solver: str = "halley", head_cap: int = 0, active=None,
+                      axis_name: str = "model") -> DecodeOut:
+    """MINCE (Eq. 6/7) under the serving mesh: the anchored closed form of
+    ``mince_decode`` on psum-assembled rows (``iters``/``solver`` kept for
+    signature parity with the cold-start solvers)."""
+    del iters, solver
+    assert l >= 1, "MINCE needs at least one noise sample"
+    plan = _mesh_plan(index, h, key, n_probe, l, active)
+    br = index.v_blocks.shape[1]
+    tail_slots = plan.tail_blocks * br + plan.tail_rows
+    cap = _decode._resolve_head_cap(head_cap, n_probe,
+                                    plan.head_ids.shape[0])
+    n = index.n
+    k_eff = plan.k_eff.astype(jnp.float32)
+    n_acc = plan.n_accept.astype(jnp.float32)
+    n_tail = jnp.maximum(n - k_eff, 0.0)
+
+    def branch(ids, member):
+        scores, mask, ts = _mesh_head_scores(index, h, ids, member,
+                                             tail_slots, axis_name)
+        hl = jax.nn.logsumexp(jnp.where(mask, scores, NEG_INF), axis=-1)
+        tl = _decode._masked_tail_lse(ts, plan.tail_accept)
+        theta = combine_head_tail_lse(hl, tl, n_tail, n_acc)
+        _, topv, topi = _decode._head_topk(index, ids, scores, mask, k)
+        return hl, tl, theta, topv, topi
+
+    head_lse, tail_lse, theta, topv, topi = _decode._with_trimmed_head(
+        plan, cap, branch)
+    uniform = combine_head_tail_lse(
+        jnp.full_like(head_lse, NEG_INF), tail_lse,
+        jnp.zeros_like(n_acc) + jnp.asarray(n, jnp.float32), n_acc)
+    log_z = jnp.where(k_eff == 0, uniform, theta)
+    log_z = jnp.where((n_acc == 0) | (n_tail == 0), head_lse, log_z)
+    top_id = index.row_id.reshape(-1)[topi]
+    return DecodeOut(log_z=log_z, top_score=topv, top_id=top_id,
+                     head_lse=head_lse, tail_lse=tail_lse, k_eff=plan.k_eff,
+                     head_live=plan.head_live)
+
+
+def mesh_topk_decode(index, h: jax.Array, key: jax.Array, *, n_probe: int,
+                     k: int = 1, head_cap: int = 0, active=None,
+                     axis_name: str = "model") -> DecodeOut:
+    """Head-only ladder rung (``topk_head_decode``) under the serving mesh."""
+    plan = _mesh_plan(index, h, key, n_probe, 0, active)
+    cap = _decode._resolve_head_cap(head_cap, n_probe,
+                                    plan.head_ids.shape[0])
+
+    def branch(ids, member):
+        scores, mask = _mesh_head_scores(index, h, ids, member, None,
+                                         axis_name)
+        return _decode._head_topk(index, ids, scores, mask, k)
+
+    head_lse, topv, topi = _decode._with_trimmed_head(plan, cap, branch)
+    top_id = index.row_id.reshape(-1)[topi]
+    return DecodeOut(log_z=head_lse, top_score=topv, top_id=top_id,
+                     head_lse=head_lse,
+                     tail_lse=jnp.full_like(head_lse, -jnp.inf),
+                     k_eff=plan.k_eff, head_live=plan.head_live)
+
+
+def mesh_fmbe_decode(state: FMBEState, index, h: jax.Array, key: jax.Array,
+                     *, n_probe: int, k: int = 1, head_cap: int = 0,
+                     active=None, axis_name: str = "model") -> DecodeOut:
+    """FMBE under the serving mesh: the sketch (and its per-block lambda
+    table) is V-independent and replicated; only the candidate head rows are
+    fetched through the sharded gather."""
+    plan = _mesh_plan(index, h, key, n_probe, 0, active)
+    cap = _decode._resolve_head_cap(head_cap, n_probe,
+                                    plan.head_ids.shape[0])
+
+    def branch(ids, member):
+        scores, mask = _mesh_head_scores(index, h, ids, member, None,
+                                         axis_name)
+        return _decode._head_topk(index, ids, scores, mask, k)
+
+    head_lse, topv, topi = _decode._with_trimmed_head(plan, cap, branch)
+    if state.lambda_blocks is not None:
+        from ..core.feature_maps import fmbe_tail_z
+        z_tail = fmbe_tail_z(state, h, plan.block_ids, use_pallas=False)
+        log_z = jnp.logaddexp(head_lse,
+                              jnp.log(jnp.maximum(z_tail, 1e-30)))
+    else:
+        z = fmbe_z_batch(state, h)
+        log_z = jnp.log(jnp.maximum(z, 1e-30))
+    top_id = index.row_id.reshape(-1)[topi]
+    return DecodeOut(log_z=log_z, top_score=topv, top_id=top_id,
+                     head_lse=head_lse,
+                     tail_lse=jnp.full_like(log_z, -jnp.inf),
+                     k_eff=plan.k_eff, head_live=plan.head_live)
+
+
+def mesh_exact_decode(w_local: jax.Array, h: jax.Array, *, k: int = 1,
+                      active=None, axis_name: str = "model") -> DecodeOut:
+    """Exact log Z + top-k with the embedding row-sharded over 'model':
+    local logits + log-domain psum (log Z) and the O(kT) candidate merge.
+    Candidate (score, id) pairs match the dense single-device pass (each is
+    a selected local dot); log Z agrees to reduction-order rounding."""
+    del active
+    logits = (h @ w_local.T).astype(jnp.float32)
+    log_z = logspace_psum(jax.nn.logsumexp(logits, -1), axis_name)
+    tk = sharded_top_k(w_local, h, k, axis_name)
+    q = h.shape[0]
+    v = w_local.shape[0] * lax.psum(1, axis_name)
+    return DecodeOut(log_z=log_z, top_score=tk.scores.astype(jnp.float32),
+                     top_id=tk.ids.astype(jnp.int32), head_lse=log_z,
+                     tail_lse=jnp.full((q,), -jnp.inf),
+                     k_eff=jnp.full((q,), v, jnp.int32))
+
+
+def mesh_selfnorm_decode(w_local: jax.Array, h: jax.Array, *, k: int = 1,
+                         active=None, axis_name: str = "model") -> DecodeOut:
+    out = mesh_exact_decode(w_local, h, k=k, active=active,
+                            axis_name=axis_name)
+    return out._replace(log_z=jnp.zeros_like(out.log_z))
+
+
+def mesh_health_guard(out: DecodeOut, w_local: jax.Array, h: jax.Array,
+                      k: int, active=None, axis_name: str = "model"):
+    """``core.decode.apply_health_guard`` with the exact fallback sharded.
+
+    Flags are computed on outputs that are replicated across the model axis
+    (psum-assembled scores, replicated metadata), so every shard of a model
+    group agrees on the ``lax.cond`` branch and the fallback's collectives
+    (the log-domain psum + candidate all_gather of ``mesh_exact_decode``)
+    line up; data replicas branch independently — their collective groups
+    are disjoint. Healthy lanes take the bit-identity branch, exactly as on
+    a single device."""
+    flags = _decode.health_flags(out)
+    if active is not None:
+        flags = jnp.where(active, flags, 0)
+    bad = flags > 0
+
+    def fallback():
+        ex = mesh_exact_decode(w_local, h, k=k, axis_name=axis_name)
+        row = bad[:, None]
+        return DecodeOut(
+            log_z=jnp.where(bad, ex.log_z, out.log_z),
+            top_score=jnp.where(row, ex.top_score, out.top_score),
+            top_id=jnp.where(row, ex.top_id, out.top_id),
+            head_lse=jnp.where(bad, ex.head_lse, out.head_lse),
+            tail_lse=jnp.where(bad, ex.tail_lse, out.tail_lse),
+            k_eff=out.k_eff, head_live=out.head_live)
+
+    return jax.lax.cond(jnp.any(bad), fallback, lambda: out), flags
+
+
 def sharded_decode(mesh, method: str, ivf: IVFSpecs, h: jax.Array,
                    key: jax.Array, *, n_probe_local: int, l_local: int,
                    batch_spec=P("data"), **method_kwargs):

@@ -65,10 +65,13 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
-from ..core.backends import get_backend
+from ..core.backends import get_backend, state_partition_specs
 from ..core.decode import (HEALTH_EMPTY_HEAD, HEALTH_NONFINITE_SCORE,
                            HEALTH_NONFINITE_Z, apply_health_guard)
+from ..core.distributed import shard_map
 
 _REQ_IDS = itertools.count()
 
@@ -198,6 +201,22 @@ class Scheduler:
                 "audio codebook decoding goes through serve.generate")
         self.engine = engine
         self.n_slots = n_slots
+        # (data, model) serving mesh (Engine(mesh=...)): slot lanes are laid
+        # out replica-major over the FLAT (S,) table — lane s lives on data
+        # replica s // lanes_per_replica — and the one compiled step runs
+        # under shard_map (DESIGN.md SS15). mesh=None is the single-device
+        # path, byte-for-byte the PR-6 scheduler.
+        self.mesh = getattr(engine, "mesh", None)
+        if self.mesh is not None:
+            self.n_replicas = int(self.mesh.shape["data"])
+            if n_slots % self.n_replicas:
+                raise ValueError(
+                    f"n_slots {n_slots} must divide the mesh's data degree "
+                    f"{self.n_replicas} (each replica owns an equal set of "
+                    f"KV lanes)")
+        else:
+            self.n_replicas = 1
+        self.lanes_per_replica = n_slots // self.n_replicas
         self.prompt_cap = int(prompt_cap or engine.max_len)
         self.key = key if key is not None else jax.random.PRNGKey(0)
         self.health_guard = health_guard
@@ -216,7 +235,20 @@ class Scheduler:
         self._slot_acc: List[Optional[Completion]] = [None] * n_slots
         self._no_fault = jnp.zeros((n_slots,), bool)
         self.table = self._init_table()
+        if self.mesh is not None:
+            # canonical shardings: jit keys its compile cache on INPUT
+            # shardings, so every table/params/state argument is pinned to
+            # these exact NamedShardings (init + drain via device_put; admit
+            # via out_shardings; step via out_specs) — that is what makes
+            # "zero recompiles after warmup" survive the mesh
+            self._table_sh = self._shardings_of(self._table_specs())
+            self._lane_sh = NamedSharding(self.mesh, P("data"))
+            self._repl_sh = NamedSharding(self.mesh, P())
+            self._placements: Dict[Any, tuple] = {}
+            self.table = jax.device_put(self.table, self._table_sh)
+            self._no_fault = jax.device_put(self._no_fault, self._lane_sh)
         self._step_fns: Dict[str, Callable] = {}
+        self._bstate_sh: Dict[str, Any] = {}
         self._admit_fn = self._build_admit()
 
     # -- device state --------------------------------------------------------
@@ -238,6 +270,40 @@ class Scheduler:
             active=jnp.zeros((s,), bool),
             step_idx=jnp.zeros((), jnp.int32))
 
+    # -- mesh plumbing -------------------------------------------------------
+
+    def _table_specs(self) -> SlotTable:
+        """PartitionSpec tree of the SlotTable under the serving mesh: every
+        per-lane (S, ...) leaf — including each KV-cache lane batch — shards
+        dim 0 over 'data'; the step counter is replicated. The table stays
+        FLAT (S,), replica-major: host bookkeeping (``_slot_req[s]``,
+        ``out["emitted"][s]``) is layout-blind."""
+        from ..launch.mesh import serve_cache_spec
+        cache = jax.tree_util.tree_map_with_path(serve_cache_spec,
+                                                 self.table.cache)
+        lane = P("data")
+        return SlotTable(cache=cache, prompt=P("data", None),
+                         last_token=lane, t_stream=lane, t_replay=lane,
+                         budget=lane, req_key=P("data", None),
+                         temperature=lane, sample_k=lane, deadline=lane,
+                         active=lane, step_idx=P())
+
+    def _shardings_of(self, specs):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def _placed(self, cache_key, obj, shardings):
+        """device_put ``obj`` to its canonical shardings, memoized by object
+        identity: params/tier states are long-lived engine objects, so
+        steady-state steps re-place nothing; a ``swap_index`` swaps in new
+        objects and misses the cache exactly once."""
+        ent = self._placements.get(cache_key)
+        if ent is not None and ent[0] is obj:
+            return ent[1]
+        placed = jax.device_put(obj, shardings)
+        self._placements[cache_key] = (obj, placed)
+        return placed
+
     def _build_step(self, method: str):
         eng = self.engine
         model = eng.model
@@ -257,15 +323,17 @@ class Scheduler:
         # no donation support and would warn on every compile, so gate it)
         donate = (0,) if jax.default_backend() != "cpu" else ()
 
-        # params and the retrieval state are traced ARGUMENTS, not closure
-        # constants: Engine.swap_index can hand a freshly trained checkpoint
-        # to a live server and the very next step serves it from the same
-        # executable (shapes are identical under device_index=True)
-        @partial(jax.jit, donate_argnums=donate)
-        def step(table: SlotTable, params, bstate, fault_nan, fault_inf):
-            self.step_traces += 1   # python side effect: counts (re)traces
-            self.traces_by_tier[method] = \
-                self.traces_by_tier.get(method, 0) + 1
+        mesh = self.mesh
+
+        # the step body, shared verbatim by both compilation paths: plain
+        # jit on a single device, or shard_map over the (data, model) mesh —
+        # where ``table`` is each replica's local lanes, ``bstate``'s
+        # payloads are the local model shard, and the only mesh-specific
+        # lines are the estimator dispatch (backend.shard_decode — the
+        # psum-row-gather bodies in serve.output_layer, bit-identical to
+        # decode), the mesh health guard, and the data-psum of the two
+        # step scalars
+        def body(table: SlotTable, params, bstate, fault_nan, fault_inf):
             # -- input token: next prompt token while replaying, else the
             #    lane's own previous sample
             is_replay = table.t_stream < table.t_replay
@@ -287,9 +355,15 @@ class Scheduler:
             # -- ONE shared estimator decode across every lane; masked lanes
             #    stay out of the probe union
             k_est = jax.random.fold_in(est_key, table.step_idx)
-            out = backend.decode(bstate, h, k_est, pc, k=pc.sample_k,
-                                 use_pallas=use_pallas, active=table.active,
-                                 **kernel_cfg)
+            if mesh is None:
+                out = backend.decode(bstate, h, k_est, pc, k=pc.sample_k,
+                                     use_pallas=use_pallas,
+                                     active=table.active, **kernel_cfg)
+            else:
+                out = backend.shard_decode(bstate, h, k_est, pc,
+                                           k=pc.sample_k,
+                                           active=table.active,
+                                           axis_name="model")
             # -- lane-scoped fault injection: the masks are traced arguments
             #    (all-False arrays in normal service — same executable), and
             #    every downstream consumer is per-lane, so a corrupted lane's
@@ -304,10 +378,16 @@ class Scheduler:
             #    probe union / non-finite scores — whether injected or
             #    organic) fall back to the exact dense path; healthy steps
             #    take the bit-identical identity branch
-            if health_guard:
+            if health_guard and mesh is None:
                 out, flags = apply_health_guard(out, bstate.w, h,
                                                 pc.sample_k,
                                                 active=table.active)
+            elif health_guard:
+                from .output_layer import mesh_health_guard
+                out, flags = mesh_health_guard(out, bstate.w, h,
+                                               pc.sample_k,
+                                               active=table.active,
+                                               axis_name="model")
             else:
                 flags = jnp.zeros(table.active.shape, jnp.int32)
             tok, score = sample_slots(out, k_samp, table.temperature,
@@ -339,13 +419,60 @@ class Scheduler:
                 step_idx=table.step_idx + 1)
             head_live = out.head_live if out.head_live is not None \
                 else jnp.zeros((), jnp.int32)
+            n_active = act.astype(jnp.int32).sum()
+            if mesh is not None:
+                # per-replica scalars -> global (head_live sums each
+                # replica's probe-union size; replicated over 'model'
+                # already — the plan runs on replicated metadata)
+                n_active = jax.lax.psum(n_active, "data")
+                head_live = jax.lax.psum(head_live, "data")
             outs = {"token": tok, "log_prob": score - out.log_z,
                     "log_z": out.log_z, "emitted": emitted,
                     "finished": finished, "overflow": overflow,
                     "expired": expired, "health": flags,
-                    "n_active": act.astype(jnp.int32).sum(),
-                    "head_live": head_live}
+                    "n_active": n_active, "head_live": head_live}
             return new_table, outs
+
+        if mesh is None:
+            # params and the retrieval state are traced ARGUMENTS, not
+            # closure constants: Engine.swap_index can hand a freshly
+            # trained checkpoint to a live server and the very next step
+            # serves it from the same executable (shapes are identical
+            # under device_index=True)
+            @partial(jax.jit, donate_argnums=donate)
+            def step(table: SlotTable, params, bstate, fault_nan, fault_inf):
+                self.step_traces += 1   # python side effect: counts traces
+                self.traces_by_tier[method] = \
+                    self.traces_by_tier.get(method, 0) + 1
+                return body(table, params, bstate, fault_nan, fault_inf)
+
+            return step
+
+        # mesh path: the SAME body under shard_map. Per-lane leaves split
+        # over 'data' (each replica advances its own lanes + KV), the
+        # retrieval payloads over 'model' (state_partition_specs), params
+        # replicated. The trace counters live OUT here — shard_map may
+        # re-trace the body while specializing, which is not a recompile.
+        table_specs = self._table_specs()
+        bstate = self.engine.tier_state(method)
+        bspecs = state_partition_specs(bstate, self.mesh.shape["model"])
+        self._bstate_sh[method] = self._shardings_of(bspecs)
+        lane = P("data")
+        out_specs = (table_specs,
+                     {"token": lane, "log_prob": lane, "log_z": lane,
+                      "emitted": lane, "finished": lane, "overflow": lane,
+                      "expired": lane, "health": lane,
+                      "n_active": P(), "head_live": P()})
+        sharded = shard_map(body, mesh,
+                            in_specs=(table_specs, P(), bspecs, lane, lane),
+                            out_specs=out_specs, check_vma=False)
+
+        @partial(jax.jit, donate_argnums=donate)
+        def step(table: SlotTable, params, bstate, fault_nan, fault_inf):
+            self.step_traces += 1
+            self.traces_by_tier[method] = \
+                self.traces_by_tier.get(method, 0) + 1
+            return sharded(table, params, bstate, fault_nan, fault_inf)
 
         return step
 
@@ -368,8 +495,14 @@ class Scheduler:
 
     def _build_admit(self):
         donate = (0,) if jax.default_backend() != "cpu" else ()
+        # under a mesh, pin the admitted table to the canonical shardings:
+        # .at[slot].set on a 'data'-sharded lane would otherwise leave XLA
+        # free to emit a differently-sharded (or replicated) result, and the
+        # step executable — keyed on input shardings — would recompile
+        jit_kw = {} if self.mesh is None else \
+            {"out_shardings": self._table_sh}
 
-        @partial(jax.jit, donate_argnums=donate)
+        @partial(jax.jit, donate_argnums=donate, **jit_kw)
         def admit(table: SlotTable, slot, prompt_row, p_len, budget, key,
                   temp, sample_k, deadline):
             self.admit_traces += 1
@@ -395,6 +528,24 @@ class Scheduler:
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    def _pick_slot(self) -> int:
+        """Claim a free lane. Single device: lowest index (FIFO order over
+        a sorted free list — the PR-6 behavior, unchanged). Under a mesh,
+        route to the LEAST-LOADED data replica (most free lanes; ties to
+        the lowest replica) and take its lowest lane — staggered admissions
+        spread across replicas instead of piling onto replica 0, which is
+        what makes goodput scale with the data degree under partial load."""
+        if self.n_replicas == 1:
+            return self._free.pop(0)
+        free_per = [0] * self.n_replicas
+        for s in self._free:
+            free_per[s // self.lanes_per_replica] += 1
+        rep = max(range(self.n_replicas), key=lambda r: (free_per[r], -r))
+        slot = min(s for s in self._free
+                   if s // self.lanes_per_replica == rep)
+        self._free.remove(slot)
+        return slot
 
     @property
     def n_in_flight(self) -> int:
@@ -432,7 +583,7 @@ class Scheduler:
                 f"{self.engine.max_len}")
         if not self._free:
             raise RuntimeError("no free slot; queue the request instead")
-        slot = self._free.pop(0)
+        slot = self._pick_slot()
         prompt_row = np.zeros((self.prompt_cap,), np.int32)
         prompt_row[:p_len] = request.prompt
         sk = request.sample_k or self.engine.cfg.partition.sample_k
@@ -475,7 +626,16 @@ class Scheduler:
                 fault_inf = jnp.asarray(np.asarray(lanes[1], bool))
         step_fn = self._get_step(self.tier)
         bstate = self.engine.tier_state(self.tier)
-        self.table, out = step_fn(self.table, self.engine.params, bstate,
+        params = self.engine.params
+        if self.mesh is not None:
+            # canonical placements (identity-memoized: free in steady state)
+            params = self._placed("params", params, self._repl_sh)
+            bstate = self._placed(("bstate", self.tier), bstate,
+                                  self._bstate_sh[self.tier])
+            if fault_nan is not self._no_fault:
+                fault_nan = jax.device_put(fault_nan, self._lane_sh)
+                fault_inf = jax.device_put(fault_inf, self._lane_sh)
+        self.table, out = step_fn(self.table, params, bstate,
                                   fault_nan, fault_inf)
         self.steps_done += 1
         out = jax.device_get(out)
@@ -556,4 +716,9 @@ class Scheduler:
                 active=jnp.zeros((n,), bool),
                 budget=jnp.zeros((n,), jnp.int32),
                 deadline=jnp.full((n,), NO_DEADLINE, jnp.int32))
+            if self.mesh is not None:
+                # the freshly-built host arrays above are uncommitted; pin
+                # the table back to canonical shardings so the next step
+                # hits its existing executable
+                self.table = jax.device_put(self.table, self._table_sh)
         return completions

@@ -11,28 +11,22 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 
+# one shared (data, model) factorization: elastic rebuilds and the serving
+# mesh (launch.mesh.make_serving_mesh) must agree on axis names/shapes
+from ..launch.mesh import best_mesh_shape, make_mesh_2d
 
-def best_mesh_shape(n_devices: int, model_parallel: int
-                    ) -> Tuple[int, int]:
-    """(data, model) for the devices we actually have. Shrinks the model
-    axis only when the device count drops below the requested TP degree."""
-    mp = min(model_parallel, n_devices)
-    while n_devices % mp:
-        mp -= 1
-    return n_devices // mp, mp
+__all__ = ["best_mesh_shape", "make_elastic_mesh", "StragglerWatchdog"]
 
 
 def make_elastic_mesh(model_parallel: int = 16,
                       devices: Optional[List] = None):
     devices = devices if devices is not None else jax.devices()
-    dp, mp = best_mesh_shape(len(devices), model_parallel)
-    import numpy as np
-    dev_array = np.asarray(devices[:dp * mp]).reshape(dp, mp)
-    return jax.sharding.Mesh(dev_array, ("data", "model"))
+    shape = best_mesh_shape(len(devices), model_parallel)
+    return make_mesh_2d(shape, devices)
 
 
 @dataclasses.dataclass

@@ -195,6 +195,16 @@ class TestRegressionGate:
         overload = {"shed_rate": 0.4, "p95_under_overload": 20.0,
                     "degraded_token_frac": 0.5, "queue_depth_peak": 8,
                     "max_queue": 8, "recompiles_after_warmup": 0}
+        scaling = {"lanes_per_replica": 4, "clock": "virtual-step",
+                   "rows": [
+                       {"data": d, "model": 1, "devices": d,
+                        "n_slots": 4 * d, "n_req": 16 * d,
+                        "tok_per_step": 1.9 * d, "steps": 68,
+                        "goodput_tok_s": 900.0, "p95_token_ms": 20.0,
+                        "occupancy_steady": 0.95, "token_parity": True,
+                        "recompiles_after_warmup": 0}
+                       for d in (1, 2, 4, 8)],
+                   "goodput_monotone": True, "goodput_scaling_8v1": 8.0}
         serving = {"goodput_tok_s": 600.0,
                    "sequential_goodput_tok_s": 150.0,
                    "speedup_vs_sequential": 4.0,
@@ -202,7 +212,7 @@ class TestRegressionGate:
                    "occupancy_steady": 0.9, "peak_concurrency": 8,
                    "token_parity_vs_solo": True,
                    "recompiles_after_warmup": 0,
-                   "overload": overload, **(srv or {})}
+                   "overload": overload, "scaling": scaling, **(srv or {})}
         if srv and "overload" in srv:
             serving["overload"] = {**overload, **srv["overload"]}
         (tmp_path / "BENCH_serving.json").write_text(json.dumps(serving))
@@ -297,6 +307,37 @@ class TestRegressionGate:
         self._write(tmp_path)
         rep = json.loads((tmp_path / "BENCH_serving.json").read_text())
         del rep["overload"]
+        (tmp_path / "BENCH_serving.json").write_text(json.dumps(rep))
+        assert self._check(tmp_path, monkeypatch) >= 1
+
+    def test_fails_on_broken_scaling_invariants(self, tmp_path,
+                                                monkeypatch):
+        """The PR-7 gate: broken token parity, a recompile, starved
+        occupancy, or a non-monotone tokens-per-step chain at any mesh
+        shape each fail --check on their own, as does a missing curve."""
+        import benchmarks.run as run
+        self._write(tmp_path)
+        monkeypatch.chdir(tmp_path)
+        monkeypatch.setattr(run, "BASELINE_PATH",
+                            str(tmp_path / "baseline.json"))
+        run.update_baseline()
+        assert self._check(tmp_path, monkeypatch) == 0
+
+        def tweak(**kw):
+            self._write(tmp_path)
+            rep = json.loads((tmp_path / "BENCH_serving.json").read_text())
+            rep["scaling"]["rows"][-1].update(kw)
+            (tmp_path / "BENCH_serving.json").write_text(json.dumps(rep))
+
+        for bad in ({"token_parity": False},
+                    {"recompiles_after_warmup": 1},
+                    {"occupancy_steady": 0.4},
+                    {"tok_per_step": 1.0}):    # 8-dev row below 1-dev
+            tweak(**bad)
+            assert self._check(tmp_path, monkeypatch) >= 1, bad
+        self._write(tmp_path)
+        rep = json.loads((tmp_path / "BENCH_serving.json").read_text())
+        del rep["scaling"]
         (tmp_path / "BENCH_serving.json").write_text(json.dumps(rep))
         assert self._check(tmp_path, monkeypatch) >= 1
 
