@@ -22,7 +22,11 @@ shed_rate < 1), keeps a finite p95, engages the degradation ladder
 (degraded_token_frac > 0), respects the queue bound, and never recompiles
 (PR 6); the mesh-sharded scheduler step keeps token parity and zero
 recompiles at every (data, model) mesh shape with tokens-per-step goodput
-monotone along the 1/2/4/8-device chain (PR 7). Refresh the baseline after
+monotone along the 1/2/4/8-device chain (PR 7); estimator-speculative
+decoding beats the non-speculative scheduler on goodput for the
+shared-prefix trace with 0 < acceptance <= 1, and the warm prefix cache
+saves replay steps (fewer virtual steps, saved_replay_steps > 0) — both
+with token parity and zero recompiles (PR 8). Refresh the baseline after
 a *deliberate* perf change with:
 
   PYTHONPATH=src python -m benchmarks.run --update-baseline
@@ -82,6 +86,14 @@ def _snapshot():
                     "tok_per_step": r["tok_per_step"],
                     "goodput_tok_s": r["goodput_tok_s"]}
                 for r in srv.get("scaling", {}).get("rows", [])},
+            "serving_spec": {
+                d: {"goodput_tok_s": r["goodput_tok_s"],
+                    "tok_per_step": r["tok_per_step"],
+                    "acceptance": r["acceptance"]}
+                for d, r in srv.get("spec", {}).get("drafts", {}).items()},
+            "serving_prefix": {
+                mode: srv["prefix_cache"][mode]["goodput_tok_s"]
+                for mode in ("off", "on")} if "prefix_cache" in srv else {},
             "train": {m: {"tokens_per_s": r["tokens_per_s"],
                           "us_per_step": r["us_per_step"]}
                       for m, r in trn["methods"].items()}}
@@ -254,6 +266,86 @@ def check() -> int:
                 f"recompiles under overload (tier switches must reuse the "
                 f"per-tier executables compiled at warmup)")
 
+    # dedup_by_fill rows (PR 8 format): sorted [int fill, float ratio]
+    # pairs — the old object form stringified the int keys and scrambled
+    # their order.
+    df = srv.get("dedup_by_fill")
+    if not isinstance(df, list) or any(
+            not (isinstance(f, int) and isinstance(r, (int, float)))
+            for f, r in df):
+        failures.append(
+            "serving: dedup_by_fill must be [[int fill, ratio], ...] rows")
+    elif [f for f, _ in df] != sorted(f for f, _ in df):
+        failures.append(
+            f"serving: dedup_by_fill rows not sorted by fill: "
+            f"{[f for f, _ in df]}")
+    elif any(not 0.0 < r <= 1.0 for _, r in df):
+        failures.append(
+            f"serving: dedup_by_fill ratio outside (0, 1] — the probe "
+            f"union U/(Q*n_probe) shrinks with batch fill, never grows "
+            f"({df})")
+
+    # raw-speed acceptance invariants (PR 8): on the shared-prefix trace,
+    # estimator-speculative decoding must BEAT the non-speculative
+    # scheduler (wall goodput and, deterministically, tokens per virtual
+    # step) for at least one registry draft, with sane acceptance and the
+    # two hard invariants intact per draft; the warm prefix cache must
+    # actually save replay steps (strictly fewer virtual steps than the
+    # cache-off run and saved_replay_steps > 0).
+    sp = srv.get("spec")
+    if not sp or not sp.get("drafts"):
+        failures.append("serving: spec (speculative decoding) section "
+                        "missing from artifact")
+    else:
+        base = sp["nonspec"]
+        for d, r in sp["drafts"].items():
+            if not r["token_parity"]:
+                failures.append(
+                    f"serving.spec[{d}]: tokens differ from solo "
+                    f"generate() — speculation broke per-request sampling")
+            if r["recompiles_after_warmup"] != 0:
+                failures.append(
+                    f"serving.spec[{d}]: {r['recompiles_after_warmup']} "
+                    f"recompiles (variable per-lane acceptance must be "
+                    f"data, not shape)")
+            if not 0.0 < r["acceptance"] <= 1.0:
+                failures.append(
+                    f"serving.spec[{d}]: acceptance {r['acceptance']:.3f} "
+                    f"outside (0, 1]")
+        if not any(r["goodput_tok_s"] > base["goodput_tok_s"]
+                   for r in sp["drafts"].values()):
+            failures.append(
+                f"serving.spec: no draft beats non-speculative goodput "
+                f"{base['goodput_tok_s']:.0f} tok/s "
+                f"({ {d: round(r['goodput_tok_s']) for d, r in sp['drafts'].items()} })")
+        if not any(r["tok_per_step"] > base["tok_per_step"]
+                   for r in sp["drafts"].values()):
+            failures.append(
+                f"serving.spec: no draft beats non-speculative "
+                f"tokens-per-step {base['tok_per_step']:.2f}")
+    pc = srv.get("prefix_cache")
+    if not pc:
+        failures.append("serving: prefix_cache section missing from "
+                        "artifact")
+    else:
+        if not pc["token_parity"]:
+            failures.append(
+                "serving.prefix_cache: tokens differ from solo generate() "
+                "— cached-prefix replay skip broke decoding")
+        if pc["recompiles_after_warmup"] != 0:
+            failures.append(
+                f"serving.prefix_cache: {pc['recompiles_after_warmup']} "
+                f"recompiles (pool load/save must be compiled once)")
+        if not pc["saved_replay_steps"] > 0:
+            failures.append(
+                "serving.prefix_cache: saved_replay_steps == 0 — the warm "
+                "cache never skipped a replay step")
+        if not pc["on"]["steps"] < pc["off"]["steps"]:
+            failures.append(
+                f"serving.prefix_cache: {pc['on']['steps']} virtual steps "
+                f"with the cache on >= {pc['off']['steps']} off — cache "
+                f"hits are not shortening the replay phase")
+
     # mesh-scaling acceptance invariants (exact, PR 7): the sharded
     # scheduler step must keep tokens bit-identical to solo generate() and
     # recompile nothing at EVERY mesh shape, and goodput on the virtual
@@ -322,6 +414,16 @@ def check() -> int:
                   f"{ov['degraded_token_frac']:.2f}, queue peak "
                   f"{ov['queue_depth_peak']}/{ov['max_queue']}, "
                   f"recompiles {ov['recompiles_after_warmup']}")
+        sp, pc = srv.get("spec", {}), srv.get("prefix_cache", {})
+        if sp and pc:
+            acc = ", ".join(f"{d}:{r['acceptance']:.2f}"
+                            for d, r in sp["drafts"].items())
+            print(f"  serving.raw_speed: spec "
+                  f"{sp['speedup_vs_nonspec']:.2f}x non-spec goodput "
+                  f"(acceptance {acc}); prefix cache saved "
+                  f"{pc['saved_replay_steps']} replay steps "
+                  f"({pc['on']['steps']} vs {pc['off']['steps']} virtual "
+                  f"steps)")
         sc = srv.get("scaling", {})
         if sc.get("rows"):
             curve = ", ".join(
@@ -411,7 +513,9 @@ def main() -> None:
                    f"recompiles={rep['recompiles_after_warmup']};"
                    f"shed={rep['overload']['shed_rate']:.2f};"
                    f"degraded={rep['overload']['degraded_token_frac']:.2f};"
-                   f"scale8v1={rep['scaling']['goodput_scaling_8v1']:.2f}x")
+                   f"scale8v1={rep['scaling']['goodput_scaling_8v1']:.2f}x;"
+                   f"spec={rep['spec']['speedup_vs_nonspec']:.2f}x;"
+                   f"prefix_saved={rep['prefix_cache']['saved_replay_steps']}")
     if sel("train"):
         rep, us = train_bench.run(quick=quick)
         tm = rep["methods"]["mimps_ce"]

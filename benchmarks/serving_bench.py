@@ -19,6 +19,12 @@ a traffic-serving deployment cares about:
    ladder: shed rate, p95 under overload, fraction of tokens served from a
    degraded tier, peak queue depth — still with zero recompiles, since
    every ladder tier is compiled once during warmup,
+ * a RAW-SPEED section (DESIGN.md SS16): estimator-speculative decoding
+   (cheap registry tier drafts k tokens, the serving tier verifies them in
+   one batched pass) and the shared-prefix KV cache, both on a bursty
+   shared-system-prompt trace — speculative goodput must beat
+   non-speculative and the warm cache must save replay steps, still with
+   bit-identical tokens and zero recompiles,
  * a SCALING curve for the mesh-sharded scheduler step (DESIGN.md SS15):
    goodput / p95 / occupancy at 1/2/4/8 virtual devices, one subprocess
    per (data, model) mesh shape, with token parity vs solo generate() and
@@ -66,6 +72,26 @@ def _workload(cfg, n_req: int, gen: int, p_lens, seed: int = 0):
             prompt=rng.integers(0, cfg.vocab, size=(p_len,), dtype=np.int32),
             max_new_tokens=gen,
             key=jax.random.PRNGKey(7_000 + i),
+            temperature=0.0 if i % 2 == 0 else 0.8))
+    return reqs
+
+
+def _shared_prefix_workload(cfg, n_req: int, gen: int, shared_len: int,
+                            tail_lens, seed: int = 11):
+    """Every request shares one system-prompt prefix (the prefix-cache /
+    speculation scenario: agents, RAG templates, few-shot headers)."""
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab, size=(shared_len,), dtype=np.int32)
+    reqs = []
+    for i in range(n_req):
+        tail = rng.integers(0, cfg.vocab,
+                            size=(tail_lens[i % len(tail_lens)],),
+                            dtype=np.int32)
+        reqs.append(Request(
+            prompt=np.concatenate([shared, tail]),
+            max_new_tokens=gen,
+            key=jax.random.PRNGKey(9_000 + i),
             temperature=0.0 if i % 2 == 0 else 0.8))
     return reqs
 
@@ -133,6 +159,141 @@ def _overload(sched, cfg, n_slots: int, n_req: int, gen: int, p_lens):
         "goodput_tok_s": rep.goodput_tok_s,
         "recompiles_after_warmup": int(recompiles),
     }
+
+
+def _raw_speed(quick: bool):
+    """DESIGN.md SS16: estimator-speculative decoding + shared-prefix KV
+    cache on a bursty shared-system-prompt trace (all-at-once arrivals on
+    the virtual clock, so step counts are deterministic).
+
+    This section runs its own engine in the regime the paper targets —
+    a LARGE vocab with the EXACT tier serving (the output layer dominates
+    the step) — because that is where speculation's economics live: the
+    sublinear estimator drafts k tokens nearly for free, then ONE exact
+    pass verifies all k positions while streaming the (V, d) embedding
+    once, instead of k sequential exact passes streaming it k times. At
+    the small-vocab mimps operating point of the main serving section the
+    trunk forward dominates and is shared by draft and verify, so
+    speculation only rearranges step overhead (tokens-per-step still
+    improves ~2x; wall clock does not — measured, not hidden).
+
+    Every configuration must keep the two hard invariants (bit-identical
+    tokens vs solo generate(), zero recompiles after warmup); the perf
+    claims gated by ``run.py --check`` are (a) speculative goodput beats
+    non-speculative on this scenario for at least one registry draft
+    (wall clock AND tokens per virtual step), and (b) the prefix cache
+    saves replay steps (> 0) once warm.
+    """
+    import dataclasses
+
+    from repro.configs import reduced_config
+    from repro.models import Model
+    from repro.serve import Engine, Scheduler, Server, trace_arrivals
+
+    cfg = reduced_config("qwen1.5-4b")
+    cfg = dataclasses.replace(
+        cfg, vocab=32768, partition=dataclasses.replace(
+            cfg.partition, method="exact", block_rows=128, n_probe=4,
+            l=128))
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    gen, p_max = 8, 12
+    eng = Engine(model, model.init(key), max_len=p_max + gen + 1, key=key)
+
+    n_slots = 8
+    n_req = 2 * n_slots if quick else 4 * n_slots
+    shared_len = p_max - 4
+    tails = [1, 2, 3, 4]
+    bt = 4
+    spec_k = 4
+    oracle, _ = _sequential(
+        eng, _shared_prefix_workload(cfg, n_req, gen, shared_len, tails),
+        time_it=False)
+
+    def serve(spec_draft=None, blocks=0):
+        sched = Scheduler(eng, n_slots=n_slots, key=jax.random.PRNGKey(2),
+                          spec_draft=spec_draft,
+                          spec_k=spec_k if spec_draft else 1,
+                          prefix_cache_blocks=blocks,
+                          prefix_block_tokens=bt)
+        warm = Server(sched)
+        for r in _workload(cfg, 2, 2, [3, 5], seed=97):
+            warm.submit(r)
+        warm.run()
+        traces0 = (sched.step_traces, sched.admit_traces)
+        reps, parity = [], True
+        for _ in range(2):   # 2nd pass also runs against a warm prefix pool
+            reqs = _shared_prefix_workload(cfg, n_req, gen, shared_len,
+                                           tails)
+            rep = Server(sched).run(
+                arrivals=trace_arrivals(reqs, [0.0] * len(reqs)))
+            got = {c.request.req_id: c.tokens for c in rep.completions}
+            parity = parity and all(got.get(r.req_id) == oracle[i]
+                                    for i, r in enumerate(reqs))
+            reps.append(rep)
+        recompiles = (sched.step_traces - traces0[0]) + \
+            (sched.admit_traces - traces0[1])
+        # goodput: best of 2 (damps shared-host noise); steps: the warm
+        # min (deterministic on the virtual clock, so it is what the
+        # --check gate compares)
+        best = max(reps, key=lambda r: r.goodput_tok_s)
+        steps = min(r.steps for r in reps)
+        total = sum(len(c.tokens) for c in best.completions)
+        row = {
+            "goodput_tok_s": best.goodput_tok_s,
+            "steps": int(steps),
+            "tok_per_step": total / max(steps, 1),
+            "token_parity": bool(parity),
+            "recompiles_after_warmup": int(recompiles),
+        }
+        if spec_draft:
+            row["acceptance"] = best.spec_acceptance
+            row["draft_flagged"] = int(best.draft_flagged)
+        if blocks:
+            row["prefix"] = dict(sched.prefix.stats())
+        return row
+
+    base = serve()
+    drafts = {d: serve(spec_draft=d) for d in ("topk", "fmbe")}
+    for name, r in drafts.items():
+        print(f"  spec draft={name} k={spec_k}: "
+              f"{r['goodput_tok_s']:.0f} tok/s ({r['tok_per_step']:.1f}"
+              f"/step) vs non-spec {base['goodput_tok_s']:.0f} "
+              f"({base['tok_per_step']:.1f}/step), acceptance "
+              f"{r['acceptance']:.2f}, parity {r['token_parity']}, "
+              f"recompiles {r['recompiles_after_warmup']}", flush=True)
+    blocks = 8 * n_slots
+    cache_on = serve(blocks=blocks)
+    combined = serve(spec_draft="topk", blocks=blocks)
+    print(f"  prefix cache ({blocks} blocks x {bt} tok): "
+          f"{cache_on['steps']} steps vs {base['steps']} off, saved "
+          f"{cache_on['prefix']['saved_steps']} replay steps "
+          f"({cache_on['prefix']['hits']} hits); spec+cache "
+          f"{combined['goodput_tok_s']:.0f} tok/s", flush=True)
+    spec = {
+        "scenario": {"n_req": n_req, "shared_prefix_len": shared_len,
+                     "tail_lens": tails, "gen": gen, "spec_k": spec_k,
+                     "vocab": cfg.vocab, "serving_tier": "exact"},
+        "nonspec": base,
+        "drafts": drafts,
+        "speedup_vs_nonspec": max(
+            r["goodput_tok_s"] for r in drafts.values())
+            / base["goodput_tok_s"],
+        "with_prefix_cache": combined,
+    }
+    prefix = {
+        "blocks": blocks, "block_tokens": bt,
+        "off": {k: base[k] for k in ("goodput_tok_s", "steps",
+                                     "tok_per_step")},
+        "on": {k: cache_on[k] for k in ("goodput_tok_s", "steps",
+                                        "tok_per_step")},
+        "hits": cache_on["prefix"]["hits"],
+        "saved_replay_steps": cache_on["prefix"]["saved_steps"],
+        "evictions": cache_on["prefix"]["evictions"],
+        "token_parity": cache_on["token_parity"],
+        "recompiles_after_warmup": cache_on["recompiles_after_warmup"],
+    }
+    return spec, prefix
 
 
 def _scaling_child(data: int, model: int, quick: bool = True):
@@ -309,7 +470,10 @@ def run(quick: bool = True):
         "occupancy_steady": rep.occupancy_steady,
         "peak_concurrency": int(peak_active),
         "dedup_ratio_mean": rep.dedup_ratio_mean,
-        "dedup_by_fill": {str(k): v for k, v in rep.dedup_by_fill.items()},
+        # sorted [fill, ratio] rows — JSON objects would stringify the int
+        # keys ("1".."8") and scramble their order
+        "dedup_by_fill": [[int(k), float(v)] for k, v in
+                          sorted(rep.dedup_by_fill.items())],
         "queue_wait_steps_mean": rep.queue_wait_steps_mean,
         "steps": rep.steps,
         "wall_s": rep.wall_s,
@@ -317,6 +481,9 @@ def run(quick: bool = True):
         "recompiles_after_warmup": int(recompiles),
     }
     report["overload"] = _overload(sched, cfg, n_slots, n_req, gen, p_lens)
+    print("raw speed (speculation + prefix cache, shared-prefix trace, "
+          "exact tier @ 32k vocab):", flush=True)
+    report["spec"], report["prefix_cache"] = _raw_speed(quick)
     print("scaling curve (subprocess per mesh shape):", flush=True)
     report["scaling"] = _scaling(quick)
     with open("BENCH_serving.json", "w") as f:
@@ -333,6 +500,12 @@ def run(quick: bool = True):
           f"{ov['degraded_token_frac']:.2f}, queue_depth_peak "
           f"{ov['queue_depth_peak']}, recompiles "
           f"{ov['recompiles_after_warmup']}")
+    sp, pc = report["spec"], report["prefix_cache"]
+    print(f"raw speed: spec {sp['speedup_vs_nonspec']:.2f}x non-spec "
+          f"goodput (topk acceptance "
+          f"{sp['drafts']['topk']['acceptance']:.2f}), prefix cache saved "
+          f"{pc['saved_replay_steps']} replay steps ({pc['hits']} hits, "
+          f"{pc['on']['steps']} vs {pc['off']['steps']} steps)")
     sc = report["scaling"]
     print(f"scaling: tok/step @8dev vs @1dev "
           f"{sc['goodput_scaling_8v1']:.2f}x, monotone "

@@ -8,6 +8,14 @@ streaming callbacks — then shows the two properties the subsystem is built
 around: (1) slot-table decoding is bit-identical per request to a solo
 ``generate()`` run, and (2) everything after the first step/admission runs
 with ZERO recompiles.
+
+Part two serves the raw-speed stack (DESIGN.md SS16) on a shared
+system-prompt workload — every request opens with the same template, the
+agent/RAG deployment shape: the prefix KV cache turns the shared replay
+into block copies, and estimator-speculative decoding (a cheap ``topk``
+draft verified by the serving tier in one batched pass) lands several
+tokens per step. Tokens stay bit-identical the whole way; the demo prints
+cache hits and the acceptance rate per serving tier.
 """
 import sys
 sys.path.insert(0, "src")
@@ -64,3 +72,48 @@ batched = next(c for c in report.completions
 assert batched == [int(t) for t in np.asarray(solo)[0]]
 print(f"\nreq {req.req_id} served in the busy slot table == solo "
       f"generate(): {batched}")
+
+# -- raw speed: shared system prompt + speculation (DESIGN.md SS16) ---------
+# Every agent request opens with the same template; after the first
+# completion registers its blocks, later admissions copy the shared KV
+# instead of replaying it, and a cheap topk draft proposes 4 tokens per
+# step for the serving tier to verify in one batched pass.
+print("\n--- shared-system-prompt traffic: prefix cache + speculation ---")
+system_prompt = rng.integers(0, cfg.vocab, size=(12,))
+
+
+def shared_wave(n, tag):
+    return [Request(prompt=np.concatenate(
+                        [system_prompt,
+                         rng.integers(0, cfg.vocab, size=(1 + i % 3,))]),
+                    max_new_tokens=6,
+                    key=jax.random.PRNGKey(500 + tag * 100 + i),
+                    temperature=0.0 if i % 2 == 0 else 0.8)
+            for i in range(n)]
+
+
+fast_sched = Scheduler(engine, n_slots=4, key=key,
+                       spec_draft="topk", spec_k=4,
+                       prefix_cache_blocks=16, prefix_block_tokens=4)
+fast_server = Server(fast_sched)
+for wave in range(2):        # wave 2 finds the pool warm
+    reqs = shared_wave(6, wave)
+    for r in reqs:
+        fast_server.submit(r)
+    rep = fast_server.run()
+    for r in reqs:           # still bit-identical to solo generate()
+        got = next(c for c in rep.completions
+                   if c.request.req_id == r.req_id).tokens
+        solo = generate(engine, jax.numpy.asarray(r.prompt)[None],
+                        r.max_new_tokens, r.key,
+                        temperature=r.temperature)
+        assert got == [int(t) for t in np.asarray(solo)[0]]
+    acc_by_tier = ", ".join(f"{t}: {a:.0%}" for t, a in
+                            sorted(rep.spec_acceptance_by_tier.items()))
+    print(f"wave {wave + 1}: {rep.goodput_tok_s:.0f} tok/s, prefix hits "
+          f"{rep.prefix['hits']} (saved {rep.prefix['saved_steps']} replay "
+          f"steps), acceptance by tier [{acc_by_tier}]")
+print(f"pool: {fast_sched.prefix.stats()}")
+print(f"compiles: step={fast_sched.step_traces} (drafted, verified, "
+      f"variable per-lane acceptance — still one executable); every wave-2 "
+      f"token bit-identical to solo generate() on cached KV")

@@ -109,12 +109,25 @@ class ServingConfig:
     # reads the whole index (O(V d)), so this is a chaos-test / low-cadence
     # production knob, not a per-step default (0 = off).
     verify_index_every: int = 0
+    # admission lookahead (DESIGN.md SS16a): with the prefix cache on a
+    # mesh, the queue head may prefer the data replica that owns its cached
+    # blocks while that replica is full — strict FIFO would either stall
+    # admission or forfeit the hit. admit_window > 0 lets the server HOLD
+    # up to that many such requests per admission pass (first fit within
+    # the window admits instead), counting each hold in
+    # ``ServerReport.admit_skipped``. A held request is force-admitted
+    # anywhere (forfeiting its cache hit) after admit_hold holds or when
+    # its deadline is within admit_hold steps — bounded unfairness, no
+    # starvation. 0 = strict FIFO (the PR-6 behavior).
+    admit_window: int = 0
+    admit_hold: int = 8
 
     def validate(self) -> None:
         assert self.max_queue >= 0 and self.default_deadline >= 0
         assert self.degrade_high >= self.degrade_low >= 0
         assert self.degrade_after >= 1 and self.restore_after >= 1
         assert self.verify_index_every >= 0
+        assert self.admit_window >= 0 and self.admit_hold >= 1
 
 
 @dataclasses.dataclass(frozen=True)

@@ -198,6 +198,36 @@ def state_partition_specs(state: BackendState, n_model: int):
     return dataclasses.replace(specs, **repl)
 
 
+def verify_decode(backend: EstimatorBackend, state: BackendState,
+                  h: jax.Array, key: jax.Array, cfg: PartitionConfig, *,
+                  k: int = 1, active: Optional[jax.Array] = None,
+                  use_pallas: bool = False, axis_name: Optional[str] = None,
+                  **kernel_cfg) -> DecodeOut:
+    """k-position batched verification: ONE accurate-backend decode over a
+    (S, k_pos, d) stack of drafted hidden states, the core of
+    estimator-speculative decoding (DESIGN.md SS16b).
+
+    The stack is flattened lane-major to (S*k_pos, d) and dispatched through
+    the backend's ordinary ``decode`` (or ``shard_decode`` when
+    ``axis_name`` is set — inside the scheduler's shard_map step). Because
+    every probe path computes candidates PER QUERY on replicated metadata
+    and masks inactive rows out of the dedup union only (never out of a
+    row's own candidate list), each flattened row's DecodeOut is identical
+    to what a separate single-position step would produce for that hidden
+    state — so verifying k drafted positions in one batch is exact, and the
+    batch amortizes the probe-union gather across all S*k_pos queries.
+    ``active`` is the per-LANE (S,) mask; it is expanded to rows here.
+    Leaves come back flat — callers reshape to (S, k_pos, ...)."""
+    S, kpos, d = h.shape
+    hf = h.reshape(S * kpos, d)
+    act = None if active is None else jnp.repeat(active, kpos)
+    if axis_name is not None:
+        return backend.shard_decode(state, hf, key, cfg, k=k, active=act,
+                                    axis_name=axis_name)
+    return backend.decode(state, hf, key, cfg, k=k, use_pallas=use_pallas,
+                          active=act, **kernel_cfg)
+
+
 def _head_floats(state: BackendState, cfg: PartitionConfig, q: int,
                  u: Optional[int]) -> int:
     """Centroid scan + deduplicated head blocks + query rows."""

@@ -20,6 +20,15 @@ virtual steps (expired queue entries are shed, in-flight lanes evicted),
 and ``--degrade-high/--degrade-low/--degrade-after/--restore-after`` (plus
 an optional explicit ``--ladder``) walk the estimator-tier degradation
 ladder under sustained queue pressure. All default off.
+
+Raw speed (DESIGN.md SS16), still bit-identical per token:
+``--spec-draft topk --spec-k 4`` turns on estimator-speculative decoding
+(a cheap registry tier drafts k tokens per lane inside the compiled step,
+the lane's serving tier verifies them in one batched pass);
+``--prefix-cache-blocks N`` enables the shared-prefix KV pool (admissions
+whose prompt prefix is cached skip those replay steps). ``--admit-window``
+adds bounded admission lookahead so a full preferred replica doesn't
+head-of-line block the queue.
 """
 from __future__ import annotations
 
@@ -103,6 +112,34 @@ def main():
     ap.add_argument("--ladder", default=None,
                     help="comma list of tiers, most-accurate first (default:"
                          " the method's built-in ladder, e.g. mimps,topk)")
+    ap.add_argument("--spec-draft", default=None,
+                    choices=[None] + sorted(BACKENDS),
+                    help="estimator-speculative decoding: draft tier that "
+                         "proposes --spec-k tokens per lane inside the one "
+                         "compiled step; the lane's serving tier verifies "
+                         "all of them in a single batched pass (tokens stay "
+                         "bit-identical; typically 'topk' or 'fmbe')")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per lane per speculative round "
+                         "(ignored without --spec-draft)")
+    ap.add_argument("--spec-draft-probes", type=int, default=0,
+                    help="IVF probes for the draft pass (0 = half the "
+                         "serving tier's n_probe; the draft must be cheaper "
+                         "than the verifier for speculation to pay)")
+    ap.add_argument("--prefix-cache-blocks", type=int, default=0,
+                    help="device-resident shared-prefix KV pool capacity in "
+                         "token blocks; admissions with a cached prefix of "
+                         "L tokens skip L replay steps (0 = off)")
+    ap.add_argument("--prefix-block-tokens", type=int, default=8,
+                    help="tokens per prefix-pool block (match granularity)")
+    ap.add_argument("--admit-window", type=int, default=0,
+                    help="admission lookahead: hold up to N queue-head "
+                         "requests whose prefix-cache-preferred replica is "
+                         "full, admitting the first fit instead "
+                         "(0 = strict FIFO)")
+    ap.add_argument("--admit-hold", type=int, default=8,
+                    help="force-admit a held request anywhere after this "
+                         "many holds (bounds unfairness)")
     ap.add_argument("--verify-index-every", type=int, default=0,
                     help="digest-verify (and restore) the serving tier's "
                          "IVF index every N steps (0 = off)")
@@ -171,14 +208,19 @@ def main():
                 f"len {len(req.prompt):2d} -> {comp.tokens[:8]}"
                 f"{'...' if len(comp.tokens) > 8 else ''}")
 
-    sched = Scheduler(eng, n_slots=args.slots, key=key)
+    sched = Scheduler(eng, n_slots=args.slots, key=key,
+                      spec_draft=args.spec_draft, spec_k=args.spec_k,
+                      spec_draft_probes=args.spec_draft_probes,
+                      prefix_cache_blocks=args.prefix_cache_blocks,
+                      prefix_block_tokens=args.prefix_block_tokens)
     srv_cfg = ServingConfig(
         max_queue=args.max_queue, default_deadline=args.deadline,
         degrade_ladder=tuple(args.ladder.split(",")) if args.ladder else (),
         degrade_high=args.degrade_high, degrade_low=args.degrade_low,
         degrade_after=args.degrade_after, restore_after=args.restore_after,
         health_guard=not args.no_health_guard,
-        verify_index_every=args.verify_index_every)
+        verify_index_every=args.verify_index_every,
+        admit_window=args.admit_window, admit_hold=args.admit_hold)
     server = Server(sched, srv_cfg)
     arrivals = poisson_arrivals(reqs, rate=args.rate, seed=args.seed)
     rep = server.run(arrivals=arrivals)

@@ -183,3 +183,43 @@ def _dyn_update(buf: jax.Array, row: jax.Array, slot) -> jax.Array:
     return jax.vmap(
         lambda b, r, s: jax.lax.dynamic_update_slice(b, r, (s, 0, 0))
     )(buf, row, slot)
+
+
+# -- lane-window KV block ops (serve.prefix_cache) ---------------------------
+#
+# The serving decode state keeps the lane batch at axis -4 and token
+# positions at axis -3 of every k/v leaf (launch.mesh.serve_cache_spec's
+# convention; the model's scanned layers stack extra leading axes). These
+# two primitives are the whole traced surface of the shared prefix cache:
+# a contiguous multi-token read out of one lane, and a contiguous
+# multi-token write back into one lane — both with TRACED lane index and
+# start position, so one compilation serves every (slot, offset) pair.
+
+
+def slice_lane_window(leaf: jax.Array, lane, start, length: int) -> jax.Array:
+    """Read `length` consecutive KV rows of one lane: leaf (*stack, S, L,
+    n_kv, Dh) -> (*stack, 1, length, n_kv, Dh). `lane`/`start` may be
+    traced; `length` is static."""
+    nd = leaf.ndim
+    starts = [jnp.int32(0)] * nd
+    starts[-4] = jnp.asarray(lane, jnp.int32)
+    starts[-3] = jnp.asarray(start, jnp.int32)
+    sizes = list(leaf.shape)
+    sizes[-4] = 1
+    sizes[-3] = length
+    return jax.lax.dynamic_slice(leaf, starts, sizes)
+
+
+def write_lane_window(leaf: jax.Array, rows: jax.Array, lane,
+                      start) -> jax.Array:
+    """Multi-token append: write `rows` (*stack, 1, length, n_kv, Dh) into
+    one lane of `leaf` at positions [start, start+length). The per-token
+    `_dyn_update` generalized to a contiguous window — the prefix-cache
+    copy lands L tokens of KV in one dynamic_update_slice instead of L
+    replay steps."""
+    nd = leaf.ndim
+    starts = [jnp.int32(0)] * nd
+    starts[-4] = jnp.asarray(lane, jnp.int32)
+    starts[-3] = jnp.asarray(start, jnp.int32)
+    return jax.lax.dynamic_update_slice(leaf, rows.astype(leaf.dtype),
+                                        starts)

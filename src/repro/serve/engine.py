@@ -212,6 +212,23 @@ class Engine:
             return BackendState(w=self.state.w)
         if method in ("mimps", "mince", "topk") and self.state.index is not None:
             return BackendState(w=self.state.w, index=self.state.index)
+        if method == "fmbe" and self.state.index is not None:
+            # fmbe as a tier / speculative-draft backend shares the engine's
+            # IVF index too — only the V-independent feature sketch and its
+            # per-block lambda table are built fresh (one phi pass), so a
+            # draft tier costs no second kmeans and hot-swaps with the index
+            from ..core.feature_maps import (FMBEState, build_fmbe_blocks,
+                                             make_feature_map)
+            pc = self.cfg.partition
+            kf, _ = jax.random.split(self._build_key)
+            fm = make_feature_map(kf, self.state.w.shape[-1],
+                                  pc.fmbe_features,
+                                  max_degree=pc.fmbe_max_degree, p=pc.fmbe_p)
+            idx = self.state.index
+            lam_b = build_fmbe_blocks(fm, idx.v_blocks, idx.valid)
+            fmbe = FMBEState(fm=fm, lambda_tilde=lam_b.sum(0),
+                             lambda_blocks=lam_b)
+            return BackendState(w=self.state.w, index=idx, fmbe=fmbe)
         return backend.build(self.cfg.partition,
                              self.model.head_matrix(self.params),
                              self._build_key, device=self.device_index,

@@ -68,10 +68,13 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from ..core.backends import get_backend, state_partition_specs
+from ..core.backends import (get_backend, state_partition_specs,
+                             verify_decode)
 from ..core.decode import (HEALTH_EMPTY_HEAD, HEALTH_NONFINITE_SCORE,
-                           HEALTH_NONFINITE_Z, apply_health_guard)
+                           HEALTH_NONFINITE_Z, apply_health_guard,
+                           health_flags)
 from ..core.distributed import shard_map
+from .prefix_cache import PrefixPool, cache_is_kv_only
 
 _REQ_IDS = itertools.count()
 
@@ -182,6 +185,33 @@ def sample_slots(out, keys: jax.Array, temperature: jax.Array,
     return tok.astype(jnp.int32), score
 
 
+def spec_accept(n_ok: jax.Array, t_stream: jax.Array, t_replay: jax.Array,
+                budget: jax.Array, active: jax.Array, draft_bad: jax.Array,
+                max_len: int, spec_k: int) -> jax.Array:
+    """Accepted-position count per lane for one speculative round — the
+    variable-advance algebra, factored out so the property tests can hammer
+    it directly (DESIGN.md SS16b).
+
+    ``n_ok`` is the leading-correct-input count over the round's spec_k
+    positions (position 0's input is forced correct, so n_ok >= 1). The
+    accepted count ``a`` is n_ok capped three ways: a lane may not emit
+    past its budget (replay positions don't emit — the first
+    r = clip(t_replay-1-t_stream, 0, k) accepted positions are free), may
+    not advance past the KV capacity, and a lane whose DRAFT pass was
+    health-flagged collapses to a = 1 — literally the non-speculative step
+    for that lane this round (the chaos-fault fallback). Inactive lanes
+    advance 0. Invariants (property-tested): active lanes get 1 <= a <=
+    spec_k; emitted count max(0, a - r) never exceeds budget; t_stream + a
+    never exceeds max_len + 1 with equality only at the overflow finish.
+    """
+    r = jnp.clip(t_replay - 1 - t_stream, 0, spec_k)
+    a = jnp.minimum(n_ok, r + jnp.maximum(budget, 0))
+    a = jnp.where(draft_bad, 1, a)
+    a = jnp.clip(a, 1, spec_k)
+    a = jnp.minimum(a, jnp.maximum(max_len - t_stream, 1))
+    return jnp.where(active, a, 0).astype(jnp.int32)
+
+
 class Scheduler:
     """Fixed-capacity continuous-batching scheduler over one ``Engine``.
 
@@ -194,7 +224,10 @@ class Scheduler:
 
     def __init__(self, engine, n_slots: int, prompt_cap: Optional[int] = None,
                  key: Optional[jax.Array] = None, injector=None,
-                 health_guard: bool = True):
+                 health_guard: bool = True,
+                 spec_draft: Optional[str] = None, spec_k: int = 1,
+                 spec_draft_probes: int = 0, prefix_cache_blocks: int = 0,
+                 prefix_block_tokens: int = 8):
         if engine.cfg.n_codebooks:
             raise NotImplementedError(
                 "the slot scheduler serves single-stream text heads; "
@@ -247,8 +280,41 @@ class Scheduler:
             self._placements: Dict[Any, tuple] = {}
             self.table = jax.device_put(self.table, self._table_sh)
             self._no_fault = jax.device_put(self._no_fault, self._lane_sh)
+        # -- estimator-speculative decoding (DESIGN.md SS16b): a cheap
+        # registry backend drafts spec_k tokens per lane inside the step;
+        # ONE batched pass of the lane's serving tier verifies them. The
+        # draft runs a REDUCED probe budget — with the verifier's own
+        # probes the candidates (and hence the deterministic Gumbel-max
+        # sample) would match trivially and speculation would buy nothing.
+        self.spec_draft = spec_draft
+        self.spec_k = max(1, int(spec_k)) if spec_draft else 1
+        pc = engine.cfg.partition
+        self.spec_draft_probes = int(spec_draft_probes) or \
+            max(1, pc.n_probe // 2)
+        self.prefix: Optional[PrefixPool] = None
+        if self.spec_k > 1 or prefix_cache_blocks:
+            if engine.cfg.sliding_window or \
+                    not cache_is_kv_only(self.table.cache):
+                raise NotImplementedError(
+                    "speculative decoding and the prefix cache rely on "
+                    "rewindable full-attention KV lanes (a rejected or "
+                    "stale position is overwritten before it is attended); "
+                    "sliding-window ring buffers and recurrent decode "
+                    "states break that argument")
+        if self.spec_k > 1:
+            get_backend(spec_draft)      # unknown drafts fail at init
+        if prefix_cache_blocks:
+            self.prefix = PrefixPool(
+                self.table.cache, prefix_cache_blocks, prefix_block_tokens,
+                max_match_blocks=max(
+                    1, (self.prompt_cap - 1) // prefix_block_tokens),
+                mesh=self.mesh,
+                cache_shardings=None if self.mesh is None
+                else self._table_sh.cache,
+                n_replicas=self.n_replicas)
         self._step_fns: Dict[str, Callable] = {}
         self._bstate_sh: Dict[str, Any] = {}
+        self._dstate_sh: Dict[str, Any] = {}
         self._admit_fn = self._build_admit()
 
     # -- device state --------------------------------------------------------
@@ -305,6 +371,8 @@ class Scheduler:
         return placed
 
     def _build_step(self, method: str):
+        if self.spec_k > 1:
+            return self._build_spec_step(method)
         eng = self.engine
         model = eng.model
         pc = eng.cfg.partition
@@ -476,6 +544,242 @@ class Scheduler:
 
         return step
 
+    def _build_spec_step(self, method: str):
+        """Draft/verify twin of ``_build_step`` (DESIGN.md SS16b): the ONE
+        compiled step drafts ``spec_k`` tokens per lane with the cheap
+        ``spec_draft`` backend at a reduced probe budget, then verifies all
+        positions with ONE batched pass of the lane's serving tier
+        (``core.backends.verify_decode``) and advances each lane by its
+        accepted count — traced data, so variable per-lane acceptance never
+        recompiles.
+
+        Exactness is deterministic, not stochastic: sampling is Gumbel-max
+        under the per-position fold key, so the verifier's sample at
+        position j is bit-identical to what the non-speculative step would
+        emit there — PROVIDED position j's input token was correct. The
+        accepted prefix is precisely the positions whose inputs were
+        correct (replay positions are forced correct; a generation
+        position's input is the previous draft token, correct iff it
+        matched the previous verifier token), so emitted tokens are
+        bit-identical to the non-speculative scheduler for greedy AND
+        temperature lanes, with no rejection-resampling residual. Rejected
+        positions leave garbage KV above the accepted frontier; every such
+        position is rewritten by a later sequential step before it is ever
+        attended, and the per-lane validity mask hides the rest — the same
+        argument that gates this path to full-attention KV states.
+
+        A tier walk (serve.server's degradation ladder) swaps ``method`` —
+        the VERIFIER — while the draft stays fixed: the protocol is
+        unchanged, only who checks the drafts."""
+        eng = self.engine
+        model = eng.model
+        pc = eng.cfg.partition
+        backend = get_backend(method)
+        draft = get_backend(self.spec_draft)
+        draft_pc = dataclasses.replace(pc, method=self.spec_draft,
+                                       n_probe=self.spec_draft_probes)
+        kernel_cfg = dict(eng.kernel_cfg) \
+            if method == eng.backend.method else {}
+        use_pallas = eng.use_pallas
+        health_guard = self.health_guard
+        max_len = eng.max_len
+        kk = self.spec_k
+        prompt_cap = self.prompt_cap
+        est_key = jax.random.fold_in(self.key, 0xE57)
+        draft_key = jax.random.fold_in(self.key, 0xD4AF)
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        mesh = self.mesh
+
+        def body(table: SlotTable, params, bstate, dstate, fault_nan,
+                 fault_inf):
+            act = table.active
+            corrupt = fault_nan | fault_inf
+            bad_val = jnp.where(fault_inf, jnp.inf, jnp.nan)
+            cache = table.cache
+            hs, ksamps, reps, ovfls, dtoks = [], [], [], [], []
+            draft_bad = jnp.zeros_like(act)
+            d_prev = table.last_token
+            # -- draft phase: kk sequential model steps threading the KV
+            #    cache exactly as kk non-spec steps would; the j-th input is
+            #    the prompt token while replaying, else the (j-1)-th draft
+            for j in range(kk):
+                pos = table.t_stream + j
+                is_rep = pos < table.t_replay
+                t_clamp = jnp.minimum(pos, prompt_cap - 1)
+                ptok = jnp.take_along_axis(table.prompt, t_clamp[:, None],
+                                           1)[:, 0]
+                tok_in = jnp.where(is_rep, ptok, d_prev)
+                ovfls.append(act & (pos >= max_len))
+                pos_safe = jnp.minimum(pos, max_len - 1)
+                h, cache = model.decode_step(params, cache, tok_in,
+                                             pos_safe)
+                fold = jnp.where(is_rep, pos, 10_000 + pos - table.t_replay)
+                step_keys = jax.vmap(jax.random.fold_in)(table.req_key,
+                                                         fold)
+                k_samp = jax.vmap(lambda k: jax.random.split(k)[1])(
+                    step_keys)
+                hs.append(h)
+                ksamps.append(k_samp)
+                reps.append(is_rep)
+                if j < kk - 1:
+                    dk = jax.random.fold_in(
+                        jax.random.fold_in(draft_key, table.step_idx), j)
+                    if mesh is None:
+                        dout = draft.decode(dstate, h, dk, draft_pc,
+                                            k=pc.sample_k,
+                                            use_pallas=use_pallas,
+                                            active=act)
+                    else:
+                        dout = draft.shard_decode(dstate, h, dk, draft_pc,
+                                                  k=pc.sample_k, active=act,
+                                                  axis_name="model")
+                    # lane-fault masks corrupt the DRAFT pass too: a flagged
+                    # draft forces that lane to a = 1 below — per-lane
+                    # fallback to plain non-speculative decode
+                    dout = dout._replace(
+                        log_z=jnp.where(corrupt, bad_val, dout.log_z),
+                        top_score=jnp.where(corrupt[:, None],
+                                            bad_val[:, None],
+                                            dout.top_score))
+                    draft_bad = draft_bad | (health_flags(dout) > 0)
+                    d_tok, _ = sample_slots(dout, k_samp, table.temperature,
+                                            table.sample_k)
+                    dtoks.append(d_tok)
+                    d_prev = d_tok
+            # -- verify phase: ONE accurate-backend pass over all S*kk
+            #    drafted positions, on the SAME estimator key schedule as
+            #    the non-spec step (candidates per row are key-independent;
+            #    the key only drives tail sampling, i.e. log Ẑ)
+            hseq = jnp.stack(hs, 1)
+            k_est = jax.random.fold_in(est_key, table.step_idx)
+            out = verify_decode(backend, bstate, hseq, k_est, pc,
+                                k=pc.sample_k, active=act,
+                                use_pallas=use_pallas,
+                                axis_name=None if mesh is None else "model",
+                                **kernel_cfg)
+            corrupt_r = jnp.repeat(corrupt, kk)
+            bad_r = jnp.repeat(bad_val, kk)
+            out = out._replace(
+                log_z=jnp.where(corrupt_r, bad_r, out.log_z),
+                top_score=jnp.where(corrupt_r[:, None], bad_r[:, None],
+                                    out.top_score))
+            act_r = jnp.repeat(act, kk)
+            hflat = hseq.reshape(-1, hseq.shape[-1])
+            if health_guard and mesh is None:
+                out, vflags = apply_health_guard(out, bstate.w, hflat,
+                                                 pc.sample_k, active=act_r)
+            elif health_guard:
+                from .output_layer import mesh_health_guard
+                out, vflags = mesh_health_guard(out, bstate.w, hflat,
+                                                pc.sample_k, active=act_r,
+                                                axis_name="model")
+            else:
+                vflags = jnp.zeros(act_r.shape, jnp.int32)
+            ks_flat = jnp.stack(ksamps, 1).reshape(-1, 2)
+            v_tok, v_score = sample_slots(
+                out, ks_flat, jnp.repeat(table.temperature, kk),
+                jnp.repeat(table.sample_k, kk))
+            S = act.shape[0]
+            v_tok = v_tok.reshape(S, kk)
+            v_score = v_score.reshape(S, kk)
+            log_z = out.log_z.reshape(S, kk)
+            vflags = vflags.reshape(S, kk)
+            # -- acceptance: leading-correct-input prefix, capped by budget
+            #    / capacity / draft health (spec_accept)
+            ok = jnp.ones_like(act)
+            oks = [ok]
+            for j in range(1, kk):
+                ok = ok & (reps[j] | (dtoks[j - 1] == v_tok[:, j - 1]))
+                oks.append(ok)
+            n_ok = jnp.stack(oks, 1).astype(jnp.int32).sum(1)
+            a = spec_accept(n_ok, table.t_stream, table.t_replay,
+                            table.budget, act, draft_bad, max_len, kk)
+            jpos = jnp.arange(kk)[None, :]
+            accepted_m = jpos < a[:, None]
+            ovfl_m = jnp.stack(ovfls, 1)
+            emit = accepted_m & act[:, None] \
+                & ((table.t_stream[:, None] + jpos)
+                   >= (table.t_replay[:, None] - 1)) & ~ovfl_m
+            e = emit.astype(jnp.int32).sum(1)
+            new_budget = table.budget - e
+            overflow = ovfl_m[:, 0]
+            done = (act & (e > 0) & (new_budget <= 0)) | overflow
+            # one speculative round = one virtual step of deadline service
+            new_ddl = table.deadline - act.astype(jnp.int32)
+            expired = act & ~done & (new_ddl <= 0)
+            finished = done | expired
+            idx = jnp.clip(a - 1, 0, kk - 1)
+            lt = jnp.take_along_axis(v_tok, idx[:, None], 1)[:, 0]
+            new_table = dataclasses.replace(
+                table,
+                cache=cache,
+                last_token=jnp.where(act, lt, table.last_token),
+                t_stream=table.t_stream + a,
+                budget=new_budget,
+                deadline=new_ddl,
+                active=act & ~finished,
+                step_idx=table.step_idx + 1)
+            flags_l = jnp.zeros_like(n_ok)
+            for j in range(kk):
+                flags_l = flags_l | jnp.where(accepted_m[:, j],
+                                              vflags[:, j], 0)
+            head_live = out.head_live if out.head_live is not None \
+                else jnp.zeros((), jnp.int32)
+            n_active = act.astype(jnp.int32).sum()
+            if mesh is not None:
+                n_active = jax.lax.psum(n_active, "data")
+                head_live = jax.lax.psum(head_live, "data")
+            outs = {"token": v_tok, "log_prob": v_score - log_z,
+                    "log_z": log_z, "emitted": emit,
+                    "finished": finished, "overflow": overflow,
+                    "expired": expired, "health": flags_l,
+                    "accepted": a, "draft_flagged": draft_bad & act,
+                    "n_active": n_active, "head_live": head_live}
+            return new_table, outs
+
+        if mesh is None:
+            @partial(jax.jit, donate_argnums=donate)
+            def step(table: SlotTable, params, bstate, dstate, fault_nan,
+                     fault_inf):
+                self.step_traces += 1
+                self.traces_by_tier[method] = \
+                    self.traces_by_tier.get(method, 0) + 1
+                return body(table, params, bstate, dstate, fault_nan,
+                            fault_inf)
+
+            return step
+
+        table_specs = self._table_specs()
+        bstate = self.engine.tier_state(method)
+        bspecs = state_partition_specs(bstate, self.mesh.shape["model"])
+        self._bstate_sh[method] = self._shardings_of(bspecs)
+        dstate = self.engine.tier_state(self.spec_draft)
+        dspecs = state_partition_specs(dstate, self.mesh.shape["model"])
+        self._dstate_sh[self.spec_draft] = self._shardings_of(dspecs)
+        lane = P("data")
+        lane_k = P("data", None)
+        out_specs = (table_specs,
+                     {"token": lane_k, "log_prob": lane_k, "log_z": lane_k,
+                      "emitted": lane_k, "finished": lane, "overflow": lane,
+                      "expired": lane, "health": lane, "accepted": lane,
+                      "draft_flagged": lane,
+                      "n_active": P(), "head_live": P()})
+        sharded = shard_map(body, mesh,
+                            in_specs=(table_specs, P(), bspecs, dspecs,
+                                      lane, lane),
+                            out_specs=out_specs, check_vma=False)
+
+        @partial(jax.jit, donate_argnums=donate)
+        def step(table: SlotTable, params, bstate, dstate, fault_nan,
+                 fault_inf):
+            self.step_traces += 1
+            self.traces_by_tier[method] = \
+                self.traces_by_tier.get(method, 0) + 1
+            return sharded(table, params, bstate, dstate, fault_nan,
+                           fault_inf)
+
+        return step
+
     def _get_step(self, method: str):
         fn = self._step_fns.get(method)
         if fn is None:
@@ -504,15 +808,17 @@ class Scheduler:
 
         @partial(jax.jit, donate_argnums=donate, **jit_kw)
         def admit(table: SlotTable, slot, prompt_row, p_len, budget, key,
-                  temp, sample_k, deadline):
+                  temp, sample_k, deadline, t0):
             self.admit_traces += 1
             upd = lambda arr, val: arr.at[slot].set(val)
+            # t0 > 0 = prefix-cache hit: the pool already landed the first
+            # t0 positions of KV (Scheduler.admit), so replay resumes there
             return dataclasses.replace(
                 table,
                 prompt=jax.lax.dynamic_update_slice(
                     table.prompt, prompt_row[None, :], (slot, 0)),
                 last_token=upd(table.last_token, prompt_row[0]),
-                t_stream=upd(table.t_stream, 0),
+                t_stream=upd(table.t_stream, t0),
                 t_replay=upd(table.t_replay, p_len),
                 budget=upd(table.budget, budget),
                 req_key=table.req_key.at[slot].set(key),
@@ -529,15 +835,25 @@ class Scheduler:
     def n_free(self) -> int:
         return len(self._free)
 
-    def _pick_slot(self) -> int:
+    def _pick_slot(self, preferred_replica: Optional[int] = None) -> int:
         """Claim a free lane. Single device: lowest index (FIFO order over
         a sorted free list — the PR-6 behavior, unchanged). Under a mesh,
         route to the LEAST-LOADED data replica (most free lanes; ties to
         the lowest replica) and take its lowest lane — staggered admissions
         spread across replicas instead of piling onto replica 0, which is
-        what makes goodput scale with the data degree under partial load."""
+        what makes goodput scale with the data degree under partial load.
+        ``preferred_replica`` (prefix-cache affinity: the replica owning a
+        matched block chain) is tried first; when it has no free lane the
+        admission falls through to least-loaded and forfeits the hit."""
         if self.n_replicas == 1:
             return self._free.pop(0)
+        if preferred_replica is not None:
+            cand = [s for s in self._free
+                    if s // self.lanes_per_replica == preferred_replica]
+            if cand:
+                slot = min(cand)
+                self._free.remove(slot)
+                return slot
         free_per = [0] * self.n_replicas
         for s in self._free:
             free_per[s // self.lanes_per_replica] += 1
@@ -546,6 +862,29 @@ class Scheduler:
                    if s // self.lanes_per_replica == rep)
         self._free.remove(slot)
         return slot
+
+    def free_in_replica(self, replica: int) -> int:
+        """Free lanes owned by one data replica (1 replica == the whole
+        table on a single device). The server's bounded-lookahead admission
+        uses this to decide whether holding a request for its preferred
+        replica is worth a skip."""
+        if self.n_replicas == 1:
+            return len(self._free)
+        return sum(1 for s in self._free
+                   if s // self.lanes_per_replica == replica)
+
+    def prefix_preview(self, request: "Request"):
+        """(cached_prefix_tokens, owner_replica) the prefix pool would give
+        this request at admission — None owner when the pool is off or the
+        prompt misses. Host-only dict walk; used by the server's admission
+        lookahead to route requests toward their cached blocks."""
+        if self.prefix is None:
+            return 0, None
+        p_len = int(request.prompt.shape[0])
+        if p_len < 1:
+            return 0, None
+        m, _, owner = self.prefix.match(request.prompt, p_len)
+        return m * self.prefix.block_tokens, owner
 
     @property
     def n_in_flight(self) -> int:
@@ -583,7 +922,19 @@ class Scheduler:
                 f"{self.engine.max_len}")
         if not self._free:
             raise RuntimeError("no free slot; queue the request instead")
-        slot = self._pick_slot()
+        # -- prefix cache: host trie match, then ONE traced block-gather
+        #    lands the cached KV in the lane and replay resumes at t0
+        pref_ids: List[int] = []
+        owner = None
+        if self.prefix is not None:
+            _, pref_ids, owner = self.prefix.match(request.prompt, p_len)
+        slot = self._pick_slot(owner)
+        t0 = 0
+        if pref_ids and (self.n_replicas == 1
+                         or slot // self.lanes_per_replica == owner):
+            new_cache = self.prefix.load(self.table.cache, pref_ids, slot)
+            self.table = dataclasses.replace(self.table, cache=new_cache)
+            t0 = len(pref_ids) * self.prefix.block_tokens
         prompt_row = np.zeros((self.prompt_cap,), np.int32)
         prompt_row[:p_len] = request.prompt
         sk = request.sample_k or self.engine.cfg.partition.sample_k
@@ -593,7 +944,8 @@ class Scheduler:
             self.table, jnp.int32(slot), jnp.asarray(prompt_row),
             jnp.int32(p_len), jnp.int32(request.max_new_tokens),
             jnp.asarray(request.key, jnp.uint32), jnp.float32(
-                request.temperature), jnp.int32(sk), jnp.int32(ddl))
+                request.temperature), jnp.int32(sk), jnp.int32(ddl),
+            jnp.int32(t0))
         self._slot_req[slot] = request
         self._slot_acc[slot] = Completion(
             request=request, tokens=[], log_probs=[], log_zs=[],
@@ -627,41 +979,73 @@ class Scheduler:
         step_fn = self._get_step(self.tier)
         bstate = self.engine.tier_state(self.tier)
         params = self.engine.params
+        spec = self.spec_k > 1
+        dstate = self.engine.tier_state(self.spec_draft) if spec else None
         if self.mesh is not None:
             # canonical placements (identity-memoized: free in steady state)
             params = self._placed("params", params, self._repl_sh)
             bstate = self._placed(("bstate", self.tier), bstate,
                                   self._bstate_sh[self.tier])
+            if spec:
+                dstate = self._placed(("dstate", self.spec_draft), dstate,
+                                      self._dstate_sh[self.spec_draft])
             if fault_nan is not self._no_fault:
                 fault_nan = jax.device_put(fault_nan, self._lane_sh)
                 fault_inf = jax.device_put(fault_inf, self._lane_sh)
-        self.table, out = step_fn(self.table, params, bstate,
-                                  fault_nan, fault_inf)
+        if spec:
+            self.table, out = step_fn(self.table, params, bstate, dstate,
+                                      fault_nan, fault_inf)
+        else:
+            self.table, out = step_fn(self.table, params, bstate,
+                                      fault_nan, fault_inf)
         self.steps_done += 1
         out = jax.device_get(out)
         now = time.perf_counter()
+        # normalize to (S, k) position-major token matrices: the non-spec
+        # step is the k = 1 column
+        if np.asarray(out["token"]).ndim == 1:
+            tok = np.asarray(out["token"])[:, None]
+            em = np.asarray(out["emitted"])[:, None]
+            lp = np.asarray(out["log_prob"])[:, None]
+            lz = np.asarray(out["log_z"])[:, None]
+        else:
+            tok = np.asarray(out["token"])
+            em = np.asarray(out["emitted"])
+            lp = np.asarray(out["log_prob"])
+            lz = np.asarray(out["log_z"])
         completions = []
         for s in range(self.n_slots):
             req = self._slot_req[s]
             if req is None:
                 continue
             acc = self._slot_acc[s]
-            if out["emitted"][s]:
+            for j in range(tok.shape[1]):
+                if not em[s, j]:
+                    continue
                 if acc.first_token_time is None:
                     acc.first_token_time = now
-                acc.tokens.append(int(out["token"][s]))
-                acc.log_probs.append(float(out["log_prob"][s]))
-                acc.log_zs.append(float(out["log_z"][s]))
+                acc.tokens.append(int(tok[s, j]))
+                acc.log_probs.append(float(lp[s, j]))
+                acc.log_zs.append(float(lz[s, j]))
                 if not acc.tiers or acc.tiers[-1] != self.tier:
                     acc.tiers.append(self.tier)
                 if req.on_token is not None:
-                    req.on_token(req, int(out["token"][s]), now)
+                    req.on_token(req, int(tok[s, j]), now)
             if out["finished"][s]:
                 acc.done_time = now
                 acc.overflowed = bool(out["overflow"][s])
                 if out["expired"][s]:
                     acc.error = "deadline exceeded (evicted mid-decode)"
                     acc.reason = "deadline_evicted"
+                if self.prefix is not None and acc.error is None \
+                        and not acc.overflowed:
+                    # cleanly-finished lane: its prompt KV is fully valid —
+                    # register the block-aligned prefix in the pool BEFORE
+                    # the slot recycles
+                    self.prefix.insert(
+                        req.prompt, int(req.prompt.shape[0]),
+                        self.table.cache, s,
+                        s // self.lanes_per_replica)
                 self._slot_req[s] = None
                 self._slot_acc[s] = None
                 self._free.append(s)
@@ -670,21 +1054,27 @@ class Scheduler:
                 if req.on_complete is not None:
                     req.on_complete(req, acc)
         flags = np.asarray(out["health"])
-        return {"wall_s": now - t0,
-                "n_active": int(out["n_active"]),
-                "head_live": int(out["head_live"]),
-                "occupancy": int(out["n_active"]) / self.n_slots,
-                "completions": completions,
-                "tier": self.tier,
-                "n_emitted": int(np.asarray(out["emitted"]).sum()),
-                "index_restored": restored,
-                "health_flagged": int((flags > 0).sum()),
-                "health_nonfinite_z":
-                    int((flags & HEALTH_NONFINITE_Z > 0).sum()),
-                "health_empty_head":
-                    int((flags & HEALTH_EMPTY_HEAD > 0).sum()),
-                "health_nonfinite_score":
-                    int((flags & HEALTH_NONFINITE_SCORE > 0).sum())}
+        rec = {"wall_s": now - t0,
+               "n_active": int(out["n_active"]),
+               "head_live": int(out["head_live"]),
+               "occupancy": int(out["n_active"]) / self.n_slots,
+               "completions": completions,
+               "tier": self.tier,
+               "n_emitted": int(em.sum()),
+               "index_restored": restored,
+               "health_flagged": int((flags > 0).sum()),
+               "health_nonfinite_z":
+                   int((flags & HEALTH_NONFINITE_Z > 0).sum()),
+               "health_empty_head":
+                   int((flags & HEALTH_EMPTY_HEAD > 0).sum()),
+               "health_nonfinite_score":
+                   int((flags & HEALTH_NONFINITE_SCORE > 0).sum())}
+        if spec:
+            rec["spec_proposed"] = int(out["n_active"]) * self.spec_k
+            rec["spec_accepted"] = int(np.asarray(out["accepted"]).sum())
+            rec["draft_flagged"] = \
+                int(np.asarray(out["draft_flagged"]).sum())
+        return rec
 
     def drain(self, reason: str = "server_stopped") -> List[Completion]:
         """Forcibly close out every in-flight lane host-side: each open

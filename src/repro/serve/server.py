@@ -135,6 +135,20 @@ class ServerReport:
     index_restores: int = 0        # digest-verify mismatches repaired
     step_faults: int = 0           # FaultErrors caught + retried at step
                                    # boundaries
+    # -- raw-speed accounting (DESIGN.md SS16) -------------------------------
+    admit_skipped: int = 0         # bounded-lookahead admission holds
+    spec_proposed: int = 0         # lane-positions offered by speculative
+                                   # rounds (n_active * spec_k per step)
+    spec_accepted: int = 0         # lane-positions actually advanced
+    spec_acceptance: float = 0.0   # accepted / proposed (0 when spec off)
+    spec_acceptance_by_tier: Dict[str, float] = dataclasses.field(
+        default_factory=dict)      # per VERIFIER tier (the ladder walks the
+                                   # verifier; the draft stays fixed)
+    draft_flagged: int = 0         # lane-rounds where the draft pass was
+                                   # health-flagged -> non-spec fallback
+    prefix: Dict[str, int] = dataclasses.field(default_factory=dict)
+                                   # this run's prefix-pool deltas: hits,
+                                   # saved_steps, inserted, evictions
 
     def summary(self) -> str:
         ded = f"{self.dedup_ratio_mean:.2f}" \
@@ -151,6 +165,15 @@ class ServerReport:
                      f"({len(self.tier_transitions)} tier moves), "
                      f"{self.index_restores} index restores, "
                      f"{self.step_faults} step faults")
+        if self.spec_proposed:
+            base += (f"; spec acceptance {self.spec_acceptance:.2f} "
+                     f"({self.spec_accepted}/{self.spec_proposed}, "
+                     f"{self.draft_flagged} draft-flagged)")
+        if self.prefix.get("hits") or self.prefix.get("inserted"):
+            base += (f"; prefix hits {self.prefix.get('hits', 0)} saving "
+                     f"{self.prefix.get('saved_steps', 0)} replay steps")
+        if self.admit_skipped:
+            base += f"; {self.admit_skipped} admission holds"
         return base
 
 
@@ -188,6 +211,8 @@ class Server:
         # _queued_at at admission so bookkeeping stays bounded)
         self._run_waits: List[float] = []
         self._rejected: List[Completion] = []
+        self._admit_skips: dict = {}    # req_id -> lookahead holds so far
+        self.admit_skipped = 0
         self._step_faults = 0
         self._tier_ix = 0
         self._pressure = 0
@@ -226,16 +251,45 @@ class Server:
             req.on_complete(req, comp)
 
     def _admit_ready(self) -> None:
+        """Fill free lanes from the queue. Default: strict FIFO (the PR-6
+        behavior, byte-identical when ``admit_window == 0``). With
+        ``admit_window > 0`` the pass does bounded-lookahead first-fit: a
+        request whose preferred (prefix-block-owning) data replica has no
+        free lane is HELD — put back at the queue head in order — so later
+        requests that fit elsewhere admit instead of blocking behind it.
+        Each hold is counted (``admit_skipped``); a request held
+        ``admit_hold`` times, or whose deadline is within ``admit_hold``
+        steps, force-admits anywhere (forfeiting its cache hit), so no
+        request starves past its deadline."""
+        cfg = self.cfg
+        held: List[Request] = []
         while self.queue and self.scheduler.n_free:
             req = self.queue.popleft()
-            queued = self._queued_at.pop(req.req_id, self.step_i)
+            queued = self._queued_at.get(req.req_id, self.step_i)
             ddl_at = self._deadline_at.get(req.req_id)
             if ddl_at is not None and ddl_at - self.step_i < 1:
                 # expired while queued: shed before paying for prefill
+                self._queued_at.pop(req.req_id, None)
+                self._admit_skips.pop(req.req_id, None)
                 self._reject(req, "deadline_queue",
                              f"deadline lapsed after {self.step_i - queued:g}"
                              " steps in queue", queued_at=queued)
                 continue
+            if cfg.admit_window and len(held) < cfg.admit_window:
+                _, owner = self.scheduler.prefix_preview(req)
+                if owner is not None and \
+                        self.scheduler.free_in_replica(owner) == 0:
+                    skips = self._admit_skips.get(req.req_id, 0)
+                    starving = skips + 1 >= cfg.admit_hold or (
+                        ddl_at is not None
+                        and ddl_at - self.step_i <= cfg.admit_hold)
+                    if not starving:
+                        self._admit_skips[req.req_id] = skips + 1
+                        self.admit_skipped += 1
+                        held.append(req)
+                        continue
+            self._queued_at.pop(req.req_id, None)
+            self._admit_skips.pop(req.req_id, None)
             remaining = None if ddl_at is None else int(ddl_at - self.step_i)
             try:
                 self.scheduler.admit(req, deadline_steps=remaining)
@@ -252,6 +306,8 @@ class Server:
                 continue
             self._deadline_at.pop(req.req_id, None)
             self._run_waits.append(self.step_i - queued)
+        for req in reversed(held):
+            self.queue.appendleft(req)
 
     def _update_tier(self) -> None:
         """Hysteresis ladder walk on queue depth. Pressure (depth >= high)
@@ -309,10 +365,14 @@ class Server:
         # submit() calls made before run() (queue_full backpressure) belong
         # to this run's report; both reset after the report is assembled
         self._step_faults = 0
+        self.admit_skipped = 0
+        self._admit_skips = {}
         self.tier_transitions = []
         self._tier_ix = 0
         self._pressure = 0
         self._calm = 0
+        pf0 = self.scheduler.prefix.stats() \
+            if self.scheduler.prefix is not None else None
         self.scheduler.set_tier(self.ladder[0])
         while steps < max_steps:
             while pending and pending[0].at_step <= self.step_i:
@@ -419,6 +479,24 @@ class Server:
         degraded = sum(v for k, v in tokens_by_tier.items()
                        if k != self.ladder[0])
         n_errored = sum(1 for c in completions if c.error is not None)
+        # speculative-decoding accounting: acceptance overall and per
+        # VERIFIER tier (rounds the ladder served at a lower rung verify
+        # with that rung's backend; the draft never moves)
+        spec_proposed = sum(r.get("spec_proposed", 0) for r in run_records)
+        spec_accepted = sum(r.get("spec_accepted", 0) for r in run_records)
+        draft_flagged = sum(r.get("draft_flagged", 0) for r in run_records)
+        spec_by_tier: Dict[str, List[int]] = {}
+        for r in run_records:
+            if r.get("spec_proposed"):
+                ent = spec_by_tier.setdefault(r["tier"], [0, 0])
+                ent[0] += r.get("spec_accepted", 0)
+                ent[1] += r["spec_proposed"]
+        prefix_stats: Dict[str, int] = {}
+        if pf0 is not None:
+            pf1 = self.scheduler.prefix.stats()
+            prefix_stats = {k: pf1[k] - pf0[k] for k in pf0
+                            if k != "cached_blocks"}
+            prefix_stats["cached_blocks"] = pf1["cached_blocks"]
         return ServerReport(
             completions=completions,
             wall_s=wall,
@@ -445,4 +523,13 @@ class Server:
             tier_transitions=list(self.tier_transitions),
             health=health,
             index_restores=index_restores,
-            step_faults=self._step_faults)
+            step_faults=self._step_faults,
+            admit_skipped=self.admit_skipped,
+            spec_proposed=spec_proposed,
+            spec_accepted=spec_accepted,
+            spec_acceptance=spec_accepted / spec_proposed
+            if spec_proposed else 0.0,
+            spec_acceptance_by_tier={t: a / p for t, (a, p)
+                                     in sorted(spec_by_tier.items())},
+            draft_flagged=draft_flagged,
+            prefix=prefix_stats)

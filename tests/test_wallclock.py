@@ -205,6 +205,30 @@ class TestRegressionGate:
                         "recompiles_after_warmup": 0}
                        for d in (1, 2, 4, 8)],
                    "goodput_monotone": True, "goodput_scaling_8v1": 8.0}
+
+        def _spec_row(goodput, tps, acceptance=None):
+            row = {"goodput_tok_s": goodput, "tok_per_step": tps,
+                   "steps": 40, "token_parity": True,
+                   "recompiles_after_warmup": 0}
+            if acceptance is not None:
+                row["acceptance"] = acceptance
+                row["draft_flagged"] = 0
+            return row
+
+        spec = {"scenario": {"n_req": 32, "shared_prefix_len": 8,
+                             "serving_tier": "exact", "vocab": 32768},
+                "nonspec": _spec_row(300.0, 3.4),
+                # topk is the winning draft on both clocks; fmbe pays for
+                # its sketch features and loses both (as measured)
+                "drafts": {"topk": _spec_row(360.0, 6.4, 0.45),
+                           "fmbe": _spec_row(140.0, 3.0, 0.44)},
+                "speedup_vs_nonspec": 1.2}
+        prefix_cache = {"blocks": 64, "block_tokens": 4,
+                        "off": _spec_row(300.0, 3.4) | {"steps": 38},
+                        "on": _spec_row(330.0, 5.8) | {"steps": 22},
+                        "hits": 24, "saved_replay_steps": 192,
+                        "evictions": 0, "token_parity": True,
+                        "recompiles_after_warmup": 0}
         serving = {"goodput_tok_s": 600.0,
                    "sequential_goodput_tok_s": 150.0,
                    "speedup_vs_sequential": 4.0,
@@ -212,6 +236,9 @@ class TestRegressionGate:
                    "occupancy_steady": 0.9, "peak_concurrency": 8,
                    "token_parity_vs_solo": True,
                    "recompiles_after_warmup": 0,
+                   "dedup_by_fill": [[1, 1.0], [2, 0.94], [4, 0.55],
+                                     [8, 0.26]],
+                   "spec": spec, "prefix_cache": prefix_cache,
                    "overload": overload, "scaling": scaling, **(srv or {})}
         if srv and "overload" in srv:
             serving["overload"] = {**overload, **srv["overload"]}
@@ -340,6 +367,61 @@ class TestRegressionGate:
         del rep["scaling"]
         (tmp_path / "BENCH_serving.json").write_text(json.dumps(rep))
         assert self._check(tmp_path, monkeypatch) >= 1
+
+    def test_fails_on_broken_raw_speed_invariants(self, tmp_path,
+                                                  monkeypatch):
+        """The PR-8 gate: a draft that breaks parity / recompiles / has
+        degenerate acceptance, speculation losing to the plain scheduler
+        on either clock, a warm cache that saves nothing, stringified or
+        unsorted dedup_by_fill rows, and missing sections each fail
+        --check on their own."""
+        import benchmarks.run as run
+        self._write(tmp_path)
+        monkeypatch.chdir(tmp_path)
+        monkeypatch.setattr(run, "BASELINE_PATH",
+                            str(tmp_path / "baseline.json"))
+        run.update_baseline()
+        assert self._check(tmp_path, monkeypatch) == 0
+
+        def tweak(section, **kw):
+            self._write(tmp_path)
+            rep = json.loads((tmp_path / "BENCH_serving.json").read_text())
+            node = rep
+            for part in section.split("."):
+                node = node[part]
+            node.update(kw)
+            (tmp_path / "BENCH_serving.json").write_text(json.dumps(rep))
+
+        for section, bad in (
+                ("spec.drafts.topk", {"token_parity": False}),
+                ("spec.drafts.topk", {"recompiles_after_warmup": 1}),
+                ("spec.drafts.topk", {"acceptance": 0.0}),
+                # every draft losing on wall clock fails even with the
+                # tokens-per-step win intact, and vice versa
+                ("spec.drafts.topk", {"goodput_tok_s": 120.0}),
+                ("spec.drafts.topk", {"tok_per_step": 2.0}),
+                ("prefix_cache", {"token_parity": False}),
+                ("prefix_cache", {"recompiles_after_warmup": 1}),
+                ("prefix_cache", {"saved_replay_steps": 0}),
+                ("prefix_cache.on", {"steps": 38})):
+            tweak(section, **bad)
+            assert self._check(tmp_path, monkeypatch) >= 1, (section, bad)
+        # dedup_by_fill: the old stringified-key object form, unsorted
+        # rows, and out-of-range ratios are all format failures
+        for bad_df in ({"1": 1.0, "8": 0.26},
+                       [[8, 0.26], [1, 1.0]],
+                       [[1, 1.0], [8, 1.7]]):
+            self._write(tmp_path)
+            rep = json.loads((tmp_path / "BENCH_serving.json").read_text())
+            rep["dedup_by_fill"] = bad_df
+            (tmp_path / "BENCH_serving.json").write_text(json.dumps(rep))
+            assert self._check(tmp_path, monkeypatch) >= 1, bad_df
+        for missing in ("spec", "prefix_cache"):
+            self._write(tmp_path)
+            rep = json.loads((tmp_path / "BENCH_serving.json").read_text())
+            del rep[missing]
+            (tmp_path / "BENCH_serving.json").write_text(json.dumps(rep))
+            assert self._check(tmp_path, monkeypatch) >= 1, missing
 
     def test_fails_on_broken_train_invariants(self, tmp_path, monkeypatch):
         """The PR-5 gate: dense-ish embedding-grad floats, a gradient that
