@@ -26,8 +26,14 @@ monotone along the 1/2/4/8-device chain (PR 7); estimator-speculative
 decoding beats the non-speculative scheduler on goodput for the
 shared-prefix trace with 0 < acceptance <= 1, and the warm prefix cache
 saves replay steps (fewer virtual steps, saved_replay_steps > 0) — both
-with token parity and zero recompiles (PR 8). Refresh the baseline after
-a *deliberate* perf change with:
+with token parity and zero recompiles (PR 8); the observability layer
+fully enabled costs < 5% goodput with bit-identical tokens and zero
+recompiles, the latency rows (p50/p95/p99, device/host step split,
+per-tier cumulative histograms from the device metric state) are finite
+and monotone, and the overload run's harvested per-tier token counts
+reconcile exactly with the host report (PR 9). Failure messages print the
+offending key, the measured value, and the bound. Refresh the baseline
+after a *deliberate* perf change with:
 
   PYTHONPATH=src python -m benchmarks.run --update-baseline
 """
@@ -108,6 +114,15 @@ def update_baseline() -> None:
     print(f"baseline written -> {BASELINE_PATH}")
 
 
+def _gate_msg(key: str, measured, bound: str, why: str = "") -> str:
+    """Uniform --check failure line: the offending artifact key, the value
+    measured this run, and the bound it broke — so a red CI log names the
+    exact number to go look at without re-running the bench."""
+    m = f"{measured:.4g}" if isinstance(measured, float) else f"{measured}"
+    return f"{key}: measured {m}, bound {bound}" + \
+        (f" — {why}" if why else "")
+
+
 def check() -> int:
     """Compare fresh artifacts against the committed baseline. Returns the
     number of failures (0 = green)."""
@@ -128,13 +143,13 @@ def check() -> int:
             us, us0 = cur[method]["us_per_step"], row["us_per_step"]
             tps, tps0 = cur[method]["tokens_per_s"], row["tokens_per_s"]
             if us > us0 * TOL:
-                failures.append(
-                    f"{name}.{method}: us_per_step {us:.0f} > "
-                    f"{TOL:.2f}x baseline {us0:.0f}")
+                failures.append(_gate_msg(
+                    f"{name}.{method}.us_per_step", us,
+                    f"<= {TOL:.2f}x baseline {us0:.0f}"))
             if tps < tps0 / TOL:
-                failures.append(
-                    f"{name}.{method}: tokens_per_s {tps:.0f} < "
-                    f"baseline {tps0:.0f} / {TOL:.2f}")
+                failures.append(_gate_msg(
+                    f"{name}.{method}.tokens_per_s", tps,
+                    f">= baseline {tps0:.0f} / {TOL:.2f}"))
 
     if same_host:
         cmp_section("decode", snap["decode"], base.get("decode", {}))
@@ -148,9 +163,10 @@ def check() -> int:
             # measures the neighbors, not the code
             cur = snap["serving"]
             if cur["goodput_tok_s"] < ref_srv["goodput_tok_s"] / TOL:
-                failures.append(
-                    f"serving: goodput {cur['goodput_tok_s']:.0f} tok/s < "
-                    f"baseline {ref_srv['goodput_tok_s']:.0f} / {TOL:.2f}")
+                failures.append(_gate_msg(
+                    "serving.goodput_tok_s", cur["goodput_tok_s"],
+                    f">= baseline {ref_srv['goodput_tok_s']:.0f} / "
+                    f"{TOL:.2f}"))
 
     # wall-clock acceptance invariants (machine-relative, so they are stable
     # across runner generations in a way absolute us_per_step is not)
@@ -228,6 +244,68 @@ def check() -> int:
             f"warmup (the mixed step must serve every admission/replay/"
             f"decode mix with one executable)")
 
+    # latency rows (obs satellite): the host tail percentiles and the
+    # device/host step-time split must be finite positives, and the
+    # device-harvested per-tier histogram rows — emitted cumulative — must
+    # be monotone non-decreasing with every tier that served tokens present.
+    lat = srv.get("latency")
+    if not lat:
+        failures.append("serving: latency section missing from artifact")
+    else:
+        for key in ("p50_token_ms", "p95_token_ms", "p99_token_ms",
+                    "step_device_ms_mean", "step_host_ms_mean"):
+            v = lat.get(key)
+            if v is None or not math.isfinite(v) or v <= 0:
+                failures.append(_gate_msg(
+                    f"serving.latency.{key}", v, "finite and > 0"))
+        p50, p95, p99 = (lat.get("p50_token_ms", 0),
+                         lat.get("p95_token_ms", 0),
+                         lat.get("p99_token_ms", 0))
+        if not p50 <= p95 <= p99:
+            failures.append(_gate_msg(
+                "serving.latency.p50<=p95<=p99", (p50, p95, p99),
+                "ordered percentiles"))
+        hist = lat.get("per_tier_cumulative", {})
+        if not hist:
+            failures.append(
+                "serving.latency.per_tier_cumulative: empty — the device "
+                "histogram harvested no steps")
+        for tier, row in hist.items():
+            if any(b < a for a, b in zip(row, row[1:])):
+                failures.append(_gate_msg(
+                    f"serving.latency.per_tier_cumulative[{tier}]", row,
+                    "monotone non-decreasing cumulative buckets"))
+            if len(row) != len(lat.get("edges_ms", [])) + 1:
+                failures.append(_gate_msg(
+                    f"serving.latency.per_tier_cumulative[{tier}].len",
+                    len(row), f"{len(lat.get('edges_ms', []))} edges + "
+                    f"overflow bucket"))
+
+    # observability overhead (obs tentpole acceptance): obs fully enabled
+    # must keep tokens bit-identical to obs-off, trace nothing new, and
+    # cost < 5% goodput. The ratio is measured within one process on one
+    # host (interleaved best-of-5), so it is machine-relative and enforced
+    # unconditionally.
+    oo = srv.get("obs_overhead")
+    if not oo:
+        failures.append("serving: obs_overhead section missing from "
+                        "artifact")
+    else:
+        if oo["goodput_ratio_on_vs_off"] < 0.95:
+            failures.append(_gate_msg(
+                "serving.obs_overhead.goodput_ratio_on_vs_off",
+                oo["goodput_ratio_on_vs_off"], ">= 0.95",
+                "the observability layer costs more than 5% goodput"))
+        if not oo["token_parity_on_vs_off"]:
+            failures.append(
+                "serving.obs_overhead: tokens differ with observability "
+                "on — instrumentation must not perturb sampling")
+        if oo["recompiles_after_warmup"] != 0:
+            failures.append(_gate_msg(
+                "serving.obs_overhead.recompiles_after_warmup",
+                oo["recompiles_after_warmup"], "== 0",
+                "toggling obs changed an executable"))
+
     # overload acceptance invariants (exact, PR 6): at 2x sustained demand
     # through a bounded queue + degradation ladder, the server must shed
     # (not hang), keep serving the admitted work with a finite tail, walk
@@ -265,6 +343,27 @@ def check() -> int:
                 f"serving.overload: {ov['recompiles_after_warmup']} "
                 f"recompiles under overload (tier switches must reuse the "
                 f"per-tier executables compiled at warmup)")
+        oobs = ov.get("obs")
+        if not oobs:
+            failures.append("serving.overload: obs section missing — the "
+                            "overload run must ride fully instrumented")
+        else:
+            if not oobs["tokens_reconciled"]:
+                failures.append(_gate_msg(
+                    "serving.overload.obs.tokens_by_tier_harvested",
+                    oobs["tokens_by_tier_harvested"],
+                    f"== ServerReport.tokens_by_tier "
+                    f"{ov.get('tokens_by_tier')}",
+                    "device counters disagree with host accounting"))
+            if oobs["trace_events"] <= 0:
+                failures.append(_gate_msg(
+                    "serving.overload.obs.trace_events",
+                    oobs["trace_events"], "> 0",
+                    "the overload trace is empty"))
+            if not oobs["shadow_rel_err_by_tier"]:
+                failures.append(
+                    "serving.overload.obs: no shadow rel-err samples — "
+                    "estimator-quality telemetry never fired")
 
     # dedup_by_fill rows (PR 8 format): sorted [int fill, float ratio]
     # pairs — the old object form stringified the int keys and scrambled
@@ -407,6 +506,18 @@ def check() -> int:
               f"({srv['speedup_vs_sequential']:.2f}x sequential), "
               f"occupancy {srv['occupancy_steady']:.2f}, p95 "
               f"{srv['p95_token_ms']:.2f}ms")
+        lat = srv.get("latency", {})
+        if lat:
+            print(f"  serving.latency: p99 {lat['p99_token_ms']:.2f}ms, "
+                  f"step device {lat['step_device_ms_mean']:.2f}ms + host "
+                  f"{lat['step_host_ms_mean']:.2f}ms, tier histograms "
+                  f"{sorted(lat['per_tier_cumulative'])}")
+        oo = srv.get("obs_overhead", {})
+        if oo:
+            print(f"  serving.obs: {oo['goodput_ratio_on_vs_off']:.3f}x "
+                  f"goodput with obs fully on (parity "
+                  f"{oo['token_parity_on_vs_off']}, recompiles "
+                  f"{oo['recompiles_after_warmup']})")
         ov = srv.get("overload", {})
         if ov:
             print(f"  serving.overload: shed {ov['shed_rate']:.2f}, p95 "

@@ -140,11 +140,46 @@ def _overload(sched, cfg, n_slots: int, n_req: int, gen: int, p_lens):
     ov_cfg = ServingConfig(max_queue=n_slots,
                            degrade_high=max(2, n_slots // 2),
                            degrade_low=1, degrade_after=2, restore_after=6)
-    rep = Server(sched, ov_cfg).run(arrivals=arrivals)
+    # observability rides the measured overload run fully enabled (trace +
+    # snapshot + shadow sampling): the CI artifacts come from here, and the
+    # run must STILL trace nothing new — obs state is data, not shape.
+    import os
+
+    from repro.obs import Observability, ObsConfig
+    os.makedirs("artifacts", exist_ok=True)
+    obs = Observability(ObsConfig(
+        harvest_every=8, shadow_every=4, snapshot_every=1,
+        trace_path=os.path.join("artifacts", "serving_trace.jsonl"),
+        snapshot_path=os.path.join("artifacts", "metrics_snapshot.json")))
+    sched.reset_metrics()
+    rep = Server(sched, ov_cfg, obs=obs).run(arrivals=arrivals)
     recompiles = (sched.step_traces - traces0[0]) + \
         (sched.admit_traces - traces0[1])
     assert len(rep.completions) == len(ov_reqs), "overload accounting leak"
+    h = obs.last_harvest
+    obs.close()
+    sched.engine.obs = None
+    sched.shadow_every = 0
+    # the device counters were reset right before the measured run, so the
+    # harvested per-tier token counts must reconcile exactly with the
+    # host-side report — one acceptance criterion of the obs layer
+    harvested_by_tier = {t: v for t, v in h["tokens_by_tier"].items() if v}
+    reconciled = harvested_by_tier == {
+        t: v for t, v in dict(rep.tokens_by_tier).items() if v}
+    shadow = {t: s for t, s in h["shadow_by_tier"].items() if s["count"]}
     return {
+        "obs": {
+            "trace_path": obs.cfg.trace_path,
+            "trace_events": obs.tracer.events_written,
+            "snapshot_path": obs.cfg.snapshot_path,
+            "tokens_by_tier_harvested": harvested_by_tier,
+            "tokens_reconciled": bool(reconciled),
+            "shadow_rel_err_by_tier": {
+                t: {"count": s["count"],
+                    "rel_err_mean": s["rel_err_mean"],
+                    "rel_err_max": s["rel_err_max"]}
+                for t, s in shadow.items()},
+        },
         "n_req": len(ov_reqs),
         "demand_x_capacity": 2.0,
         "max_queue": ov_cfg.max_queue,
@@ -159,6 +194,70 @@ def _overload(sched, cfg, n_slots: int, n_req: int, gen: int, p_lens):
         "goodput_tok_s": rep.goodput_tok_s,
         "recompiles_after_warmup": int(recompiles),
     }
+
+
+def _obs_overhead(sched, cfg, n_req: int, gen: int, p_lens):
+    """Observability tax: the SAME workload served with the obs layer fully
+    enabled (harvest + shadow sampling + trace + snapshot) vs disabled,
+    interleaved 5x each (best-of-N per arm damps shared-host noise).
+
+    Gated by run.py --check: goodput ratio on >= 0.95 of off, tokens
+    bit-identical between the arms, and zero recompiles across the whole
+    section — the executable must not know whether obs is watching (the
+    metric state is always threaded; cadence flags are traced data).
+    """
+    import os
+    import tempfile
+
+    from repro.obs import Observability, ObsConfig
+    from repro.serve import Server, trace_arrivals
+
+    tmp = tempfile.mkdtemp(prefix="obs_overhead_")
+    traces0 = (sched.step_traces, sched.admit_traces)
+    best = {"on": 0.0, "off": 0.0}
+    tokens_ref, parity = None, True
+    for trial in range(5):
+        for mode in ("off", "on"):
+            obs = None
+            if mode == "on":
+                # serve-CLI default cadences: fully on means trace +
+                # metrics + shadow + snapshots, not a stress cadence
+                obs = Observability(ObsConfig(
+                    harvest_every=16, shadow_every=16, snapshot_every=4,
+                    trace_path=os.path.join(tmp, "trace.jsonl"),
+                    snapshot_path=os.path.join(tmp, "snap.json")))
+            else:
+                # detach anything a previous on-arm left behind
+                sched.shadow_every = 0
+                sched.engine.obs = None
+            reqs = _workload(cfg, n_req, gen, p_lens, seed=5)
+            rep = Server(sched, obs=obs).run(
+                arrivals=trace_arrivals(reqs, [0.0] * len(reqs)))
+            if obs is not None:
+                obs.close()
+            # req_ids are globally fresh per trial: compare positionally
+            by_id = {c.request.req_id: c.tokens for c in rep.completions}
+            got = [by_id.get(r.req_id) for r in reqs]
+            if tokens_ref is None:
+                tokens_ref = got
+            else:
+                parity = parity and got == tokens_ref
+            best[mode] = max(best[mode], rep.goodput_tok_s)
+    sched.shadow_every = 0
+    sched.engine.obs = None
+    recompiles = (sched.step_traces - traces0[0]) + \
+        (sched.admit_traces - traces0[1])
+    row = {
+        "goodput_on_tok_s": best["on"],
+        "goodput_off_tok_s": best["off"],
+        "goodput_ratio_on_vs_off": best["on"] / max(best["off"], 1e-9),
+        "token_parity_on_vs_off": bool(parity),
+        "recompiles_after_warmup": int(recompiles),
+    }
+    print(f"  obs on {best['on']:.0f} tok/s vs off {best['off']:.0f} "
+          f"({row['goodput_ratio_on_vs_off']:.3f}x), parity {parity}, "
+          f"recompiles {recompiles}", flush=True)
+    return row
 
 
 def _raw_speed(quick: bool):
@@ -444,12 +543,14 @@ def run(quick: bool = True):
         warm.submit(r)
     warm.run()
     traces_after_warmup = (sched.step_traces, sched.admit_traces)
+    sched.reset_metrics()   # device counters start clean for the latency rows
 
     server = Server(sched)
     arrivals = poisson_arrivals(reqs, rate=2.0, seed=0)
     rep = server.run(arrivals=arrivals)
     recompiles = (sched.step_traces - traces_after_warmup[0]) + \
         (sched.admit_traces - traces_after_warmup[1])
+    mh = sched.harvest_metrics()
 
     got = {c.request.req_id: c.tokens for c in rep.completions}
     parity = all(got.get(r.req_id) == seq_tokens[i]
@@ -480,6 +581,25 @@ def run(quick: bool = True):
         "token_parity_vs_solo": bool(parity),
         "recompiles_after_warmup": int(recompiles),
     }
+    # latency rows (obs satellite): host-percentile tail + the device-side
+    # per-tier step-latency histogram harvested from the metric-state pytree
+    # the compiled step threads. Buckets are emitted CUMULATIVE (Prometheus
+    # histogram convention) so run.py --check can gate monotonicity.
+    report["latency"] = {
+        "p50_token_ms": rep.p50_token_ms,
+        "p95_token_ms": rep.p95_token_ms,
+        "p99_token_ms": rep.p99_token_ms,
+        "step_device_ms_mean": rep.step_device_ms_mean,
+        "step_host_ms_mean": rep.step_host_ms_mean,
+        "edges_ms": list(mh["latency_edges_ms"]),
+        "per_tier_cumulative": {
+            tier: [int(c) for c in np.cumsum(counts)]
+            for tier, counts in mh["latency_hist_by_tier"].items()
+            if sum(counts)},
+    }
+    print("observability overhead (obs fully on vs off, best of 5 "
+          "interleaved):", flush=True)
+    report["obs_overhead"] = _obs_overhead(sched, cfg, n_req, gen, p_lens)
     report["overload"] = _overload(sched, cfg, n_slots, n_req, gen, p_lens)
     print("raw speed (speculation + prefix cache, shared-prefix trace, "
           "exact tier @ 32k vocab):", flush=True)

@@ -131,6 +131,40 @@ class ServingConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Observability layer (``obs``, DESIGN.md SS17).
+
+    Cadences are in **scheduler steps**. Everything here is host policy:
+    the device-resident metric state is threaded through the compiled step
+    unconditionally (same executable with observability on or off — that is
+    what keeps tokens bit-identical), and this config only decides how often
+    the host harvests it and where the results go. Defaults give live
+    metrics with shadow sampling at 1/16 steps and no file/network sinks.
+    """
+    metrics: bool = True          # harvest device metrics into the registry
+    harvest_every: int = 16       # steps between device->host metric reads
+                                  # (the only readback observability adds;
+                                  # the per-step outs readback already
+                                  # exists for token streaming)
+    shadow_every: int = 16        # steps between shadow-sampled exact log-Z
+                                  # passes (0 = off). The pass runs under
+                                  # lax.cond inside the SAME executable; the
+                                  # cadence flag is traced data
+    trace_path: str = ""          # per-request span trace (Chrome-trace
+                                  # JSONL); "" = tracing off
+    metrics_port: int = 0         # Prometheus text exposition on
+                                  # 127.0.0.1:port (0 = no HTTP server)
+    snapshot_path: str = ""       # periodic JSON metric snapshots ("" = off)
+    snapshot_every: int = 4       # snapshots are written every N harvests
+
+    def validate(self) -> None:
+        assert self.harvest_every >= 1
+        assert self.shadow_every >= 0
+        assert self.snapshot_every >= 1
+        assert 0 <= self.metrics_port < 65536
+
+
+@dataclasses.dataclass(frozen=True)
 class MoEConfig:
     n_experts: int = 64
     n_shared: int = 2

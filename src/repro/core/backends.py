@@ -228,6 +228,23 @@ def verify_decode(backend: EstimatorBackend, state: BackendState,
                           active=act, **kernel_cfg)
 
 
+def shadow_exact_log_z(state: BackendState, h: jax.Array,
+                       axis_name: Optional[str] = None) -> jax.Array:
+    """Ground-truth log Z for the observability shadow sampler (obs/): the
+    EXACT backend's log-partition expression, reproduced term-for-term so
+    that shadow-sampling the exact tier yields rel-err identically zero
+    (bitwise: same dtype cast, same reduction — ``exact_topk_decode``'s XLA
+    branch single-device, ``mesh_exact_decode``'s logspace-psum under the
+    model axis). Every ``BackendState`` carries the dense embedding ``w``
+    (the health guard's fallback already relies on it), so the oracle costs
+    one dense matmul on the shadow cadence and nothing on other steps."""
+    lse = jax.nn.logsumexp((h @ state.w.T).astype(jnp.float32), -1)
+    if axis_name is None:
+        return lse
+    from .distributed import logspace_psum
+    return logspace_psum(lse, axis_name)
+
+
 def _head_floats(state: BackendState, cfg: PartitionConfig, q: int,
                  u: Optional[int]) -> int:
     """Centroid scan + deduplicated head blocks + query rows."""

@@ -43,6 +43,7 @@ import numpy as np
 from ..configs import ServingConfig, get_config, reduced_config
 from ..core.backends import BACKENDS
 from ..models import Model
+from ..obs import Observability, ObsConfig
 from ..serve import (Engine, Request, Scheduler, Server, generate,
                      poisson_arrivals)
 
@@ -147,6 +148,21 @@ def main():
                     help="disable the in-step estimator health guard "
                          "(non-finite log-Z / empty probe union -> exact "
                          "fallback)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write per-request lifecycle spans + step phases "
+                         "as Chrome-trace/Perfetto JSONL to PATH "
+                         "(summarize with repro.launch.obs_report)")
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="serve Prometheus text metrics on "
+                         "127.0.0.1:PORT/metrics (0 = off)")
+    ap.add_argument("--metrics-snapshot", default=None, metavar="PATH",
+                    help="write periodic JSON metric snapshots to PATH")
+    ap.add_argument("--harvest-every", type=int, default=16,
+                    help="steps between device->host metric harvests")
+    ap.add_argument("--shadow-every", type=int, default=16,
+                    help="steps between shadow-sampled exact log-Z passes "
+                         "feeding the live per-tier rel-err stream "
+                         "(0 = off)")
     ap.add_argument("--stream", action="store_true",
                     help="print every completion as it finishes")
     ap.add_argument("--sequential", action="store_true",
@@ -221,10 +237,33 @@ def main():
         health_guard=not args.no_health_guard,
         verify_index_every=args.verify_index_every,
         admit_window=args.admit_window, admit_hold=args.admit_hold)
-    server = Server(sched, srv_cfg)
+    obs = None
+    if args.trace_out or args.metrics_port or args.metrics_snapshot:
+        obs = Observability(ObsConfig(
+            harvest_every=args.harvest_every,
+            shadow_every=args.shadow_every,
+            trace_path=args.trace_out or "",
+            metrics_port=args.metrics_port,
+            snapshot_path=args.metrics_snapshot or ""))
+        if obs.port:
+            print(f"  metrics: http://127.0.0.1:{obs.port}/metrics")
+    server = Server(sched, srv_cfg, obs=obs)
     arrivals = poisson_arrivals(reqs, rate=args.rate, seed=args.seed)
     rep = server.run(arrivals=arrivals)
     print("continuous:", rep.summary())
+    if obs is not None:
+        h = obs.last_harvest or {}
+        shadow = h.get("shadow_by_tier", {})
+        live = {t: f"{v['rel_err_mean']:.2e}/{v['rel_err_max']:.2e}"
+                for t, v in shadow.items() if v["count"]}
+        if live:
+            print(f"  shadow rel-err mean/max by tier: {live}")
+        if args.trace_out:
+            print(f"  trace: {args.trace_out} "
+                  f"({obs.tracer.events_written} events)")
+        if args.metrics_snapshot:
+            print(f"  snapshot: {args.metrics_snapshot}")
+        obs.close()
     step_extra = sched.step_traces - max(len(sched.traces_by_tier), 1)
     print(f"  recompiles after warmup would be: step={step_extra} "
           f"admit={sched.admit_traces - 1} (0 expected; one trace per "

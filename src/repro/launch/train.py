@@ -22,8 +22,11 @@ from ..configs import get_config, reduced_config
 from ..configs.base import TrainConfig
 from ..data import DataIterator, SyntheticCorpus
 from ..models import Model
-from ..train import (CheckpointManager, StragglerWatchdog, init_train_state,
-                     make_elastic_mesh, make_index_refresh, make_train_step)
+from ..train import (CheckpointManager, StragglerWatchdog,
+                     harvest_train_metrics, init_train_metric_state,
+                     init_train_state, make_elastic_mesh,
+                     make_index_refresh, make_instrumented_step,
+                     make_train_step)
 from ..train.losses import ESTIMATOR_LOSSES, LOSSES
 
 
@@ -48,6 +51,14 @@ def main():
                          "backed losses only; shapes are static so the "
                          "refresh never recompiles; 0 disables refreshes)")
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--harvest-every", type=int, default=10,
+                    help="steps between device->host metric syncs; the "
+                         "loop only block_until_ready's on this cadence "
+                         "(device counters accumulate loss/grad stats "
+                         "in between — obs layer, DESIGN.md SS17)")
+    ap.add_argument("--metrics-snapshot", default="", metavar="PATH",
+                    help="write harvested train metrics as JSON to PATH "
+                         "at the end of the run")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -77,11 +88,13 @@ def main():
             it.state.step = manifest["extra"].get("data_step", start_step)
             print(f"resumed from step {start_step}")
 
-    step_fn = jax.jit(make_train_step(model, tc))
+    step_fn = jax.jit(make_instrumented_step(make_train_step(model, tc)))
     refresh_fn = make_index_refresh(model, tc) \
         if tc.loss in ESTIMATOR_LOSSES and tc.index_refresh_every > 0 \
         else None
     wd = StragglerWatchdog()
+    tm = init_train_metric_state()
+    sync_every = max(args.harvest_every, 1)
     with mesh:
         for step in range(start_step, args.steps):
             toks, labels = next(it)
@@ -101,10 +114,16 @@ def main():
                 state, rm = refresh_fn(state)
                 refreshed = (f" [refresh churn {float(rm['churn']):.3f}"
                              f" drift {float(rm['drift']):.3f}]")
-            state, metrics = step_fn(state, batch)
-            jax.block_until_ready(metrics["loss_total"])
+            state, tm, metrics = step_fn(state, tm, batch)
+            # only synchronize with the device on the harvest/log cadence —
+            # between syncs the dispatch queue runs ahead and the device
+            # counters (TrainMetricState) carry the per-step stats
+            log_now = (step % 10 == 0 or step == args.steps - 1
+                       or bool(refreshed))
+            if log_now or (step + 1) % sync_every == 0:
+                jax.block_until_ready(metrics["loss_total"])
             slow = wd.end_step(step)
-            if step % 10 == 0 or step == args.steps - 1 or refreshed:
+            if log_now:
                 print(f"step {step:5d} loss {float(metrics['loss_total']):.4f} "
                       f"gnorm {float(metrics['grad_norm']):.3f} "
                       f"lr {float(metrics['lr']):.2e}"
@@ -112,6 +131,17 @@ def main():
             if mgr and (step + 1) % args.ckpt_every == 0:
                 mgr.save(step + 1, state,
                          extra={"data_step": it.state.step})
+    th = harvest_train_metrics(tm)
+    print(f"train metrics: loss mean {th['loss_mean']:.4f} "
+          f"std {th['loss_std']:.4f} max {th['loss_max']:.4f}  "
+          f"gnorm mean {th['grad_norm_mean']:.3f} "
+          f"max {th['grad_norm_max']:.3f}  "
+          f"nonfinite steps {th['nonfinite_steps']}/{th['steps']}")
+    if args.metrics_snapshot:
+        import json
+        with open(args.metrics_snapshot, "w", encoding="utf-8") as fh:
+            json.dump(th, fh, indent=1)
+        print(f"train metrics snapshot: {args.metrics_snapshot}")
     if mgr:
         mgr.save(args.steps, state, extra={"data_step": it.state.step})
         mgr.wait()

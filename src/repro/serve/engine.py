@@ -119,6 +119,9 @@ class Engine:
         self._tier_states: Dict[str, Any] = {}
         self._digests: Dict[str, tuple] = {}
         self.index_restores = 0
+        # observability sink (obs.Observability.attach): index-lifecycle
+        # events (swap / restore) land in the trace as instants. None = off.
+        self.obs = None
         if self.index is not None:
             self._digests[method] = _digest(self.index.v_blocks)
         # measured Pallas tile sizes, swept once at engine build on a
@@ -184,6 +187,9 @@ class Engine:
         self._digests = {}
         if self.index is not None:
             self._digests[self.backend.method] = _digest(self.index.v_blocks)
+        if self.obs is not None:
+            self.obs.instant("index_swap",
+                             args={"method": self.backend.method})
 
     # -- degradation tiers + retrieval-state integrity ------------------------
 
@@ -271,6 +277,10 @@ class Engine:
         self.index_restores += 1
         if self.index is not None:
             self._digests[self.backend.method] = _digest(self.index.v_blocks)
+        if self.obs is not None:
+            self.obs.instant("index_restore",
+                             args={"method": self.backend.method,
+                                   "restores": self.index_restores})
 
     def _install_state(self, state, method: Optional[str] = None) -> None:
         """Fault-injection hook: install a (possibly corrupted) retrieval

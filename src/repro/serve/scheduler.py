@@ -68,12 +68,15 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from ..core.backends import (get_backend, state_partition_specs,
-                             verify_decode)
+from ..core.backends import (get_backend, shadow_exact_log_z,
+                             state_partition_specs, verify_decode)
 from ..core.decode import (HEALTH_EMPTY_HEAD, HEALTH_NONFINITE_SCORE,
                            HEALTH_NONFINITE_Z, apply_health_guard,
                            health_flags)
 from ..core.distributed import shard_map
+from ..obs.metrics import (TIER_IX, init_metric_state, observe_step,
+                           shadow_rel_err)
+from ..obs.metrics import harvest as harvest_metric_state
 from .prefix_cache import PrefixPool, cache_is_kv_only
 
 _REQ_IDS = itertools.count()
@@ -267,6 +270,18 @@ class Scheduler:
         self._slot_req: List[Optional[Request]] = [None] * n_slots
         self._slot_acc: List[Optional[Completion]] = [None] * n_slots
         self._no_fault = jnp.zeros((n_slots,), bool)
+        # -- observability (obs/, DESIGN.md SS17): the metric pytree is
+        # ALWAYS threaded through the compiled step — enabling harvesting
+        # or shadow sampling later changes only traced data, never the
+        # executable, so tokens stay bit-exact and trace counters pinned
+        self.shadow_every = 0              # shadow-oracle cadence in steps
+                                           # (0 = off); obs.Observability
+                                           # sets it from ObsConfig
+        self.metrics_state = init_metric_state()
+        self._last_step_ms = -1.0          # previous step's device phase,
+                                           # fed forward into the device
+                                           # latency histogram (< 0: none)
+        self._last_step_tier = engine.backend.method
         self.table = self._init_table()
         if self.mesh is not None:
             # canonical shardings: jit keys its compile cache on INPUT
@@ -280,6 +295,11 @@ class Scheduler:
             self._placements: Dict[Any, tuple] = {}
             self.table = jax.device_put(self.table, self._table_sh)
             self._no_fault = jax.device_put(self._no_fault, self._lane_sh)
+            # metric counters are replicated (each replica accumulates the
+            # same psum-reduced globals); pin them so the step executable's
+            # input-sharding cache key never drifts
+            self.metrics_state = jax.device_put(self.metrics_state,
+                                                self._repl_sh)
         # -- estimator-speculative decoding (DESIGN.md SS16b): a cheap
         # registry backend drafts spec_k tokens per lane inside the step;
         # ONE batched pass of the lane's serving tier verifies them. The
@@ -392,6 +412,8 @@ class Scheduler:
         donate = (0,) if jax.default_backend() != "cpu" else ()
 
         mesh = self.mesh
+        tier_ix = TIER_IX[method]
+        n_slots = self.n_slots
 
         # the step body, shared verbatim by both compilation paths: plain
         # jit on a single device, or shard_map over the (data, model) mesh —
@@ -401,7 +423,8 @@ class Scheduler:
         # psum-row-gather bodies in serve.output_layer, bit-identical to
         # decode), the mesh health guard, and the data-psum of the two
         # step scalars
-        def body(table: SlotTable, params, bstate, fault_nan, fault_inf):
+        def body(table: SlotTable, params, bstate, fault_nan, fault_inf,
+                 metrics, extras):
             # -- input token: next prompt token while replaying, else the
             #    lane's own previous sample
             is_replay = table.t_stream < table.t_replay
@@ -494,12 +517,34 @@ class Scheduler:
                 # already — the plan runs on replicated metadata)
                 n_active = jax.lax.psum(n_active, "data")
                 head_live = jax.lax.psum(head_live, "data")
+            # -- observability (obs/): shadow-sampled exact log Z on the
+            # traced cadence flag (both cond branches ride the same
+            # executable — the mesh_health_guard replicated-predicate
+            # pattern licenses the collectives inside) + the metric-state
+            # accumulation. Reads only values the step already computed;
+            # nothing feeds back into sampling.
+            shadow = jax.lax.cond(
+                extras["do_shadow"],
+                lambda: shadow_rel_err(
+                    out.log_z,
+                    shadow_exact_log_z(
+                        bstate, h, None if mesh is None else "model"),
+                    act),
+                lambda: (jnp.float32(0.0), jnp.float32(0.0), jnp.int32(0)))
+            new_metrics = observe_step(
+                metrics, tier_ix, n_slots,
+                n_active=n_active, head_live=head_live,
+                n_emitted=emitted.astype(jnp.int32).sum(),
+                health_flags=flags, queue_depth=extras["queue_depth"],
+                last_ms=extras["last_ms"], last_tier=extras["last_tier"],
+                shadow=shadow,
+                axis_name=None if mesh is None else "data")
             outs = {"token": tok, "log_prob": score - out.log_z,
                     "log_z": out.log_z, "emitted": emitted,
                     "finished": finished, "overflow": overflow,
                     "expired": expired, "health": flags,
                     "n_active": n_active, "head_live": head_live}
-            return new_table, outs
+            return new_table, new_metrics, outs
 
         if mesh is None:
             # params and the retrieval state are traced ARGUMENTS, not
@@ -508,11 +553,13 @@ class Scheduler:
             # serves it from the same executable (shapes are identical
             # under device_index=True)
             @partial(jax.jit, donate_argnums=donate)
-            def step(table: SlotTable, params, bstate, fault_nan, fault_inf):
+            def step(table: SlotTable, params, bstate, fault_nan, fault_inf,
+                     metrics, extras):
                 self.step_traces += 1   # python side effect: counts traces
                 self.traces_by_tier[method] = \
                     self.traces_by_tier.get(method, 0) + 1
-                return body(table, params, bstate, fault_nan, fault_inf)
+                return body(table, params, bstate, fault_nan, fault_inf,
+                            metrics, extras)
 
             return step
 
@@ -526,21 +573,27 @@ class Scheduler:
         bspecs = state_partition_specs(bstate, self.mesh.shape["model"])
         self._bstate_sh[method] = self._shardings_of(bspecs)
         lane = P("data")
-        out_specs = (table_specs,
+        # metric state + host scalars ride replicated (P() prefix covers the
+        # whole pytree): every replica accumulates identical psum-reduced
+        # counters, so the host may harvest any one shard
+        out_specs = (table_specs, P(),
                      {"token": lane, "log_prob": lane, "log_z": lane,
                       "emitted": lane, "finished": lane, "overflow": lane,
                       "expired": lane, "health": lane,
                       "n_active": P(), "head_live": P()})
         sharded = shard_map(body, mesh,
-                            in_specs=(table_specs, P(), bspecs, lane, lane),
+                            in_specs=(table_specs, P(), bspecs, lane, lane,
+                                      P(), P()),
                             out_specs=out_specs, check_vma=False)
 
         @partial(jax.jit, donate_argnums=donate)
-        def step(table: SlotTable, params, bstate, fault_nan, fault_inf):
+        def step(table: SlotTable, params, bstate, fault_nan, fault_inf,
+                 metrics, extras):
             self.step_traces += 1
             self.traces_by_tier[method] = \
                 self.traces_by_tier.get(method, 0) + 1
-            return sharded(table, params, bstate, fault_nan, fault_inf)
+            return sharded(table, params, bstate, fault_nan, fault_inf,
+                           metrics, extras)
 
         return step
 
@@ -589,9 +642,11 @@ class Scheduler:
         draft_key = jax.random.fold_in(self.key, 0xD4AF)
         donate = (0,) if jax.default_backend() != "cpu" else ()
         mesh = self.mesh
+        tier_ix = TIER_IX[method]
+        n_slots = self.n_slots
 
         def body(table: SlotTable, params, bstate, dstate, fault_nan,
-                 fault_inf):
+                 fault_inf, metrics, extras):
             act = table.active
             corrupt = fault_nan | fault_inf
             bad_val = jnp.where(fault_inf, jnp.inf, jnp.nan)
@@ -729,23 +784,45 @@ class Scheduler:
             if mesh is not None:
                 n_active = jax.lax.psum(n_active, "data")
                 head_live = jax.lax.psum(head_live, "data")
+            # -- observability: the shadow oracle scores the SAME flattened
+            # (S*kk) verify rows the serving tier just estimated, so one
+            # cadenced pass samples every drafted position's rel-err
+            shadow = jax.lax.cond(
+                extras["do_shadow"],
+                lambda: shadow_rel_err(
+                    out.log_z,
+                    shadow_exact_log_z(
+                        bstate, hflat, None if mesh is None else "model"),
+                    act_r),
+                lambda: (jnp.float32(0.0), jnp.float32(0.0), jnp.int32(0)))
+            new_metrics = observe_step(
+                metrics, tier_ix, n_slots,
+                n_active=n_active, head_live=head_live,
+                n_emitted=e.sum(),
+                health_flags=flags_l, queue_depth=extras["queue_depth"],
+                last_ms=extras["last_ms"], last_tier=extras["last_tier"],
+                shadow=shadow,
+                spec_proposed=act.astype(jnp.int32).sum() * kk,
+                spec_accepted=a.sum(),
+                draft_flagged=(draft_bad & act).astype(jnp.int32).sum(),
+                axis_name=None if mesh is None else "data")
             outs = {"token": v_tok, "log_prob": v_score - log_z,
                     "log_z": log_z, "emitted": emit,
                     "finished": finished, "overflow": overflow,
                     "expired": expired, "health": flags_l,
                     "accepted": a, "draft_flagged": draft_bad & act,
                     "n_active": n_active, "head_live": head_live}
-            return new_table, outs
+            return new_table, new_metrics, outs
 
         if mesh is None:
             @partial(jax.jit, donate_argnums=donate)
             def step(table: SlotTable, params, bstate, dstate, fault_nan,
-                     fault_inf):
+                     fault_inf, metrics, extras):
                 self.step_traces += 1
                 self.traces_by_tier[method] = \
                     self.traces_by_tier.get(method, 0) + 1
                 return body(table, params, bstate, dstate, fault_nan,
-                            fault_inf)
+                            fault_inf, metrics, extras)
 
             return step
 
@@ -758,7 +835,7 @@ class Scheduler:
         self._dstate_sh[self.spec_draft] = self._shardings_of(dspecs)
         lane = P("data")
         lane_k = P("data", None)
-        out_specs = (table_specs,
+        out_specs = (table_specs, P(),
                      {"token": lane_k, "log_prob": lane_k, "log_z": lane_k,
                       "emitted": lane_k, "finished": lane, "overflow": lane,
                       "expired": lane, "health": lane, "accepted": lane,
@@ -766,17 +843,17 @@ class Scheduler:
                       "n_active": P(), "head_live": P()})
         sharded = shard_map(body, mesh,
                             in_specs=(table_specs, P(), bspecs, dspecs,
-                                      lane, lane),
+                                      lane, lane, P(), P()),
                             out_specs=out_specs, check_vma=False)
 
         @partial(jax.jit, donate_argnums=donate)
         def step(table: SlotTable, params, bstate, dstate, fault_nan,
-                 fault_inf):
+                 fault_inf, metrics, extras):
             self.step_traces += 1
             self.traces_by_tier[method] = \
                 self.traces_by_tier.get(method, 0) + 1
             return sharded(table, params, bstate, dstate, fault_nan,
-                           fault_inf)
+                           fault_inf, metrics, extras)
 
         return step
 
@@ -953,16 +1030,24 @@ class Scheduler:
             done_time=0.0)
         return slot
 
-    def step(self) -> dict:
+    def step(self, queue_depth: int = 0) -> dict:
         """Advance every live lane one token. Returns a host-side record:
         emitted tokens (streamed through ``on_token``), finished requests
         (``on_complete`` + listed under ``"completions"``), occupancy,
         probe-dedup, tier and estimator-health metrics for this step.
+        ``queue_depth`` is the server's admission backlog, recorded into the
+        device-resident queue gauge (traced data — never a recompile).
 
         Fault-injection order matters: the injector fires FIRST (a raised
         ``FaultError`` leaves the table unadvanced — the server retries the
         step), then the digest verify/restore cadence runs so a corrupted
-        retrieval state is repaired BEFORE the compiled step consumes it."""
+        retrieval state is repaired BEFORE the compiled step consumes it.
+
+        Timing: ``wall_device_s`` covers dispatch + compiled step + the
+        outs readback; ``wall_host_s`` is everything else (injector, state
+        lookups, completion bookkeeping, ``on_token``/``on_complete``
+        callbacks); ``wall_s`` is their sum. The raw ``t_*`` perf_counter
+        stamps ride along for the span tracer."""
         t0 = time.perf_counter()
         if self.injector is not None:
             self.injector.on_step_begin(self)
@@ -992,15 +1077,29 @@ class Scheduler:
             if fault_nan is not self._no_fault:
                 fault_nan = jax.device_put(fault_nan, self._lane_sh)
                 fault_inf = jax.device_put(fault_inf, self._lane_sh)
+        # observability scalars: traced data with a fixed pytree structure,
+        # so toggling the shadow cadence or a moving queue depth hits the
+        # same executable
+        do_shadow = bool(self.shadow_every
+                         and self.steps_done % self.shadow_every == 0)
+        extras = {"queue_depth": jnp.int32(max(queue_depth, 0)),
+                  "last_ms": jnp.float32(self._last_step_ms),
+                  "last_tier": jnp.int32(TIER_IX[self._last_step_tier]),
+                  "do_shadow": jnp.bool_(do_shadow)}
+        t_dispatch = time.perf_counter()
         if spec:
-            self.table, out = step_fn(self.table, params, bstate, dstate,
-                                      fault_nan, fault_inf)
+            self.table, self.metrics_state, out = step_fn(
+                self.table, params, bstate, dstate, fault_nan, fault_inf,
+                self.metrics_state, extras)
         else:
-            self.table, out = step_fn(self.table, params, bstate,
-                                      fault_nan, fault_inf)
+            self.table, self.metrics_state, out = step_fn(
+                self.table, params, bstate, fault_nan, fault_inf,
+                self.metrics_state, extras)
         self.steps_done += 1
         out = jax.device_get(out)
         now = time.perf_counter()
+        self._last_step_ms = (now - t_dispatch) * 1e3
+        self._last_step_tier = self.tier
         # normalize to (S, k) position-major token matrices: the non-spec
         # step is the k = 1 column
         if np.asarray(out["token"]).ndim == 1:
@@ -1054,7 +1153,12 @@ class Scheduler:
                 if req.on_complete is not None:
                     req.on_complete(req, acc)
         flags = np.asarray(out["health"])
-        rec = {"wall_s": now - t0,
+        t_done = time.perf_counter()
+        rec = {"wall_s": t_done - t0,
+               "wall_device_s": now - t_dispatch,
+               "wall_host_s": (t_dispatch - t0) + (t_done - now),
+               "t_start": t0, "t_dispatch": t_dispatch,
+               "t_device_done": now, "t_done": t_done,
                "n_active": int(out["n_active"]),
                "head_live": int(out["head_live"]),
                "occupancy": int(out["n_active"]) / self.n_slots,
@@ -1075,6 +1179,23 @@ class Scheduler:
             rec["draft_flagged"] = \
                 int(np.asarray(out["draft_flagged"]).sum())
         return rec
+
+    def harvest_metrics(self) -> dict:
+        """ONE device->host read of the cumulative metric pytree (the obs
+        layer calls this on its harvest cadence; see obs.metrics.harvest).
+        Counters are monotone — harvesting never resets them."""
+        return harvest_metric_state(self.metrics_state, self.n_slots)
+
+    def reset_metrics(self) -> None:
+        """Zero the device metric state (between benchmark phases). The
+        fresh pytree has identical shapes/shardings, so the next step hits
+        its existing executable — pinned under the mesh exactly like the
+        init-time state."""
+        self.metrics_state = init_metric_state()
+        if self.mesh is not None:
+            self.metrics_state = jax.device_put(self.metrics_state,
+                                                self._repl_sh)
+        self._last_step_ms = -1.0
 
     def drain(self, reason: str = "server_stopped") -> List[Completion]:
         """Forcibly close out every in-flight lane host-side: each open

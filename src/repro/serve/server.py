@@ -110,6 +110,7 @@ class ServerReport:
     p95_token_ms: float            #   emitted tokens (gap to previous token
                                    #   of the same request; first token:
                                    #   admission -> emit)
+    p99_token_ms: float            # tail percentile of the same series
     peak_concurrency: int          # max live lanes reached during the run
     occupancy_mean: float          # mean live-lane fraction over live steps
     occupancy_steady: float        # same, but only while demand exceeded
@@ -149,13 +150,21 @@ class ServerReport:
     prefix: Dict[str, int] = dataclasses.field(default_factory=dict)
                                    # this run's prefix-pool deltas: hits,
                                    # saved_steps, inserted, evictions
+    # -- step-time attribution (obs satellite: device vs host split) ---------
+    step_device_ms_mean: float = 0.0   # mean compiled-step + readback time
+    step_host_ms_mean: float = 0.0     # mean host bookkeeping/callback time
+                                       # per step (previously swallowed into
+                                       # the latency figure)
 
     def summary(self) -> str:
         ded = f"{self.dedup_ratio_mean:.2f}" \
             if self.dedup_ratio_mean is not None else "n/a"
         base = (f"{len(self.completions)} requests, {self.steps} steps, "
                 f"{self.goodput_tok_s:.1f} tok/s goodput, per-token p50 "
-                f"{self.p50_token_ms:.2f}ms p95 {self.p95_token_ms:.2f}ms, "
+                f"{self.p50_token_ms:.2f}ms p95 {self.p95_token_ms:.2f}ms "
+                f"p99 {self.p99_token_ms:.2f}ms, step device "
+                f"{self.step_device_ms_mean:.2f}ms + host "
+                f"{self.step_host_ms_mean:.2f}ms, "
                 f"occupancy {self.occupancy_mean:.2f} "
                 f"(steady {self.occupancy_steady:.2f}), probe dedup {ded}")
         if self.rejects_by_reason or self.tier_transitions or \
@@ -189,10 +198,16 @@ class Server:
     """
 
     def __init__(self, scheduler: Scheduler,
-                 cfg: Optional[ServingConfig] = None):
+                 cfg: Optional[ServingConfig] = None, obs=None):
         self.scheduler = scheduler
         self.cfg = cfg or ServingConfig()
         self.cfg.validate()
+        # optional observability layer (obs.Observability): harvest cadence,
+        # span tracing, shadow sampling. The scheduler's instrumented step
+        # is identical with or without it — obs only reads.
+        self.obs = obs
+        if obs is not None:
+            obs.attach(self)
         scheduler.verify_index_every = self.cfg.verify_index_every
         if not scheduler._step_fns:
             # policy reaches mechanism only before the first compile: the
@@ -233,6 +248,8 @@ class Server:
             self._deadline_at[request.req_id] = self.step_i + int(ddl)
         self._queued_at[request.req_id] = float(self.step_i)
         self.queue.append(request)
+        if self.obs is not None:
+            self.obs.on_submit(self, request)
 
     def _reject(self, req: Request, reason: str, error: str,
                 queued_at: Optional[float] = None) -> None:
@@ -247,6 +264,8 @@ class Server:
                           admit_time=now, first_token_time=None,
                           done_time=now, error=error, reason=reason)
         self._rejected.append(comp)
+        if self.obs is not None:
+            self.obs.on_reject(self, req, reason)
         if req.on_complete is not None:
             req.on_complete(req, comp)
 
@@ -395,7 +414,7 @@ class Server:
             if t_start is None:
                 t_start = time.perf_counter()
             try:
-                rec = self.scheduler.step()
+                rec = self.scheduler.step(queue_depth=len(self.queue))
             except FaultError:
                 # injected step-boundary fault: the compiled step never ran,
                 # the table is unadvanced — count it, burn one loop
@@ -414,6 +433,8 @@ class Server:
                 t_end = now
             self.step_i += 1
             steps += 1
+            if self.obs is not None:
+                self.obs.on_step(self, rec)
             if on_step is not None:
                 on_step(self, rec)
         # flush: anything still queued or in-flight at exit (max_steps hit)
@@ -497,7 +518,11 @@ class Server:
             prefix_stats = {k: pf1[k] - pf0[k] for k in pf0
                             if k != "cached_blocks"}
             prefix_stats["cached_blocks"] = pf1["cached_blocks"]
-        return ServerReport(
+        dev_ms = [r["wall_device_s"] * 1e3 for r in run_records
+                  if "wall_device_s" in r]
+        host_ms = [r["wall_host_s"] * 1e3 for r in run_records
+                   if "wall_host_s" in r]
+        report = ServerReport(
             completions=completions,
             wall_s=wall,
             steps=steps,
@@ -507,6 +532,10 @@ class Server:
             if token_lat else float("nan"),
             p95_token_ms=float(np.percentile(token_lat, 95) * 1e3)
             if token_lat else float("nan"),
+            p99_token_ms=float(np.percentile(token_lat, 99) * 1e3)
+            if token_lat else float("nan"),
+            step_device_ms_mean=float(np.mean(dev_ms)) if dev_ms else 0.0,
+            step_host_ms_mean=float(np.mean(host_ms)) if host_ms else 0.0,
             peak_concurrency=max((r["n_active"] for r in live), default=0),
             occupancy_mean=float(np.mean(occ)) if occ else 0.0,
             occupancy_steady=float(np.mean(steady_occ)) if steady_occ
@@ -533,3 +562,6 @@ class Server:
                                      in sorted(spec_by_tier.items())},
             draft_flagged=draft_flagged,
             prefix=prefix_stats)
+        if self.obs is not None:
+            self.obs.on_done(self, report)
+        return report

@@ -1,5 +1,7 @@
-from .train_loop import (TrainState, init_train_state, make_index_refresh,
-                         make_train_step)
+from .train_loop import (TrainMetricState, TrainState,
+                         harvest_train_metrics, init_train_metric_state,
+                         init_train_state, make_index_refresh,
+                         make_instrumented_step, make_train_step)
 from .optimizer import init_opt_state, adamw_update, lr_schedule
 from .checkpoint import CheckpointManager
 from .elastic import make_elastic_mesh, best_mesh_shape, StragglerWatchdog

@@ -35,6 +35,74 @@ class TrainState(NamedTuple):
                             # resume is bit-identical — see checkpoint.py)
 
 
+class TrainMetricState(NamedTuple):
+    """Device-resident training counters (obs layer, DESIGN.md SS17).
+
+    Accumulated INSIDE the jitted step so the host only synchronizes on its
+    harvest cadence — the step loop never calls ``block_until_ready`` per
+    step just to log. Pure data: threading it through the step adds no
+    executable variants (same principle as the scheduler's MetricState).
+    """
+    steps: jax.Array            # i32 scalar
+    loss_sum: jax.Array         # f32 — running sum for the window mean
+    loss_sq_sum: jax.Array      # f32 — running sum of squares (variance)
+    loss_max: jax.Array         # f32
+    grad_norm_sum: jax.Array    # f32
+    grad_norm_max: jax.Array    # f32
+    nonfinite: jax.Array        # i32 — steps whose loss was NaN/Inf
+
+
+def init_train_metric_state() -> TrainMetricState:
+    z32 = jnp.float32(0.0)
+    return TrainMetricState(
+        steps=jnp.int32(0), loss_sum=z32, loss_sq_sum=z32,
+        loss_max=jnp.float32(-jnp.inf), grad_norm_sum=z32,
+        grad_norm_max=z32, nonfinite=jnp.int32(0))
+
+
+def observe_train_step(tm: TrainMetricState,
+                       metrics: Dict[str, jax.Array]) -> TrainMetricState:
+    """Fold one step's metrics into the counters (pure jnp, jit-safe).
+    Non-finite losses are counted but excluded from the running moments so
+    a single blown-up step doesn't poison the window mean."""
+    loss = metrics["loss_total"].astype(jnp.float32)
+    gn = metrics.get("grad_norm", jnp.float32(0.0)).astype(jnp.float32)
+    ok = jnp.isfinite(loss)
+    safe = jnp.where(ok, loss, 0.0)
+    return TrainMetricState(
+        steps=tm.steps + 1,
+        loss_sum=tm.loss_sum + safe,
+        loss_sq_sum=tm.loss_sq_sum + safe * safe,
+        loss_max=jnp.maximum(tm.loss_max, jnp.where(ok, loss, -jnp.inf)),
+        grad_norm_sum=tm.grad_norm_sum + gn,
+        grad_norm_max=jnp.maximum(tm.grad_norm_max, gn),
+        nonfinite=tm.nonfinite + (~ok).astype(jnp.int32))
+
+
+def harvest_train_metrics(tm: TrainMetricState) -> Dict[str, float]:
+    """ONE host sync: device_get the counters and derive window stats."""
+    t = jax.device_get(tm)
+    n = max(int(t.steps), 1)
+    mean = float(t.loss_sum) / n
+    var = max(float(t.loss_sq_sum) / n - mean * mean, 0.0)
+    return {"steps": int(t.steps), "loss_mean": mean,
+            "loss_std": var ** 0.5, "loss_max": float(t.loss_max),
+            "grad_norm_mean": float(t.grad_norm_sum) / n,
+            "grad_norm_max": float(t.grad_norm_max),
+            "nonfinite_steps": int(t.nonfinite)}
+
+
+def make_instrumented_step(step_fn):
+    """Wrap a ``train_step`` so it also threads a ``TrainMetricState``:
+    ``(state, tm, batch) -> (state, tm, metrics)``. Jit the RESULT — the
+    accumulation fuses into the step executable for free."""
+    def inst_step(state: TrainState, tm: TrainMetricState,
+                  batch: Dict[str, jax.Array]):
+        state, metrics = step_fn(state, batch)
+        return state, observe_train_step(tm, metrics), metrics
+    return inst_step
+
+
 def _resolve_n_clusters(cfg: ModelConfig) -> int:
     pc = cfg.partition
     if pc.n_clusters > 0:

@@ -194,7 +194,18 @@ class TestRegressionGate:
             {"methods": methods}))
         overload = {"shed_rate": 0.4, "p95_under_overload": 20.0,
                     "degraded_token_frac": 0.5, "queue_depth_peak": 8,
-                    "max_queue": 8, "recompiles_after_warmup": 0}
+                    "max_queue": 8, "recompiles_after_warmup": 0,
+                    "tokens_by_tier": {"mimps": 50, "topk": 102},
+                    "obs": {"trace_path": "artifacts/t.jsonl",
+                            "trace_events": 252,
+                            "snapshot_path": "artifacts/s.json",
+                            "tokens_by_tier_harvested": {"mimps": 50,
+                                                         "topk": 102},
+                            "tokens_reconciled": True,
+                            "shadow_rel_err_by_tier": {
+                                "mimps": {"count": 24,
+                                          "rel_err_mean": 0.015,
+                                          "rel_err_max": 0.036}}}}
         scaling = {"lanes_per_replica": 4, "clock": "virtual-step",
                    "rows": [
                        {"data": d, "model": 1, "devices": d,
@@ -229,6 +240,19 @@ class TestRegressionGate:
                         "hits": 24, "saved_replay_steps": 192,
                         "evictions": 0, "token_parity": True,
                         "recompiles_after_warmup": 0}
+        latency = {"p50_token_ms": 5.0, "p95_token_ms": 30.0,
+                   "p99_token_ms": 40.0,
+                   "step_device_ms_mean": 1.7, "step_host_ms_mean": 0.3,
+                   "edges_ms": [0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0,
+                                100.0, 200.0, 500.0, 1000.0, 5000.0],
+                   "per_tier_cumulative": {
+                       "mimps": [0, 0, 33, 39, 39, 39, 39, 39, 39, 39,
+                                 39, 39, 39]}}
+        obs_overhead = {"goodput_on_tok_s": 590.0,
+                        "goodput_off_tok_s": 600.0,
+                        "goodput_ratio_on_vs_off": 590.0 / 600.0,
+                        "token_parity_on_vs_off": True,
+                        "recompiles_after_warmup": 0}
         serving = {"goodput_tok_s": 600.0,
                    "sequential_goodput_tok_s": 150.0,
                    "speedup_vs_sequential": 4.0,
@@ -238,10 +262,20 @@ class TestRegressionGate:
                    "recompiles_after_warmup": 0,
                    "dedup_by_fill": [[1, 1.0], [2, 0.94], [4, 0.55],
                                      [8, 0.26]],
+                   "latency": latency, "obs_overhead": obs_overhead,
                    "spec": spec, "prefix_cache": prefix_cache,
                    "overload": overload, "scaling": scaling, **(srv or {})}
         if srv and "overload" in srv:
             serving["overload"] = {**overload, **srv["overload"]}
+        if srv and "latency" in srv:
+            serving["latency"] = {**latency, **srv["latency"]}
+        if srv and "obs_overhead" in srv:
+            serving["obs_overhead"] = {**obs_overhead,
+                                       **srv["obs_overhead"]}
+        if srv and "obs" in srv:
+            serving["overload"] = {
+                **serving["overload"],
+                "obs": {**overload["obs"], **srv["obs"]}}
         (tmp_path / "BENCH_serving.json").write_text(json.dumps(serving))
         train = {"methods": {
             "fused_ce": {"tokens_per_s": 300.0, "us_per_step": 3000.0,
@@ -336,6 +370,40 @@ class TestRegressionGate:
         del rep["overload"]
         (tmp_path / "BENCH_serving.json").write_text(json.dumps(rep))
         assert self._check(tmp_path, monkeypatch) >= 1
+
+    def test_fails_on_broken_obs_invariants(self, tmp_path, monkeypatch):
+        """The PR-9 gate: an observability tax over 5%, perturbed tokens,
+        a recompile from toggling obs, device counters that disagree with
+        host accounting, an empty trace, silent shadow telemetry, or a
+        non-monotone cumulative histogram each fail --check on their
+        own."""
+        import benchmarks.run as run
+        self._write(tmp_path)
+        monkeypatch.chdir(tmp_path)
+        monkeypatch.setattr(run, "BASELINE_PATH",
+                            str(tmp_path / "baseline.json"))
+        run.update_baseline()
+        assert self._check(tmp_path, monkeypatch) == 0
+        for bad in ({"obs_overhead": {"goodput_ratio_on_vs_off": 0.90}},
+                    {"obs_overhead": {"token_parity_on_vs_off": False}},
+                    {"obs_overhead": {"recompiles_after_warmup": 1}},
+                    {"obs": {"tokens_reconciled": False}},
+                    {"obs": {"trace_events": 0}},
+                    {"obs": {"shadow_rel_err_by_tier": {}}},
+                    {"latency": {"p99_token_ms": float("nan")}},
+                    {"latency": {"p99_token_ms": 20.0}},   # p95 > p99
+                    {"latency": {"per_tier_cumulative":
+                                 {"mimps": [5, 3, 39, 39, 39, 39, 39, 39,
+                                            39, 39, 39, 39, 39]}}}):
+            self._write(tmp_path, srv=bad)
+            assert self._check(tmp_path, monkeypatch) >= 1, bad
+        # missing sections are themselves failures
+        for section in ("latency", "obs_overhead"):
+            self._write(tmp_path)
+            rep = json.loads((tmp_path / "BENCH_serving.json").read_text())
+            del rep[section]
+            (tmp_path / "BENCH_serving.json").write_text(json.dumps(rep))
+            assert self._check(tmp_path, monkeypatch) >= 1, section
 
     def test_fails_on_broken_scaling_invariants(self, tmp_path,
                                                 monkeypatch):
