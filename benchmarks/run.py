@@ -188,6 +188,55 @@ def check() -> int:
             failures.append(
                 f"estimators: {m} rel_err {em[m]['rel_err_vs_exact']:.3g} "
                 f">= {cap} (accuracy regression)")
+    if not est["bound"]["ok_all"]:
+        failures.append(
+            "estimators: bound_ok_all false — some method exceeded its "
+            "floats_bound ceiling or broke Pallas/XLA parity")
+    if not est["bound"]["byte_sublinear_all"]:
+        failures.append(
+            "estimators: byte_sublinear_all false — a sublinear method "
+            "touched more embedding floats than exact")
+
+    # lsh acceptance invariants (PR 10): the SimHash collision backend must
+    # beat the exact pass in wall-clock at bench scale with rel_err <= 0.1
+    # at the bench seed (both measured on the same interleaved timing pass),
+    # and its O(R)-row index maintenance (update_rows) must cost strictly
+    # less than a full IVF re-cluster at equal embedding churn.
+    if "lsh" not in em:
+        failures.append("estimators: lsh method missing from artifact")
+    else:
+        if em["lsh"]["us_per_step"] >= em["exact"]["us_per_step"]:
+            failures.append(
+                f"estimators: lsh {em['lsh']['us_per_step']:.0f}us >= "
+                f"exact {em['exact']['us_per_step']:.0f}us — the collision "
+                f"probe must beat the dense pass in wall-clock")
+        if em["lsh"]["rel_err_vs_exact"] > 0.1:
+            failures.append(
+                f"estimators: lsh rel_err "
+                f"{em['lsh']['rel_err_vs_exact']:.3g} > 0.1 at the bench "
+                f"seed (collision-head recall regression)")
+    rc = trn.get("refresh_cost")
+    if not rc:
+        failures.append("train: refresh_cost section missing from artifact")
+    elif rc["lsh_update_us"] >= rc["ivf_refresh_us"]:
+        failures.append(
+            f"train: lsh update_rows {rc['lsh_update_us']:.0f}us >= IVF "
+            f"refresh {rc['ivf_refresh_us']:.0f}us at "
+            f"{rc['rows_updated']} churned rows — the O(R) splice lost to "
+            f"the full re-cluster")
+    lsh_tm = trn["methods"].get("lsh_ce")
+    if not lsh_tm:
+        failures.append("train: lsh_ce run missing from artifact")
+    else:
+        lrf = lsh_tm["refresh"]
+        if lrf["step_retraces"] != 1 or lrf["refresh_retraces"] != 1:
+            failures.append(
+                f"train: lsh_ce {lrf['step_retraces'] - 1} step + "
+                f"{lrf['refresh_retraces'] - 1} refresh recompiles across "
+                f"index refreshes")
+        if lrf["count"] < 1:
+            failures.append(
+                "train: the bench never exercised an lsh index refresh")
 
     # training acceptance invariants (exact ratios, PR 5): the estimator in
     # the gradient must write sublinear embedding-grad floats, match the

@@ -93,13 +93,19 @@ def _train_run(cfg, loss, steps, batch, seq, refresh_every=0, seed=0):
     refresh_traces = {"n": 0}
     if refresh_every:
         # same body make_index_refresh jits, wrapped so retraces are counted
-        from repro.core import refresh_ivf
-        from repro.train.train_loop import _resolve_n_clusters
-        n_clusters = _resolve_n_clusters(cfg)
+        if loss == "lsh_ce":
+            from repro.core.lsh import rehash_lsh
 
-        def refresh_body(index, params):
-            return refresh_ivf(index, model.head_matrix(params),
-                               n_clusters=n_clusters)
+            def refresh_body(index, params):
+                return rehash_lsh(index, model.head_matrix(params))
+        else:
+            from repro.core import refresh_ivf
+            from repro.train.train_loop import _resolve_n_clusters
+            n_clusters = _resolve_n_clusters(cfg)
+
+            def refresh_body(index, params):
+                return refresh_ivf(index, model.head_matrix(params),
+                                   n_clusters=n_clusters)
 
         _refresh_jit, refresh_traces = _counted(refresh_body)
 
@@ -205,6 +211,45 @@ def _grad_fidelity(cfg, batch, seq, seed=0):
             "head_live_blocks": u}
 
 
+def _refresh_cost(cfg, rows_updated=256, seed=0):
+    """Index-maintenance cost at equal churn: perturb R embedding rows, then
+    pay each backend's maintenance primitive. IVF has no per-row splice — a
+    churned index must re-cluster + repack (O(V) assignment work even for
+    kmeans_iters=0 wiring), while the LSH tables splice exactly the R
+    touched rows (``update_rows``, O(R * L * cap)). This is the update-cost
+    claim behind the ``lsh_ce`` training path: refresh cadence can track
+    optimizer churn instead of amortizing a full rebuild. Interleaved
+    best-of timing, same discipline as the decode benches."""
+    from benchmarks.common import time_fns
+    from repro.core import build_ivf_device, refresh_ivf
+    from repro.core.lsh import build_lsh_device, update_rows
+    from repro.train.train_loop import _resolve_n_clusters
+    pc = cfg.partition
+    v, d = cfg.vocab, cfg.d_model
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (v, d), jnp.float32) / jnp.sqrt(d)
+    n_clusters = _resolve_n_clusters(cfg)
+    ivf = build_ivf_device(jax.random.fold_in(key, 1), w,
+                           block_rows=pc.block_rows, n_clusters=n_clusters)
+    lsh = build_lsh_device(jax.random.fold_in(key, 2), w,
+                           n_bits=pc.lsh_bits, n_tables=pc.lsh_tables,
+                           bucket_cap=pc.lsh_bucket_cap,
+                           mips_scale=pc.lsh_mips_scale,
+                           tail_beta=pc.lsh_tail_beta)
+    rows = jax.random.choice(jax.random.fold_in(key, 3), v,
+                             (rows_updated,), replace=False).astype(jnp.int32)
+    w2 = w.at[rows].add(
+        0.1 * jax.random.normal(jax.random.fold_in(key, 4), (rows_updated, d)))
+
+    ivf_fn = jax.jit(lambda idx, ww: refresh_ivf(idx, ww,
+                                                 n_clusters=n_clusters)[0])
+    lsh_fn = jax.jit(lambda idx, ww: update_rows(idx, ww, rows))
+    t_ivf, t_lsh = time_fns([(ivf_fn, (ivf, w2)), (lsh_fn, (lsh, w2))],
+                            reps=15)
+    return {"ivf_refresh_us": t_ivf * 1e6, "lsh_update_us": t_lsh * 1e6,
+            "rows_updated": rows_updated, "ratio": t_lsh / t_ivf}
+
+
 def run(quick=True, out_path="BENCH_train.json"):
     cfg = _cfg(quick)
     steps, batch, seq = (30, 4, 8) if quick else (60, 8, 8)
@@ -214,10 +259,14 @@ def run(quick=True, out_path="BENCH_train.json"):
     fused = _train_run(cfg, "fused_ce", steps, batch, seq)
     mimps = _train_run(cfg, "mimps_ce", steps, batch, seq,
                        refresh_every=refresh_every)
+    lsh = _train_run(cfg, "lsh_ce", steps, batch, seq,
+                     refresh_every=refresh_every)
     fidelity = _grad_fidelity(cfg, batch, seq)
+    refresh_cost = _refresh_cost(cfg)
 
     eval_fused = _exact_eval_loss(cfg, fused)
     eval_mimps = _exact_eval_loss(cfg, mimps)
+    eval_lsh = _exact_eval_loss(cfg, lsh)
     loss_ratio = eval_mimps / eval_fused
     pc = cfg.partition
     report = {
@@ -245,13 +294,28 @@ def run(quick=True, out_path="BENCH_train.json"):
                     "step_retraces": mimps["step_retraces"],
                     "refresh_retraces": mimps["refresh_retraces"]},
             },
+            "lsh_ce": {
+                **{k: lsh[k] for k in
+                   ("tokens_per_s", "us_per_step", "final_loss")},
+                "exact_eval_loss": eval_lsh,
+                "refresh": {
+                    "churn": lsh["churn"], "drift": lsh["drift"],
+                    "count": len(lsh["churn"]),
+                    "step_retraces": lsh["step_retraces"],
+                    "refresh_retraces": lsh["refresh_retraces"]},
+            },
         },
+        "refresh_cost": refresh_cost,
         "loss_ratio_vs_fused": loss_ratio,
+        "lsh_loss_ratio_vs_fused": eval_lsh / eval_fused,
+        "lsh_zero_refresh_recompiles":
+            lsh["step_retraces"] == 1 and lsh["refresh_retraces"] == 1,
         "grad_float_ratio": fidelity["grad_scored_ratio"],
         "zero_refresh_recompiles":
             mimps["step_retraces"] == 1 and mimps["refresh_retraces"] == 1,
         "loss_curves": {"fused_ce": fused["losses"],
-                        "mimps_ce": mimps["losses"]},
+                        "mimps_ce": mimps["losses"],
+                        "lsh_ce": lsh["losses"]},
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)

@@ -30,10 +30,14 @@ params = model.init(key)
 prompt = jax.random.randint(key, (BATCH, PROMPT), 0, base.vocab)
 
 outs = {}
-for method in ("exact", "mimps", "mince", "fmbe", "selfnorm"):
+for method in ("exact", "mimps", "mince", "fmbe", "lsh", "selfnorm"):
+    over = (dict(lsh_bits=7, lsh_tables=12, lsh_bucket_cap=256,
+                 head_cap=1024, lsh_tail_beta=16.0)
+            if method == "lsh" else {})
     cfg = dataclasses.replace(
         base, partition=dataclasses.replace(
-            base.partition, method=method, block_rows=128, n_probe=8, l=512))
+            base.partition, method=method, block_rows=128, n_probe=8, l=512,
+            **over))
     # every method dispatches through the same estimator-backend registry
     eng = Engine(Model(cfg), params, max_len=PROMPT + GEN + 1, key=key)
     h = jax.random.normal(key, (BATCH, cfg.d_model)).astype(cfg.dtype) * 0.3
@@ -42,7 +46,10 @@ for method in ("exact", "mimps", "mince", "fmbe", "selfnorm"):
     jax.block_until_ready(dist["log_z"])
     dt = (time.perf_counter() - t0) * 1e3
     outs[method] = dist
-    if eng.index is None:
+    if method == "lsh":
+        # dedup'd collision-head candidates (head_cap) + the IS tail draws
+        n_scored = 1024 + 512
+    elif eng.index is None:
         n_scored = cfg.vocab
     elif method == "fmbe":
         # head candidates only; the Ẑ itself is the V-independent P·M·d

@@ -28,6 +28,9 @@ class PartitionConfig:
                  an *estimator*), kept as the last rung of the serving
                  degradation ladder where finishing requests beats
                  calibrated log Ẑ.
+      lsh      - Eq.5 head/tail combine over a SimHash collision head
+                 (Spring & Shrivastava 2017): fixed random hyperplanes, O(1)
+                 per-row index updates, no centroid maintenance (core.lsh).
     """
     method: str = "exact"
     k: int = 100                  # head size |S_k(q)|
@@ -51,6 +54,20 @@ class PartitionConfig:
     fmbe_features: int = 4096     # P
     fmbe_max_degree: int = 8      # cap on M ~ Geometric(1/p)
     fmbe_p: float = 2.0
+    # LSH (SimHash/ALSH-MIPS) parameters — the second retrieval structure
+    lsh_bits: int = 8             # K sign bits per table (<= 24: packed
+                                  # codes stay f32-exact for the kernel's
+                                  # matmul packing)
+    lsh_tables: int = 8           # L independent hash tables
+    lsh_bucket_cap: int = 0       # rows per bucket (static shape); 0 = auto
+                                  # (4x the uniform-hash mean, lsh.lsh_bucket_cap)
+    lsh_mips_scale: float = 0.0   # MIPS norm cap M = scale * max|w|: rows
+                                  # heavier than M hash by pure angle,
+                                  # lighter rows sink toward the tail;
+                                  # 0 = angle-only SimHash everywhere
+    lsh_tail_beta: float = 8.0    # norm-tempered tail proposal
+                                  # p_r ∝ exp(beta * |w_r|/max|w|);
+                                  # 0 = uniform tail
     # MINCE solver
     mince_iters: int = 2          # iterations of the general bracketed
                                   # Halley solvers (oracle weighting='paper'
@@ -65,9 +82,10 @@ class PartitionConfig:
     def validate(self) -> None:
         assert self.method in (
             "exact", "mimps", "nmimps", "uniform", "mince", "fmbe",
-            "selfnorm", "topk")
+            "selfnorm", "topk", "lsh")
         assert self.k >= 0 and self.l >= 0
         assert self.sample_k >= 1
+        assert 1 <= self.lsh_bits <= 24 and self.lsh_tables >= 1
 
 
 @dataclasses.dataclass(frozen=True)

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import PartitionConfig
+from . import lsh as _lsh
 from . import mips as _mips
 from .decode import (DecodeOut, exact_topk_decode, fmbe_decode, mimps_decode,
                      mince_decode, selfnorm_decode, topk_head_decode)
@@ -49,6 +50,7 @@ class BackendState:
     w: jax.Array
     index: Optional[_mips.IVFIndex] = None
     fmbe: Optional[FMBEState] = None
+    lsh: Optional[_lsh.LSHIndex] = None
 
 
 def _build_index(cfg: PartitionConfig, w: jax.Array, key: jax.Array,
@@ -501,3 +503,66 @@ class FmbeBackend(EstimatorBackend):
                       if state.fmbe.lambda_blocks is not None else 0)
         return (p_feat * max_deg * d + p_feat + lam_gather +
                 _head_floats(state, cfg, q, u))
+
+
+@register_backend
+class LshBackend(EstimatorBackend):
+    """SimHash collision head + Eq. 5 tail combine (core.lsh): the second
+    retrieval structure. The index supplies ROUTING ONLY — candidates and
+    tail rows are always gathered from ``state.w`` — so there is no embedded
+    row copy to drift stale, swap_index is a cheap re-hash (no Lloyd steps),
+    and the engine's index digests (IVF-only) are simply inapplicable.
+    ``cfg.head_cap`` is reinterpreted as the candidate-ROW cap of the
+    trimmed scoring matmul (0 = auto, ``lsh.resolve_cand_cap``)."""
+    method = "lsh"
+    sublinear = True
+
+    def build(self, cfg, w, key, *, with_index=True, device=False,
+              block_multiple=1):
+        # tiny vocabularies: the exact pass beats any probe — same skip
+        # criterion shape as _build_index (4x the expected bucket load)
+        del device, block_multiple                  # build is always jittable
+        lsh = None
+        if with_index and w.shape[0] >= 4 * (1 << cfg.lsh_bits):
+            lsh = _lsh.build_lsh_device(
+                key, w, n_bits=cfg.lsh_bits, n_tables=cfg.lsh_tables,
+                bucket_cap=cfg.lsh_bucket_cap,
+                mips_scale=cfg.lsh_mips_scale,
+                tail_beta=cfg.lsh_tail_beta)
+        return BackendState(w=w, lsh=lsh)
+
+    def decode(self, state, h, key, cfg, *, k=1, use_pallas=False,
+               active=None, **kernel_cfg):
+        if state.lsh is None:
+            return exact_topk_decode(state.w, h, k=k, use_pallas=use_pallas)
+        return _lsh.lsh_decode(state.lsh, state.w, h, key, l=cfg.l, k=k,
+                               cand_cap=cfg.head_cap, use_pallas=use_pallas,
+                               active=active, **kernel_cfg)
+
+    def shard_decode(self, state, h, key, cfg, *, k=1, active=None,
+                     axis_name="model"):
+        from ..serve.output_layer import (mesh_exact_decode,
+                                          mesh_lsh_decode)
+        if state.lsh is None:
+            return mesh_exact_decode(state.w, h, k=k, axis_name=axis_name)
+        return mesh_lsh_decode(state.lsh, state.w, h, key, l=cfg.l, k=k,
+                               cand_cap=cfg.head_cap, active=active,
+                               axis_name=axis_name)
+
+    def tune(self, state, cfg, h, key, *, path=None):
+        if state.lsh is None:
+            return {}
+        from ..kernels.autotune import tune_lsh_probe
+        return tune_lsh_probe(state.lsh, state.w, h, key,
+                              l=max(cfg.l, 1), cand_cap=cfg.head_cap,
+                              path=path)
+
+    def embedding_floats(self, state, cfg, q, u=None):
+        # hyperplanes + dedup'd candidate rows + shared tail rows + queries
+        v, d = state.w.shape
+        lsh = state.lsh
+        if lsh is None:
+            return v * d + q * d
+        if u is None:        # worst case: every probed bucket slot unique
+            u = min(q * lsh.n_tables * lsh.bucket_cap, v)
+        return (lsh.n_tables * lsh.n_bits * d + u * d + cfg.l * d + q * d)

@@ -174,6 +174,37 @@ def tune_union_scores(w_blocks, h, head_ids, head_live, *,
                     reps=reps, path=path)
 
 
+def tune_lsh_probe(lsh_index, w, h, key, *, l: int, cand_cap: int = 0,
+                   k: int = 1, path: Optional[str] = None,
+                   reps: int = 3) -> Dict[str, int]:
+    """Sweep (block_q, cand_tile, tail_tile) for the fused Hamming-probe
+    decode kernel, on the trimmed candidate set a real decode would score."""
+    from ..core import lsh as _lsh
+    from .lsh_probe import lsh_probe
+    plan = _lsh.lsh_plan(lsh_index, h, key, l, cand_cap=cand_cap)
+    rows = plan.cand_rows
+    cap = rows.shape[0]
+    w_cand = w[rows].astype(jax.numpy.float32)
+    cand_codes = lsh_index.codes[rows]
+    cand_ok = lsh_index.slot_of_row[rows] >= 0
+    tail_rows = w[plan.tail_ids].astype(jax.numpy.float32)
+    q = h.shape[0]
+    cands = [{"block_q": bq, "cand_tile": ct, "tail_tile": tt}
+             for bq in _pow2s(8, max(8, min(256, q)))
+             for ct in _pow2s(64, max(64, min(512, cap)))
+             for tt in _pow2s(8, max(8, min(128, l)))]
+
+    def build(cfg):
+        return lambda: lsh_probe(w_cand, h, lsh_index.proj, rows,
+                                 cand_codes, cand_ok, plan.cand_live,
+                                 tail_rows, plan.tail_accept,
+                                 plan.tail_bias, k=k, **cfg)
+
+    return autotune("lsh_probe", cands, build,
+                    (w_cand, h, lsh_index.proj, tail_rows, k), reps=reps,
+                    path=path)
+
+
 def tune_fmbe_z(omega, degree, coef, lam, x, *, path: Optional[str] = None,
                 reps: int = 3) -> Dict[str, int]:
     """Sweep (block_q, block_p) for the fused feature-map estimate."""

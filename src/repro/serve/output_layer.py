@@ -566,6 +566,52 @@ def mesh_selfnorm_decode(w_local: jax.Array, h: jax.Array, *, k: int = 1,
     return out._replace(log_z=jnp.zeros_like(out.log_z))
 
 
+def mesh_lsh_decode(lsh_index, w_local: jax.Array, h: jax.Array,
+                    key: jax.Array, *, l: int, k: int = 1, cand_cap: int = 0,
+                    active=None, axis_name: str = "model") -> DecodeOut:
+    """LSH collision-head decode under the serving mesh — bit-equal to
+    ``lsh.lsh_decode(..., use_pallas=False)`` at every mesh size.
+
+    The whole LSH index (hyperplanes, codes, buckets, slots — metadata,
+    no embedding payload) is replicated, so ``lsh.lsh_plan`` runs VERBATIM
+    and every shard derives the identical plan; only the embedding rows are
+    sharded, and the step's working set (trimmed candidate union + shared
+    tail) is assembled with the one ``_gather_rows_psum`` — global row ids
+    against the 'model'-row-sharded ``w``."""
+    from ..core import lsh as _lshmod
+    assert l >= 1, "lsh decode needs at least one tail sample"
+    plan = _lshmod.lsh_plan(lsh_index, h, key, l, active=active,
+                            cand_cap=cand_cap)
+
+    def branch(rows, member, col_live):
+        del col_live       # membership already encodes dead columns
+        slots = jnp.concatenate([rows, plan.tail_ids])
+        w = _gather_rows_psum(w_local, slots,
+                              axis_name).astype(jnp.float32)
+        scores = jax.lax.dot_general(
+            h, w, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        c = rows.shape[0]
+        eff = jnp.where(member, scores[:, :c], NEG_INF)
+        head_lse = jax.nn.logsumexp(eff, axis=-1)
+        topv, pos = jax.lax.top_k(eff, k)
+        topi = rows[pos]
+        tail_lse = _decode._masked_tail_lse(scores[:, c:]
+                                            + plan.tail_bias[None, :],
+                                            plan.tail_accept)
+        return head_lse, tail_lse, topv, topi.astype(jnp.int32)
+
+    head_lse, tail_lse, topv, topi = _lshmod._with_trimmed_cands(
+        plan, branch)
+    log_z = combine_head_tail_lse(
+        head_lse, tail_lse,
+        (lsh_index.n - plan.k_eff).astype(jnp.float32),
+        plan.n_accept.astype(jnp.float32))
+    return DecodeOut(log_z=log_z, top_score=topv, top_id=topi,
+                     head_lse=head_lse, tail_lse=tail_lse,
+                     k_eff=plan.k_eff, head_live=plan.cand_live)
+
+
 def mesh_health_guard(out: DecodeOut, w_local: jax.Array, h: jax.Array,
                       k: int, active=None, axis_name: str = "model"):
     """``core.decode.apply_health_guard`` with the exact fallback sharded.

@@ -47,6 +47,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..configs.base import ServingConfig
+from ..core.backends import BACKENDS
 from .faults import FaultError
 from .scheduler import Completion, Request, Scheduler
 
@@ -86,10 +87,14 @@ _DEFAULT_LADDERS: Dict[str, Tuple[str, ...]] = {
     "mimps": ("mimps", "topk"),
     "mince": ("mince", "mimps", "topk"),
     "fmbe": ("fmbe", "topk"),
-    "topk": ("topk",),
-    "exact": ("exact",),
-    "selfnorm": ("selfnorm",),
 }
+# every other registered backend degrades within itself: the REGISTRY is
+# the source of truth (a new backend is never silently unladderable), and a
+# singleton ladder is the right default for backends that share no IVF
+# index with the topk rung (lsh: stepping "down" to topk would force a
+# k-means build the engine never made, and exact is costlier, not cheaper)
+for _m in sorted(BACKENDS):
+    _DEFAULT_LADDERS.setdefault(_m, (_m,))
 
 
 def default_ladder(method: str) -> Tuple[str, ...]:
@@ -216,9 +221,10 @@ class Server:
         self.ladder: Tuple[str, ...] = tuple(
             self.cfg.degrade_ladder or default_ladder(scheduler.tier))
         for tier in self.ladder:
-            if tier not in _DEFAULT_LADDERS and tier not in (
-                    "mimps", "mince", "fmbe", "topk", "exact", "selfnorm"):
-                raise ValueError(f"unknown degradation tier {tier!r}")
+            if tier not in BACKENDS:
+                raise ValueError(
+                    f"unknown degradation tier {tier!r}; registered "
+                    f"backends: {sorted(BACKENDS)}")
         self.queue: deque = deque()
         self._queued_at: dict = {}      # req_id -> virtual step queued
         self._deadline_at: dict = {}    # req_id -> absolute deadline step

@@ -32,6 +32,7 @@ from typing import Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core import lsh as _lsh
 from ..core.decode import (_with_trimmed_head, head_row_table, make_plan,
                            tail_row_ids)
 from ..core.estimators import NEG_INF, combine_head_tail_lse
@@ -147,13 +148,17 @@ def _float0(x):
 @jax.custom_vjp
 def _sparse_ce(h: Array, w: Array, labels: Array, head_rows: Array,
                head_mask: Array, tail_ids: Array, tail_accept: Array,
-               n_tail_total: Array, label_in_head: Array
+               tail_bias: Array, n_tail_total: Array, label_in_head: Array
                ) -> Tuple[Array, Array]:
     """(nll, log Ẑ) per token from a sparse row table.
 
     Forward: one (T, d) x (d, Hc + l) gather+matmul scores the probe-union
     head rows EXACTLY and the shared tail rows, combined per Eq. 5
-    (Rao-Blackwellized (N - k_eff)/n_accept scale). When the label's block
+    (Rao-Blackwellized (N - k_eff)/n_accept scale). ``tail_bias`` (l,)
+    generalizes the combine to importance-sampled tails (Hajek form): each
+    sample's score gets -log(n p_j) added and the accept count becomes the
+    matching effective mass — all-zero bias is bit-for-bit the uniform
+    ratio estimator. When the label's block
     was not probed, its exact score is added to Ẑ explicitly (the
     sampled-softmax "target always in the support" guarantee: p̂ <= 1 and
     the gradient never pushes through a Ẑ that is missing the label's own
@@ -167,21 +172,23 @@ def _sparse_ce(h: Array, w: Array, labels: Array, head_rows: Array,
     training (forward-only sublinearity leaves the V*d backward untouched).
     """
     nll, log_z, _ = _sparse_ce_impl(h, w, labels, head_rows, head_mask,
-                                    tail_ids, tail_accept, n_tail_total,
-                                    label_in_head)
+                                    tail_ids, tail_accept, tail_bias,
+                                    n_tail_total, label_in_head)
     return nll, log_z
 
 
 def _sparse_ce_impl(h, w, labels, head_rows, head_mask, tail_ids,
-                    tail_accept, n_tail_total, label_in_head):
+                    tail_accept, tail_bias, n_tail_total, label_in_head):
     scores = jax.lax.dot_general(
         h, w[head_rows], (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)                  # (T, Hc)
     head_lse = jax.nn.logsumexp(jnp.where(head_mask, scores, NEG_INF), -1)
     ts = jax.lax.dot_general(
         h, w[tail_ids], (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)                  # (T, l)
-    n_acc = tail_accept.sum(-1).astype(jnp.float32)
+        preferred_element_type=jnp.float32) \
+        + tail_bias.astype(jnp.float32)[None, :]             # (T, l)
+    n_acc = jnp.sum(tail_accept
+                    * jnp.exp(tail_bias.astype(jnp.float32))[None, :], -1)
     tail_lse = jax.nn.logsumexp(jnp.where(tail_accept, ts, NEG_INF), -1)
     tail_lse = jnp.where(jnp.any(tail_accept, -1), tail_lse, -jnp.inf)
     log_z0 = combine_head_tail_lse(head_lse, tail_lse, n_tail_total, n_acc)
@@ -192,16 +199,19 @@ def _sparse_ce_impl(h, w, labels, head_rows, head_mask, tail_ids,
 
 
 def _sparse_ce_fwd(h, w, labels, head_rows, head_mask, tail_ids,
-                   tail_accept, n_tail_total, label_in_head):
+                   tail_accept, tail_bias, n_tail_total, label_in_head):
     nll, log_z, (scores, ts, s_lab, n_acc) = _sparse_ce_impl(
         h, w, labels, head_rows, head_mask, tail_ids, tail_accept,
-        n_tail_total, label_in_head)
+        tail_bias, n_tail_total, label_in_head)
     res = (h, w, labels, head_rows, head_mask, tail_ids, tail_accept,
            n_tail_total, label_in_head, scores, ts, s_lab, n_acc, log_z)
     return (nll, log_z), res
 
 
 def _sparse_ce_bwd(res, cts):
+    # NOTE ``ts`` is saved with tail_bias already folded in and ``n_acc``
+    # is the bias-weighted effective count, so the Hajek gradient below is
+    # textually the uniform one
     (h, w, labels, head_rows, head_mask, tail_ids, tail_accept,
      n_tail_total, label_in_head, scores, ts, s_lab, n_acc, log_z) = res
     g_nll, g_lz = cts
@@ -210,7 +220,7 @@ def _sparse_ce_bwd(res, cts):
     p = jnp.where(head_mask, jnp.exp(scores - log_z[:, None]), 0.0) \
         * g1[:, None]                                        # (T, Hc)
     ok = (n_tail_total > 0) & (n_acc > 0)
-    sigma = jnp.where(ok, n_tail_total / jnp.maximum(n_acc, 1.0), 0.0)
+    sigma = jnp.where(ok, n_tail_total / jnp.maximum(n_acc, 1e-9), 0.0)
     qc = jnp.where(tail_accept, jnp.exp(ts - log_z[:, None]), 0.0) \
         * (sigma * g1)[:, None]                              # (T, l)
     r = jnp.where(label_in_head, 0.0, jnp.exp(s_lab - log_z))
@@ -226,8 +236,8 @@ def _sparse_ce_bwd(res, cts):
     dw = dw.at[labels].add(lab_coef[:, None] * hf)
     return (dh.astype(h.dtype), dw.astype(w.dtype), _float0(labels),
             _float0(head_rows), _float0(head_mask), _float0(tail_ids),
-            _float0(tail_accept), jnp.zeros_like(n_tail_total),
-            _float0(label_in_head))
+            _float0(tail_accept), jnp.zeros(tail_ids.shape, jnp.float32),
+            jnp.zeros_like(n_tail_total), _float0(label_in_head))
 
 
 _sparse_ce.defvjp(_sparse_ce_fwd, _sparse_ce_bwd)
@@ -274,7 +284,8 @@ def estimator_ce(index, h: Array, w: Array, labels: Array, key: Array, *,
     def run(head_ids, member):
         head_rows, head_mask = head_row_table(index, head_ids, member)
         return _sparse_ce(h, w, labels, head_rows, head_mask, tail_ids,
-                          accept, n_tail_total, label_in_head)
+                          accept, jnp.zeros(tail_ids.shape, jnp.float32),
+                          n_tail_total, label_in_head)
 
     capacity = plan.head_ids.shape[0]
     nll, log_z = _with_trimmed_head(
@@ -282,6 +293,48 @@ def estimator_ce(index, h: Array, w: Array, labels: Array, key: Array, *,
     aux = {"head_hit_rate": jnp.mean(label_in_head.astype(jnp.float32)),
            "k_eff": jnp.mean(plan.k_eff.astype(jnp.float32)),
            "head_live": plan.head_live}
+    return nll, log_z, aux
+
+
+def lsh_estimator_ce(lsh_index, h: Array, w: Array, labels: Array,
+                     key: Array, *, l: int, cand_cap: int = 0
+                     ) -> Tuple[Array, Array, Dict[str, Array]]:
+    """Estimator-backed CE routed through the SimHash index (core.lsh):
+    the LSH twin of ``estimator_ce``, feeding the SAME ``_sparse_ce``
+    custom VJP — the head here is already ROW-granular (the plan's dedup'd
+    candidate union), so there is no block expansion; gradients scatter-add
+    into exactly the collision-head/tail/label rows.
+
+    Consistency: head membership, tail rejection, and ``label_in_head``
+    all evaluate the one collision predicate (``lsh._collide``) —
+    code-match in any table where the row is actually routed — so every
+    row lands in exactly one of {head, tail population, explicit label
+    term} and no mass is double-counted or lost (overflow-dropped rows
+    fall through to the tail population).
+
+    ``cand_cap`` statically trims the scored union like ``estimator_ce``'s
+    head_cap (0 = no trim: training batches don't share context, so the
+    serving auto-cap would always overflow).
+    """
+    plan = _lsh.lsh_plan(lsh_index, h, key, l,
+                         cand_cap=cand_cap if cand_cap > 0 else lsh_index.n)
+    lab_codes = lsh_index.codes[labels]                      # (T, L)
+    lab_ok = lsh_index.slot_of_row[labels] >= 0              # (T, L)
+    label_in_head = jnp.any((plan.qcodes == lab_codes) & lab_ok, axis=-1)
+    accept = plan.tail_accept & (plan.tail_ids[None, :] != labels[:, None])
+    n_tail_total = (lsh_index.n - plan.k_eff).astype(jnp.float32) \
+        - (~label_in_head).astype(jnp.float32)
+
+    def run(rows, member, col_live):
+        del col_live       # membership already encodes dead columns
+        return _sparse_ce(h, w, labels, rows, member, plan.tail_ids,
+                          accept, plan.tail_bias, n_tail_total,
+                          label_in_head)
+
+    nll, log_z = _lsh._with_trimmed_cands(plan, run)
+    aux = {"head_hit_rate": jnp.mean(label_in_head.astype(jnp.float32)),
+           "k_eff": jnp.mean(plan.k_eff.astype(jnp.float32)),
+           "head_live": plan.cand_live}
     return nll, log_z, aux
 
 
@@ -447,6 +500,37 @@ def loss_mimps_ce(model, params, batch, key, train_cfg, *, index,
                               index=index, constrain_fn=constrain_fn)
 
 
+def loss_lsh_ce(model, params, batch, key, train_cfg, *, index,
+                constrain_fn=None) -> Tuple[Array, Dict]:
+    """SimHash-backed estimator CE: the ``lsh`` serving backend's training
+    twin. Same sparse forward/backward (``_sparse_ce``) with the collision
+    head replacing the probe union; ``TrainState.index`` carries an
+    ``lsh.LSHIndex`` whose between-refresh maintenance is a cheap
+    ``rehash_lsh``/``update_rows`` instead of a k-means rebuild."""
+    if index is None:
+        raise ValueError(
+            "lsh_ce needs an LSH index threaded through TrainState "
+            "(init_train_state builds it; launch/train.py refreshes it "
+            "every --index-refresh-every steps)")
+    cfg = model.cfg
+    if cfg.n_codebooks:
+        raise NotImplementedError(
+            "estimator-backed CE serves single-stream heads; audio "
+            "codebook training uses the per-codebook exact losses")
+    pc = cfg.partition
+    tokens, labels = batch["tokens"], batch["labels"]
+    hidden, aux = model.forward(params, tokens, img=batch.get("img"))
+    h2, w, lab = _flatten_head(model, params, hidden, labels, constrain_fn)
+    nll, lse, est_aux = lsh_estimator_ce(index, h2, w, lab, key, l=pc.l,
+                                         cand_cap=pc.head_cap)
+    loss = nll.mean()
+    metrics = {"loss": loss, "ppl_proxy": loss, "mean_log_z": lse.mean(),
+               **est_aux,
+               **{k: v for k, v in aux.items() if "moe" in k}}
+    total = loss + aux.get("moe_balance", 0.0) + aux.get("moe_zloss", 0.0)
+    return total, metrics
+
+
 def loss_mince_ce(model, params, batch, key, train_cfg, *, index,
                   constrain_fn=None) -> Tuple[Array, Dict]:
     """Anchored-MINCE CE. The anchored estimating equation's root coincides
@@ -466,11 +550,13 @@ LOSSES: Dict[str, Callable] = {
     "sampled": loss_sampled,
     "mimps_ce": loss_mimps_ce,
     "mince_ce": loss_mince_ce,
+    "lsh_ce": loss_lsh_ce,
 }
 
-# losses whose forward/backward go through the device-resident IVF index
-# (train_loop threads TrainState.index into these)
-ESTIMATOR_LOSSES = ("mimps_ce", "mince_ce")
+# losses whose forward/backward go through a device-resident retrieval index
+# (train_loop threads TrainState.index into these; mimps_ce/mince_ce carry a
+# block-IVF index, lsh_ce a SimHash index)
+ESTIMATOR_LOSSES = ("mimps_ce", "mince_ce", "lsh_ce")
 
 
 def get_loss(name: str) -> Callable:

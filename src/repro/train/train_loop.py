@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, TrainConfig
+from ..core import lsh as _lsh
 from ..core import mips as _mips
 from ..models import Model
 from .losses import ESTIMATOR_LOSSES, get_loss
@@ -30,7 +31,9 @@ class TrainState(NamedTuple):
     params: Any
     opt: OptState
     rng: jax.Array
-    index: Any = None       # IVFIndex for estimator-backed losses, else None
+    index: Any = None       # retrieval index for estimator-backed losses
+                            # (IVFIndex for mimps_ce/mince_ce, LSHIndex for
+                            # lsh_ce), else None
                             # (checkpointed with the rest of the state so
                             # resume is bit-identical — see checkpoint.py)
 
@@ -119,10 +122,18 @@ def init_train_state(model: Model, train_cfg: TrainConfig,
         if model.cfg.n_codebooks:
             raise NotImplementedError(
                 "estimator-backed losses serve single-stream heads")
-        index = _mips.build_ivf_device(
-            jax.random.fold_in(key, 0x1DF), model.head_matrix(params),
-            block_rows=model.cfg.partition.block_rows,
-            n_clusters=_resolve_n_clusters(model.cfg))
+        pc = model.cfg.partition
+        if train_cfg.loss == "lsh_ce":
+            index = _lsh.build_lsh_device(
+                jax.random.fold_in(key, 0x1DF), model.head_matrix(params),
+                n_bits=pc.lsh_bits, n_tables=pc.lsh_tables,
+                bucket_cap=pc.lsh_bucket_cap,
+                mips_scale=pc.lsh_mips_scale, tail_beta=pc.lsh_tail_beta)
+        else:
+            index = _mips.build_ivf_device(
+                jax.random.fold_in(key, 0x1DF), model.head_matrix(params),
+                block_rows=pc.block_rows,
+                n_clusters=_resolve_n_clusters(model.cfg))
     return TrainState(params=params, opt=init_opt_state(params), rng=kr,
                       index=index)
 
@@ -139,11 +150,18 @@ def make_index_refresh(model: Model, train_cfg: TrainConfig):
     # whole TrainState would make XLA materialize fresh buffers for every
     # untouched params/opt leaf on each refresh (a full state copy + ~2x
     # transient memory at real model scale); the _replace happens on host
-    @jax.jit
-    def _refresh(index, params):
-        w = model.head_matrix(params)
-        return _mips.refresh_ivf(index, w, n_clusters=n_clusters,
-                                 kmeans_iters=iters)
+    if train_cfg.loss == "lsh_ce":
+        # LSH refresh: keep the hyperplanes, re-hash + repack — one matmul
+        # and L scatter packs, no Lloyd steps (same metrics contract)
+        @jax.jit
+        def _refresh(index, params):
+            return _lsh.rehash_lsh(index, model.head_matrix(params))
+    else:
+        @jax.jit
+        def _refresh(index, params):
+            w = model.head_matrix(params)
+            return _mips.refresh_ivf(index, w, n_clusters=n_clusters,
+                                     kmeans_iters=iters)
 
     def refresh(state: TrainState):
         new_index, metrics = _refresh(state.index, state.params)

@@ -182,16 +182,17 @@ class TestRegressionGate:
                          "tokens_per_s": 32.0 / dec_mimps_us * 1e6}}
         methods = {}
         for m, us in {"exact": 2000.0, "mimps": 1200.0, "mince": 1400.0,
-                      "fmbe": 1800.0, **est}.items():
+                      "fmbe": 1800.0, "lsh": 1600.0, **est}.items():
             methods[m] = {"us_per_step": us, "tokens_per_s": 32.0 / us * 1e6,
                           "rel_err_vs_exact":
                               {"exact": 0.0, "mimps": 0.12, "mince": 0.12,
-                               "fmbe": 0.03}[m]}
+                               "fmbe": 0.03, "lsh": 0.0002}[m]}
         (tmp_path / "BENCH_decode.json").write_text(json.dumps(
             {**dec, "speedup_xla": dec["exact"]["us_per_step"] /
              dec["mimps"]["us_per_step"]}))
         (tmp_path / "BENCH_estimators.json").write_text(json.dumps(
-            {"methods": methods}))
+            {"methods": methods,
+             "bound": {"ok_all": True, "byte_sublinear_all": True}}))
         overload = {"shed_rate": 0.4, "p95_under_overload": 20.0,
                     "degraded_token_frac": 0.5, "queue_depth_peak": 8,
                     "max_queue": 8, "recompiles_after_warmup": 0,
@@ -286,9 +287,18 @@ class TestRegressionGate:
                          "grad_scored_ratio": 0.27,
                          "refresh": {"churn": [0.2], "drift": [0.05],
                                      "count": 3, "step_retraces": 1,
-                                     "refresh_retraces": 1}}},
+                                     "refresh_retraces": 1}},
+            "lsh_ce": {"tokens_per_s": 480.0, "us_per_step": 1900.0,
+                       "final_loss": 8.2,
+                       "refresh": {"churn": [0.1], "drift": [0.02],
+                                   "count": 3, "step_retraces": 1,
+                                   "refresh_retraces": 1}}},
             "loss_ratio_vs_fused": 1.01, "grad_float_ratio": 0.27,
-            "zero_refresh_recompiles": True, **(trn or {})}
+            "zero_refresh_recompiles": True,
+            "refresh_cost": {"ivf_refresh_us": 100000.0,
+                             "lsh_update_us": 32000.0,
+                             "rows_updated": 256, "ratio": 0.32},
+            **(trn or {})}
         (tmp_path / "BENCH_train.json").write_text(json.dumps(train))
 
     def _check(self, tmp_path, monkeypatch):
@@ -518,3 +528,59 @@ class TestRegressionGate:
                 (tmp_path / "BENCH_train.json").write_text(
                     _json.dumps(rep))
             assert self._check(tmp_path, monkeypatch) >= 1, (top, nested)
+
+    def test_fails_on_broken_lsh_invariants(self, tmp_path, monkeypatch):
+        """The PR-10 gate: lsh losing to exact in wall-clock, collision-head
+        recall regressing past rel_err 0.1, an estimator breaking its
+        floats_bound/byte-sublinear ceiling, update_rows losing to a full
+        IVF refresh, or a recompiling lsh_ce refresh each fail --check on
+        their own; so do missing lsh rows."""
+        import json as _json
+        import benchmarks.run as run
+        self._write(tmp_path)
+        monkeypatch.chdir(tmp_path)
+        monkeypatch.setattr(run, "BASELINE_PATH",
+                            str(tmp_path / "baseline.json"))
+        run.update_baseline()
+        assert self._check(tmp_path, monkeypatch) == 0
+        # wall-clock: lsh must beat exact (2000us) on the same timing pass
+        self._write(tmp_path, est={"lsh": 2600.0})
+        assert self._check(tmp_path, monkeypatch) >= 1
+        # accuracy + bound sections
+        for mutate in (
+                lambda r: r["methods"]["lsh"].update(
+                    {"rel_err_vs_exact": 0.4}),
+                lambda r: r["methods"].pop("lsh"),
+                lambda r: r["bound"].update({"ok_all": False}),
+                lambda r: r["bound"].update({"byte_sublinear_all": False})):
+            self._write(tmp_path)
+            rep = _json.loads(
+                (tmp_path / "BENCH_estimators.json").read_text())
+            mutate(rep)
+            (tmp_path / "BENCH_estimators.json").write_text(
+                _json.dumps(rep))
+            assert self._check(tmp_path, monkeypatch) >= 1
+        # train side: inverted refresh-cost advantage, recompiling refresh,
+        # missing sections
+        for trn in ({"refresh_cost": {"ivf_refresh_us": 30000.0,
+                                      "lsh_update_us": 32000.0,
+                                      "rows_updated": 256, "ratio": 1.07}},
+                    {"refresh_cost": None}):
+            self._write(tmp_path, trn=trn)
+            if trn["refresh_cost"] is None:
+                rep = _json.loads(
+                    (tmp_path / "BENCH_train.json").read_text())
+                del rep["refresh_cost"]
+                (tmp_path / "BENCH_train.json").write_text(
+                    _json.dumps(rep))
+            assert self._check(tmp_path, monkeypatch) >= 1, trn
+        self._write(tmp_path)
+        rep = _json.loads((tmp_path / "BENCH_train.json").read_text())
+        rep["methods"]["lsh_ce"]["refresh"]["refresh_retraces"] = 3
+        (tmp_path / "BENCH_train.json").write_text(_json.dumps(rep))
+        assert self._check(tmp_path, monkeypatch) >= 1
+        self._write(tmp_path)
+        rep = _json.loads((tmp_path / "BENCH_train.json").read_text())
+        del rep["methods"]["lsh_ce"]
+        (tmp_path / "BENCH_train.json").write_text(_json.dumps(rep))
+        assert self._check(tmp_path, monkeypatch) >= 1
